@@ -1,0 +1,44 @@
+"""Paper Figure 14: parallel scaling of hash generation + search.
+
+On this 1-core container thread-scaling cannot be measured directly; the
+paper's observation is that both stages are embarrassingly parallel across
+fingerprint ranges. We verify the *structure*: N independent shards cost
+~N× one shard (no cross-shard dependency), so per-shard wall time is flat —
+the quantity that scales linearly with workers on a real machine. The
+distributed execution of exactly this structure over mesh shards is
+exercised in tests/test_distributed.py and the dry-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (bench_lsh_config, csv_line,
+                               station_fingerprints, timed)
+from repro.core import lsh as L
+
+
+def main():
+    ds, fcfg, bits, packed = station_fingerprints(station=1)
+    n = (bits.shape[0] // 8) * 8
+    bits = bits[:n]
+    lcfg = bench_lsh_config(fcfg)
+    mp = L.hash_mappings(fcfg.fp_dim, lcfg)
+    rows = []
+    for shards in (1, 2, 4, 8):
+        size = n // shards
+
+        def hash_all():
+            return [L.signatures(bits[i * size:(i + 1) * size], mp, lcfg)
+                    for i in range(shards)]
+
+        t, sigs = timed(hash_all, repeats=2)
+        rows.append((shards, t))
+        total_overhead = t / rows[0][1]
+        csv_line(f"scaling.hashgen.shards{shards}", t * 1e6,
+                 f"total_work_ratio={total_overhead:.2f} "
+                 f"(1.0 = perfectly parallelizable)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

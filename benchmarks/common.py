@@ -1,0 +1,70 @@
+"""Shared benchmark substrate: CPU-scale synthetic dataset + timing."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AlignConfig, DetectConfig, FingerprintConfig,
+                        LSHConfig, SynthConfig, make_dataset)
+from repro.core import fingerprint as F
+from repro.core import lsh as L
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Median wall seconds over repeats (jit warm-up excluded)."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+@functools.lru_cache(maxsize=4)
+def bench_dataset(duration_s: float = 600.0, with_noise: bool = True,
+                  with_hum: bool = False, seed: int = 3):
+    return make_dataset(SynthConfig(
+        duration_s=duration_s, n_stations=3, n_sources=3,
+        events_per_source=4, event_snr=3.0,
+        repeating_noise_stations=(0,) if with_noise else (),
+        repeating_noise_rate_hz=0.25,
+        hum_stations=(1,) if with_hum else (), seed=seed))
+
+
+def bench_fp_config(**over) -> FingerprintConfig:
+    base = dict(img_time=32, img_hop=4, top_k=200, mad_sample_rate=1.0)
+    base.update(over)
+    return FingerprintConfig(**base)
+
+
+def bench_lsh_config(fcfg: FingerprintConfig, **over) -> LSHConfig:
+    base = dict(n_tables=100, n_funcs=4, n_matches=2, bucket_cap=8,
+                min_dt=fcfg.overlap_fingerprints, occurrence_frac=0.0)
+    base.update(over)
+    return LSHConfig(**base)
+
+
+@functools.lru_cache(maxsize=8)
+def station_fingerprints(station: int = 1, duration_s: float = 600.0,
+                         with_noise: bool = True, img_time: int = 32,
+                         band: tuple = (3.0, 20.0)):
+    """Cached fingerprints for one station of the bench dataset."""
+    ds = bench_dataset(duration_s, with_noise)
+    fcfg = bench_fp_config(img_time=img_time, band_lo_hz=band[0],
+                           band_hi_hz=band[1])
+    bits, packed = F.fingerprints_from_waveform(
+        jnp.asarray(ds.waveforms[station]), fcfg)
+    return ds, fcfg, bits, packed
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line

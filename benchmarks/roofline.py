@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json and prints, per (arch × shape × mesh): the
+three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio, and
+bytes/device — the §Roofline contract.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_cells(out_dir: str = "artifacts/dryrun", mesh: str | None = None,
+               tag: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        try:
+            r = json.load(open(p))
+        except Exception:
+            continue
+        if r.get("tag", "") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") != "ok":
+        return (f"{r['arch']:22s} {r['shape']:13s} {r['mesh']:6s} "
+                f"FAILED: {r.get('error', '')[:60]}")
+    rf = r["roofline"]
+    mem = r.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("output_size_in_bytes", 0)
+           - mem.get("alias_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0))
+    return (f"{r['arch']:22s} {r['shape']:13s} {r['mesh']:6s} "
+            f"{rf['compute_s']:9.4f} {rf['memory_s']:9.4f} "
+            f"{rf['collective_s']:9.4f} {rf['dominant'][:-2]:>10s} "
+            f"{rf['useful_flops_ratio']:7.3f} "
+            f"{rf['roofline_fraction']:7.3f} {hbm/2**30:8.2f}")
+
+
+def main(out_dir: str = "artifacts/dryrun"):
+    cells = load_cells(out_dir)
+    hdr = (f"{'arch':22s} {'shape':13s} {'mesh':6s} "
+           f"{'compute_s':>9s} {'memory_s':>9s} {'collect_s':>9s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roof_fr':>7s} "
+           f"{'HBM_GiB':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in cells:
+        print(fmt_row(r))
+    ok = sum(r.get("status") == "ok" for r in cells)
+    print(f"\n{ok}/{len(cells)} cells ok")
+    return cells
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

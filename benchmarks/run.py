@@ -1,0 +1,52 @@
+"""Benchmark runner: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.csv_line).
+Roofline reporting (from dry-run artifacts) appended when artifacts exist.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (bench_alternatives, bench_bandpass,
+                            bench_factor_analysis, bench_lsh_params,
+                            bench_mad_sampling, bench_occurrence_filter,
+                            bench_partitions, bench_scaling)
+    suites = [
+        ("factor_analysis(Fig10/Tab5)", bench_factor_analysis.main),
+        ("occurrence_filter(Tab1)", bench_occurrence_filter.main),
+        ("bandpass(Fig11)", bench_bandpass.main),
+        ("lsh_params(Fig12/Fig6)", bench_lsh_params.main),
+        ("partitions(Fig13)", bench_partitions.main),
+        ("scaling(Fig14)", bench_scaling.main),
+        ("mad_sampling(Tab6)", bench_mad_sampling.main),
+        ("alternatives(Tab2)", bench_alternatives.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}")
+    if os.path.isdir("artifacts/dryrun"):
+        print("# === roofline (from dry-run artifacts) ===")
+        try:
+            from benchmarks import roofline
+            roofline.main("artifacts/dryrun")
+        except Exception:
+            print(f"# roofline FAILED:\n{traceback.format_exc()[-800:]}")
+    print(f"# total bench time {time.time()-t0:.0f}s, "
+          f"{failures} suite failures")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Check Jaccard similarity between fingerprints of reoccurring events."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import FingerprintConfig, SynthConfig, make_dataset
+from repro.core.fingerprint import fingerprints_from_waveform
+from repro.kernels import ref
+
+scfg = SynthConfig(duration_s=600.0, n_stations=3, n_sources=3,
+                   events_per_source=4, repeating_noise_stations=(0,),
+                   seed=3, event_snr=2.5)
+ds = make_dataset(scfg)
+
+for img_time, top_k, snr_scale in ((64, 200, 1.0), (32, 200, 1.0), (32, 400, 1.0)):
+    fcfg = FingerprintConfig(img_time=img_time, img_hop=4, top_k=top_k,
+                             mad_sample_rate=1.0)
+    st = 1
+    bits, packed = fingerprints_from_waveform(jnp.asarray(ds.waveforms[st]), fcfg)
+    bits = np.asarray(bits)
+    lag_s = fcfg.lag_samples / fcfg.fs
+    win_s = fcfg.window_samples / fcfg.fs
+
+    # fingerprint index whose window starts just before arrival
+    def fp_idx(t_arr):
+        return int(max(0, (t_arr - 1.0) / lag_s))
+
+    sims = []
+    for s in range(scfg.n_sources):
+        evs = [i for i in range(len(ds.event_times)) if ds.event_sources[i] == s]
+        for a in range(len(evs)):
+            for b in range(a + 1, len(evs)):
+                ia = fp_idx(ds.arrival_time(evs[a], st))
+                ib = fp_idx(ds.arrival_time(evs[b], st))
+                # best over small alignment jitter
+                best = 0.0
+                for da in range(-2, 3):
+                    for db in range(-2, 3):
+                        va = bits[np.clip(ia + da, 0, bits.shape[0] - 1)]
+                        vb = bits[np.clip(ib + db, 0, bits.shape[0] - 1)]
+                        inter = np.logical_and(va, vb).sum()
+                        union = np.logical_or(va, vb).sum()
+                        best = max(best, inter / max(union, 1))
+                sims.append(best)
+    # background pair similarity
+    bg = []
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        i, j = rng.integers(0, bits.shape[0], 2)
+        if abs(int(i) - int(j)) < 16:
+            continue
+        inter = np.logical_and(bits[i], bits[j]).sum()
+        union = np.logical_or(bits[i], bits[j]).sum()
+        bg.append(inter / max(union, 1))
+    print(f"img_time={img_time} top_k={top_k}: event-pair jaccard "
+          f"p50={np.median(sims):.3f} p90={np.quantile(sims,0.9):.3f} "
+          f"min={min(sims):.3f} | background p50={np.median(bg):.3f} "
+          f"p99={np.quantile(bg,0.99):.3f}")

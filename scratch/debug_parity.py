@@ -1,0 +1,39 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, forward, init_cache, init_params
+from repro.models import layers as L
+
+cfg = ModelConfig(name="d", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                  d_ff=64, vocab_size=64, attn_q_block=8, attn_kv_block=8,
+                  loss_seq_chunk=8, param_dtype="float32",
+                  compute_dtype="float32")
+B, S = 1, 16
+rng = np.random.default_rng(0)
+params = init_params(jax.random.PRNGKey(0), cfg)
+tokens = jnp.asarray(rng.integers(0, 64, (B, S)), jnp.int32)
+
+hidden, _ = forward(params, {"tokens": tokens}, cfg)
+
+cache = init_cache(cfg, B, S)
+outs = []
+for t in range(S):
+    lg, cache = decode_step(params, cache, tokens[:, t:t+1], cfg)
+    outs.append(lg)
+
+w = params["lm_head"].astype(jnp.float32)
+fwd_logits = jnp.einsum("bsd,dv->bsv", hidden.astype(jnp.float32), w)
+dec_logits = jnp.stack(outs, axis=1)
+err = jnp.abs(dec_logits - fwd_logits).max(axis=(0, 2))
+print("per-position err:", np.asarray(err))
+
+# isolate attention: compare blocked_attention vs decode_attention directly
+q = jnp.asarray(rng.standard_normal((B, S, 2, 16)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((B, S, 1, 16)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((B, S, 1, 16)), jnp.float32)
+blocked = L.blocked_attention(q, k, v, cfg)   # (B, S, Hq, hd)
+for t in [0, 5, 15]:
+    o = L.decode_attention(q[:, t:t+1], k, v, jnp.array([t]), cfg)
+    e = float(jnp.abs(o[:, 0] - blocked[:, t]).max())
+    print(f"attn parity t={t}: {e:.2e}")

@@ -1,0 +1,47 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_params
+from repro.models import layers as L
+from repro.models.decoder import _embed_inputs
+
+cfg = ModelConfig(name="d", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                  d_ff=64, vocab_size=64, attn_q_block=8, attn_kv_block=8,
+                  param_dtype="float32", compute_dtype="float32")
+B, S = 1, 16
+rng = np.random.default_rng(0)
+params = init_params(jax.random.PRNGKey(0), cfg)
+tokens = jnp.asarray(rng.integers(0, 64, (B, S)), jnp.int32)
+
+lp = jax.tree.map(lambda a: a[0], params["layers"])  # unstack layer 0
+
+# forward path manual
+x = _embed_inputs(params, {"tokens": tokens}, cfg)
+pos = jnp.arange(S)
+x_f = L.attention_block(lp["attn"], x, cfg, pos)
+x_f = L.mlp_block(lp["mlp"], x_f, cfg)
+
+# decode path manual, position 0
+x0 = x[:, :1]
+cache = {"k": jnp.zeros((B, S, 1, 16), jnp.bfloat16),
+         "v": jnp.zeros((B, S, 1, 16), jnp.bfloat16)}
+x_d, _ = L.attention_block_decode(lp["attn"], x0, cache,
+                                  jnp.zeros((B,), jnp.int32), cfg)
+x_d = L.mlp_block(lp["mlp"], x_d, cfg)
+print("post-block err t=0:", float(jnp.abs(x_d[:, 0] - x_f[:, 0]).max()))
+
+# attention block only
+a_f = L.attention_block(lp["attn"], x, cfg, pos)
+a_d, _ = L.attention_block_decode(lp["attn"], x0, cache,
+                                  jnp.zeros((B,), jnp.int32), cfg)
+print("post-attn err t=0:", float(jnp.abs(a_d[:, 0] - a_f[:, 0]).max()))
+
+# qkv parity
+h = L.rms_norm(x, lp["attn"]["ln"], cfg.rms_eps)
+q1, k1, v1 = L.qkv_project(lp["attn"], h, cfg, pos)
+h0 = L.rms_norm(x0, lp["attn"]["ln"], cfg.rms_eps)
+q2, k2, v2 = L.qkv_project(lp["attn"], h0, cfg,
+                           jnp.zeros((B,), jnp.int32)[:, None])
+print("q err:", float(jnp.abs(q1[:, :1] - q2).max()),
+      "k err:", float(jnp.abs(k1[:, :1] - k2).max()))

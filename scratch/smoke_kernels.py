@@ -1,0 +1,64 @@
+"""Quick interactive validation of all kernels vs oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# minmax_hash
+fp = rng.random((37, 300)) < 0.1
+mp = rng.integers(0, 2**31 - 1, size=(300, 130), dtype=np.int32)
+mins_k, maxs_k = ops.minmax_hash(jnp.asarray(fp), jnp.asarray(mp))
+mins_r, maxs_r = ref.minmax_hash(jnp.asarray(fp), jnp.asarray(mp))
+np.testing.assert_array_equal(np.asarray(mins_k), np.asarray(mins_r))
+np.testing.assert_array_equal(np.asarray(maxs_k), np.asarray(maxs_r))
+print("minmax_hash OK")
+
+# haar2d
+imgs = rng.standard_normal((9, 32, 64)).astype(np.float32)
+out_k = ops.haar2d(jnp.asarray(imgs))
+out_r = ref.haar2d(jnp.asarray(imgs))
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-4)
+print("haar2d OK")
+
+# stft_mag
+frames = rng.standard_normal((50, 200)).astype(np.float32)
+win = np.hanning(200).astype(np.float32)
+dr, di = ref.dft_matrices(200, 101)
+out_k = ops.stft_mag(jnp.asarray(frames), jnp.asarray(win), jnp.asarray(dr),
+                     jnp.asarray(di))
+out_r = ref.stft_mag(jnp.asarray(frames), jnp.asarray(win), jnp.asarray(dr),
+                     jnp.asarray(di))
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=2e-4, atol=1e-3)
+print("stft_mag OK")
+
+# jaccard
+a = rng.integers(0, 2**32, size=(77, 8), dtype=np.uint32)
+b = rng.integers(0, 2**32, size=(77, 8), dtype=np.uint32)
+out_k = ops.jaccard_popcount(jnp.asarray(a), jnp.asarray(b))
+out_r = ref.jaccard_popcount(jnp.asarray(a), jnp.asarray(b))
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+print("jaccard OK")
+
+# flash attention
+q = rng.standard_normal((2, 4, 128, 64)).astype(np.float32)
+k = rng.standard_normal((2, 2, 128, 64)).astype(np.float32)
+v = rng.standard_normal((2, 2, 128, 64)).astype(np.float32)
+out_k = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, bq=64, bk=64)
+out_r = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True)
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+print("flash_attention causal OK")
+
+# decode shape: sq=8 with cache sk=128
+q2 = rng.standard_normal((1, 4, 8, 64)).astype(np.float32)
+out_k = ops.flash_attention(jnp.asarray(q2), jnp.asarray(k[:1]),
+                            jnp.asarray(v[:1]), causal=True, bq=8, bk=64)
+out_r = ref.flash_attention(jnp.asarray(q2), jnp.asarray(k[:1]),
+                            jnp.asarray(v[:1]), causal=True)
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+print("flash_attention decode OK")
+print("ALL KERNELS OK")

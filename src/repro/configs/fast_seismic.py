@@ -1,0 +1,84 @@
+"""fast_seismic — the paper's own workload as a dry-runnable config.
+
+FAST detection over continuous seismic data: fingerprint → Min-Max LSH →
+occurrence filter → diagonal clustering, per waveform chunk, sharded over
+every mesh axis (the pipeline is embarrassingly parallel across chunks —
+the paper's §6.4 partition/parallelize structure, DESIGN.md §3.7).
+
+Paper-faithful knobs: 100 Hz input, 8192-dim fingerprints (32×128 spectral
+images, 2-bit sign encoding), t=100 tables / k=8 funcs / m=2 matches (the
+optimized §6.3 setting), 1% occurrence filter, 3–20 Hz band.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AlignConfig, DetectConfig, FingerprintConfig, LSHConfig
+
+ARCH_ID = "fast_seismic"
+
+
+def config() -> DetectConfig:
+    fp = FingerprintConfig(img_freq=32, img_time=128, img_hop=8, top_k=400,
+                           mad_sample_rate=0.1)
+    return DetectConfig(
+        fingerprint=fp,
+        lsh=LSHConfig(n_tables=100, n_funcs=8, n_matches=2, bucket_cap=4,
+                      min_dt=fp.overlap_fingerprints, occurrence_frac=0.01),
+        align=AlignConfig(),
+    )
+
+
+def smoke_config() -> DetectConfig:
+    fp = FingerprintConfig(img_freq=16, img_time=32, img_hop=8, top_k=64,
+                           mad_sample_rate=1.0)
+    return DetectConfig(
+        fingerprint=fp,
+        lsh=LSHConfig(n_tables=20, n_funcs=4, n_matches=2, bucket_cap=4,
+                      min_dt=fp.overlap_fingerprints, occurrence_frac=0.05),
+        align=AlignConfig(min_cluster_size=1, min_cluster_sim=4),
+    )
+
+
+# Dry-run shapes: (n_chunks, samples_per_chunk). ``station_year`` ≈ one
+# station-year of 100 Hz data (3.15e9 samples) in 512 shardable chunks.
+SHAPES = {
+    "station_year": (512, 6_150_000),
+    "station_month": (512, 512_000),
+}
+
+
+def model_flops(shape_name: str) -> float:
+    """Algorithmic FLOPs of the fingerprint+hash stages (MFU numerator).
+
+    STFT matmuls + Haar matmuls + Min-Max hash compares; the sort-based
+    search is comparison-bound and excluded (consistent with the paper's
+    treatment of search as lookup-bound, §6.3).
+    """
+    n_chunks, chunk = SHAPES[shape_name]
+    cfg = config()
+    fp = cfg.fingerprint
+    nf_frames = (chunk - fp.stft_len) // fp.stft_hop + 1
+    n_fp = (nf_frames - fp.img_time) // fp.img_hop + 1
+    lo, hi = fp.band_bins
+    k_band = hi - lo
+    stft = nf_frames * 2 * (2 * fp.stft_len * k_band)
+    haar = n_fp * 2 * (fp.img_freq ** 2 * fp.img_time
+                       + fp.img_time ** 2 * fp.img_freq)
+    lcfg = cfg.lsh
+    minmax = n_fp * fp.fp_dim * lcfg.n_hash_fns * 2
+    return float(n_chunks) * (stft + haar + minmax)
+
+
+def input_specs(shape_name: str) -> dict:
+    n_chunks, chunk = SHAPES[shape_name]
+    cfg = config()
+    n_coeff = cfg.fingerprint.n_coeff
+    return {
+        "waveforms": jax.ShapeDtypeStruct((n_chunks, chunk), jnp.float32),
+        "med": jax.ShapeDtypeStruct((n_coeff,), jnp.float32),
+        "mad": jax.ShapeDtypeStruct((n_coeff,), jnp.float32),
+    }

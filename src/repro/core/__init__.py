@@ -1,0 +1,6 @@
+"""The paper's contribution: FAST earthquake-detection pipeline in JAX."""
+from repro.core.align import AlignConfig, Events  # noqa: F401
+from repro.core.detect import DetectConfig, detect_events, detect_step  # noqa: F401
+from repro.core.fingerprint import FingerprintConfig  # noqa: F401
+from repro.core.lsh import LSHConfig, Pairs  # noqa: F401
+from repro.core.synth import SynthConfig, make_dataset  # noqa: F401

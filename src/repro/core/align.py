@@ -1,0 +1,262 @@
+"""Spatiotemporal alignment (paper §7): triplets → earthquake detections.
+
+Channel level: sort-merge-reduce of per-channel (dt, idx1, sim) triplets.
+Station level: gap-tolerant clustering along similarity-matrix diagonals,
+with a single merge pass across adjacent diagonals.
+Network level: association across stations using the physical invariance of
+inter-event time (Figure 9): groups sharing dt (±tol) and onset (±tol) at
+≥ ``min_stations`` distinct stations become detections.
+
+On-device the paper's out-of-core sort (§7.2) becomes ``lax.sort`` + segment
+reductions (the pod's aggregate HBM replaces single-node disk; DESIGN.md
+§3.6); ``align_streamed`` keeps a host-side external-merge path for outputs
+larger than memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import os
+import tempfile
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import INVALID, Pairs
+from repro.utils import segment_ids_from_starts, segment_starts
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignConfig:
+    channel_threshold: int = 4     # combined-sim threshold after merge
+    gap: int = 10                  # max idx1 gap within a diagonal cluster
+    dt_merge_tol: int = 2          # adjacent-diagonal merge distance
+    min_cluster_size: int = 2      # prune small clusters
+    min_cluster_sim: int = 6
+    dt_tol: int = 2                # network: inter-event-time tolerance
+    onset_tol: int = 30            # network: arrival-window tolerance
+    min_stations: int = 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Events:
+    """Per-station candidate events (masked). onset/dt in fingerprint lags."""
+
+    dt: jax.Array
+    onset: jax.Array
+    extent: jax.Array     # idx_max - idx_min of the cluster
+    size: jax.Array       # similar-pair count in the cluster
+    score: jax.Array      # summed similarity
+    valid: jax.Array
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+
+# ---------------------------------------------------------------------------
+# channel level
+# ---------------------------------------------------------------------------
+
+
+def _sort_triplets(dt, idx1, sim, valid):
+    k1 = jnp.where(valid, dt, INVALID)
+    k2 = jnp.where(valid, idx1, INVALID)
+    return jax.lax.sort((k1, k2, sim, valid.astype(jnp.int32)), num_keys=2)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold",))
+def merge_channels(triplets: Sequence[tuple], threshold: int) -> Pairs:
+    """Sum similarity of identical (dt, idx1) across channels; threshold.
+
+    ``triplets``: sequence of (dt, idx1, sim, valid) arrays per channel.
+    Implements the paper's sort → merge → reduce with the combined-matrix
+    threshold (§7.1 channel level).
+    """
+    dt = jnp.concatenate([t[0] for t in triplets])
+    idx1 = jnp.concatenate([t[1] for t in triplets])
+    sim = jnp.concatenate([t[2] for t in triplets])
+    valid = jnp.concatenate([t[3].astype(bool) for t in triplets])
+    dt_s, idx_s, sim_s, val_s = _sort_triplets(dt, idx1, sim, valid)
+    p = dt_s.shape[0]
+    starts = segment_starts(dt_s) | segment_starts(idx_s)
+    seg = segment_ids_from_starts(starts)
+    tot = jax.ops.segment_sum(jnp.where(val_s > 0, sim_s, 0), seg,
+                              num_segments=p)
+    keep = starts & (val_s > 0) & (tot[seg] >= threshold)
+    idx2 = jnp.where(keep, idx_s + dt_s, INVALID)
+    return Pairs(idx1=jnp.where(keep, idx_s, INVALID), idx2=idx2,
+                 sim=jnp.where(keep, tot[seg], 0), valid=keep)
+
+
+# ---------------------------------------------------------------------------
+# station level
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def cluster_station(pairs: Pairs, cfg: AlignConfig) -> Events:
+    """Cluster triplets along diagonals into candidate events (§7.1/7.2).
+
+    Stage 1: sort by (dt, idx1); a new cluster starts on a dt change or an
+    idx1 gap > ``gap`` (pure local boundary ⇒ no sequential scan; the
+    paper's partition-point search degenerates to these boundaries).
+    Stage 2: one merge pass over clusters sorted by (idx_min, dt), joining
+    clusters within ``dt_merge_tol`` diagonals whose idx ranges are within
+    ``gap`` (single-pass approximation of the paper's iterative merge).
+    """
+    dt, idx1 = pairs.dt, pairs.idx1
+    sim, valid = pairs.sim, pairs.valid
+    dt_s, idx_s, sim_s, val_s = _sort_triplets(dt, idx1, sim, valid)
+    p = dt_s.shape[0]
+
+    # --- stage 1: per-diagonal gap clustering
+    prev_dt = jnp.concatenate([jnp.array([INVALID]), dt_s[:-1]])
+    prev_ix = jnp.concatenate([jnp.array([INVALID]), idx_s[:-1]])
+    new = ((dt_s != prev_dt)
+           | ((idx_s - prev_ix) > cfg.gap)
+           | (val_s == 0))
+    cid = segment_ids_from_starts(new)
+    w = (val_s > 0).astype(jnp.int32)
+    c_count = jax.ops.segment_sum(w, cid, num_segments=p)
+    c_score = jax.ops.segment_sum(jnp.where(val_s > 0, sim_s, 0), cid,
+                                  num_segments=p)
+    c_dt = jax.ops.segment_min(jnp.where(val_s > 0, dt_s, INVALID), cid,
+                               num_segments=p)
+    c_imin = jax.ops.segment_min(jnp.where(val_s > 0, idx_s, INVALID), cid,
+                                 num_segments=p)
+    c_imax = jax.ops.segment_max(jnp.where(val_s > 0, idx_s, -1), cid,
+                                 num_segments=p)
+    c_valid = c_count > 0
+
+    # --- stage 2: adjacent-diagonal merge (sort clusters by idx_min, dt)
+    k1 = jnp.where(c_valid, c_imin, INVALID)
+    k2 = jnp.where(c_valid, c_dt, INVALID)
+    s_imin, s_dt, s_imax, s_count, s_score, s_val = jax.lax.sort(
+        (k1, k2, c_imax, c_count, c_score, c_valid.astype(jnp.int32)),
+        num_keys=2)
+    pdt = jnp.concatenate([jnp.array([INVALID]), s_dt[:-1]])
+    pimax = jnp.concatenate([jnp.array([-INVALID]), s_imax[:-1]])
+    sep = ((jnp.abs(s_dt - pdt) > cfg.dt_merge_tol)
+           | (s_imin > pimax + cfg.gap)
+           | (s_val == 0))
+    gid = segment_ids_from_starts(sep)
+    g_count = jax.ops.segment_sum(jnp.where(s_val > 0, s_count, 0), gid,
+                                  num_segments=p)
+    g_score = jax.ops.segment_sum(jnp.where(s_val > 0, s_score, 0), gid,
+                                  num_segments=p)
+    g_dt = jax.ops.segment_min(jnp.where(s_val > 0, s_dt, INVALID), gid,
+                               num_segments=p)
+    g_imin = jax.ops.segment_min(jnp.where(s_val > 0, s_imin, INVALID), gid,
+                                 num_segments=p)
+    g_imax = jax.ops.segment_max(jnp.where(s_val > 0, s_imax, -1), gid,
+                                 num_segments=p)
+    rep = sep & (s_val > 0)
+    keep = (rep & (g_count[gid] >= cfg.min_cluster_size)
+            & (g_score[gid] >= cfg.min_cluster_sim))
+    return Events(dt=jnp.where(keep, g_dt[gid], INVALID),
+                  onset=jnp.where(keep, g_imin[gid], INVALID),
+                  extent=jnp.where(keep, g_imax[gid] - g_imin[gid], 0),
+                  size=jnp.where(keep, g_count[gid], 0),
+                  score=jnp.where(keep, g_score[gid], 0),
+                  valid=keep)
+
+
+# ---------------------------------------------------------------------------
+# network level
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_stations"))
+def associate_network(events: Sequence[Events], cfg: AlignConfig,
+                      n_stations: int) -> dict:
+    """Group per-station events by (dt, onset); require ≥ min_stations.
+
+    Exploits the inter-event-time invariance (Figure 9): the same pair of
+    reoccurring earthquakes shows the same dt at every station, with close
+    onsets. Station multiplicity is computed with a one-hot segment-max
+    (≤ 32 stations per bitset word analog).
+    """
+    assert n_stations <= 32
+    dt = jnp.concatenate([e.dt for e in events])
+    onset = jnp.concatenate([e.onset for e in events])
+    score = jnp.concatenate([e.score for e in events])
+    valid = jnp.concatenate([e.valid for e in events])
+    sid = jnp.concatenate([
+        jnp.full(e.dt.shape, i, jnp.int32) for i, e in enumerate(events)])
+    p = dt.shape[0]
+    k1 = jnp.where(valid, dt, INVALID)
+    k2 = jnp.where(valid, onset, INVALID)
+    dt_s, on_s, sc_s, sid_s, val_s = jax.lax.sort(
+        (k1, k2, score, sid, valid.astype(jnp.int32)), num_keys=2)
+    pdt = jnp.concatenate([jnp.array([INVALID]), dt_s[:-1]])
+    pon = jnp.concatenate([jnp.array([INVALID]), on_s[:-1]])
+    new = ((jnp.abs(dt_s - pdt) > cfg.dt_tol)
+           | (jnp.abs(on_s - pon) > cfg.onset_tol)
+           | (val_s == 0))
+    gid = segment_ids_from_starts(new)
+    onehot = (jax.nn.one_hot(sid_s, n_stations, dtype=jnp.int32)
+              * val_s[:, None])
+    st_present = jax.ops.segment_max(onehot, gid, num_segments=p)
+    n_st = st_present.sum(axis=1)
+    g_score = jax.ops.segment_sum(jnp.where(val_s > 0, sc_s, 0), gid,
+                                  num_segments=p)
+    g_dt = jax.ops.segment_min(jnp.where(val_s > 0, dt_s, INVALID), gid,
+                               num_segments=p)
+    g_onset = jax.ops.segment_min(jnp.where(val_s > 0, on_s, INVALID), gid,
+                                  num_segments=p)
+    rep = new & (val_s > 0)
+    keep = rep & (n_st[gid] >= cfg.min_stations)
+    return {
+        "dt": jnp.where(keep, g_dt[gid], INVALID),
+        "onset": jnp.where(keep, g_onset[gid], INVALID),
+        "n_stations": jnp.where(keep, n_st[gid], 0),
+        "score": jnp.where(keep, g_score[gid], 0),
+        "valid": keep,
+    }
+
+
+# ---------------------------------------------------------------------------
+# out-of-core channel merge (paper §7.2, host-side)
+# ---------------------------------------------------------------------------
+
+
+def align_streamed(channel_chunks: Sequence[Iterable[np.ndarray]],
+                   threshold: int, tmpdir: str | None = None) -> np.ndarray:
+    """External sort-merge-reduce of triplet chunks larger than memory.
+
+    ``channel_chunks``: per channel, an iterable of (n, 3) int arrays with
+    columns (dt, idx1, sim). Each chunk is sorted and spilled to disk; a
+    heap merge streams them back, reducing consecutive equal (dt, idx1)
+    rows and applying the combined threshold. Returns (m, 3) array.
+    """
+    tmp = tmpdir or tempfile.mkdtemp(prefix="fast_align_")
+    spill_files = []
+    for ci, chunks in enumerate(channel_chunks):
+        for gi, arr in enumerate(chunks):
+            arr = np.asarray(arr, np.int64)
+            order = np.lexsort((arr[:, 1], arr[:, 0]))
+            path = os.path.join(tmp, f"c{ci}_g{gi}.npy")
+            np.save(path, arr[order])
+            spill_files.append(path)
+
+    def stream(path):
+        arr = np.load(path, mmap_mode="r")
+        for row in arr:
+            yield (int(row[0]), int(row[1]), int(row[2]))
+
+    out = []
+    cur_key, cur_sim = None, 0
+    for dt, idx1, sim in heapq.merge(*[stream(p) for p in spill_files]):
+        if (dt, idx1) == cur_key:
+            cur_sim += sim
+        else:
+            if cur_key is not None and cur_sim >= threshold:
+                out.append((cur_key[0], cur_key[1], cur_sim))
+            cur_key, cur_sim = (dt, idx1), sim
+    if cur_key is not None and cur_sim >= threshold:
+        out.append((cur_key[0], cur_key[1], cur_sim))
+    return np.asarray(out, np.int64).reshape(-1, 3)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the FAST pipeline + LM serving hot spots.
+
+Layout (per the repo contract): ``<name>.py`` holds the pl.pallas_call +
+BlockSpec kernel, ``ops.py`` the jit'd padding/dispatch wrappers, ``ref.py``
+the pure-jnp oracles used by the tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blocked causal flash attention with GQA.
+
+Online-softmax attention with (bq × bk) score tiles resident in VMEM;
+KV blocks stream over the innermost (sequential) grid axis. GQA is handled
+in the BlockSpec index map (query head h reads kv head h // group), so KV
+is never materialized per-q-head in HBM. Fully-masked KV tiles are skipped
+(`pl.when`), which matters for long causal sequences: ~2× fewer tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale: float, causal: bool, sq: int, sk: int, bq: int,
+            bk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal block skip: query rows [q0, q0+bq) attend keys <= q + offset.
+    offset = sk - sq
+    q0 = iq * bq
+    k0 = ik * bk
+    run = (not causal) or (k0 <= q0 + bq - 1 + offset)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale  # (bq, bk)
+        if causal:
+            qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+            ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(ki <= qi, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        out_ref[0, 0, :, :] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret", "sm_scale"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    grid = (b, hq, sq // bq, sk // bk)
+    kernel = functools.partial(_kernel, sm_scale=sm_scale, causal=causal,
+                               sq=sq, sk=sk, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused Mamba1 selective scan.
+
+The XLA-lowered chunked scan materializes (B, Lc, d_inner, N) decay/update
+tensors in HBM (§Roofline: the falcon-mamba memory wall). This kernel keeps
+the whole recurrence in VMEM: per (batch, d_inner-block) program, the state
+h (bd, N) lives in registers/VMEM and time is a sequential fori_loop —
+HBM traffic collapses to the linear inputs/outputs (x·dt, dt, B, C → y).
+
+Grid: (B, Di/bd). Block shapes: (1, S, bd) activations, (bd, N) A-matrix,
+(1, S, N) B/C projections.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, *,
+            seq_len: int):
+    a = a_ref[...].astype(jnp.float32)           # (bd, N)
+    bd, n = a.shape
+
+    def step(t, h):
+        xr = xdt_ref[0, t, :].astype(jnp.float32)        # (bd,)
+        dtr = dt_ref[0, t, :].astype(jnp.float32)        # (bd,)
+        br = b_ref[0, t, :].astype(jnp.float32)          # (N,)
+        cr = c_ref[0, t, :].astype(jnp.float32)          # (N,)
+        g = jnp.exp(dtr[:, None] * a)                    # (bd, N)
+        h = g * h + xr[:, None] * br[None, :]
+        y_ref[0, t, :] = (h * cr[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, step,
+                          jnp.zeros((bd, n), jnp.float32))
+    hout_ref[0, :, :] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def mamba_scan(xdt: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, *, bd: int = 128,
+               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """xdt/dt: (B, S, Di); a: (Di, N); b/c: (B, S, N).
+
+    Returns (y (B, S, Di), h_final (B, Di, N)). Di % bd == 0.
+    """
+    bsz, s, di = xdt.shape
+    n = a.shape[1]
+    assert di % bd == 0, (di, bd)
+    grid = (bsz, di // bd)
+    kernel = functools.partial(_kernel, seq_len=s)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s, bd), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, s, bd), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bd, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, bd), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, bd, n), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), xdt.dtype),
+            jax.ShapeDtypeStruct((bsz, di, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, dt, a, b, c)
+    return y, h_final

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for Min-Max hash signature generation (paper §6.2).
+
+The paper's CPU optimization is cache blocking: iterate fingerprint
+*dimensions* outermost so rows of the hash-mapping table stay resident in
+cache and are reused across the >60%-overlapping neighboring fingerprints.
+The TPU translation (DESIGN.md §3.2) is VMEM tiling: a (bn × bd) fingerprint
+tile and the matching (bd × bh) hash-mapping tile are co-resident in VMEM and
+min/max-accumulated over the D grid axis — dimensions are again the reduction
+(outer) loop, hash-mapping rows are again the reused operand.
+
+Grid: (N/bn, H/bh, D/bd) with D innermost (sequential reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BIG = np.int32(2**31 - 1)
+
+
+def _kernel(fp_ref, map_ref, min_ref, max_ref):
+    kd = pl.program_id(2)
+
+    @pl.when(kd == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, BIG)
+        max_ref[...] = jnp.zeros_like(max_ref)
+
+    fp = fp_ref[...]  # (bn, bd) int8 {0,1}
+    hm = map_ref[...]  # (bd, bh) int32
+    mask = (fp > 0)[:, :, None]  # (bn, bd, 1)
+    mvals = hm[None, :, :]  # (1, bd, bh)
+    cur_min = jnp.where(mask, mvals, BIG).min(axis=1)  # (bn, bh)
+    cur_max = jnp.where(mask, mvals, jnp.int32(0)).max(axis=1)
+    min_ref[...] = jnp.minimum(min_ref[...], cur_min)
+    max_ref[...] = jnp.maximum(max_ref[...], cur_max)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd", "bh", "interpret"))
+def minmax_hash(fp: jax.Array, mappings: jax.Array, *, bn: int = 16,
+                bd: int = 256, bh: int = 256,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """fp: (N, D) int8/bool; mappings: (D, H) int32. Returns (N,H)x2 int32.
+
+    N % bn == 0, D % bd == 0, H % bh == 0 (ops.py pads as needed).
+    """
+    n, d = fp.shape
+    d2, h = mappings.shape
+    assert d == d2, (fp.shape, mappings.shape)
+    assert n % bn == 0 and d % bd == 0 and h % bh == 0, (n, d, h, bn, bd, bh)
+    fp = fp.astype(jnp.int8)
+    grid = (n // bn, h // bh, d // bd)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, h), jnp.int32),
+        jax.ShapeDtypeStruct((n, h), jnp.int32),
+    ]
+    mins, maxs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bh), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bh), lambda i, j, k: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(fp, mappings)
+    return mins, maxs

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16×16 = 256 chips (data × model).
+Multi-pod: 2×16×16 = 512 chips with a leading ``pod`` (DCN) axis used for
+data parallelism (gradient all-reduce only crosses the slow links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for subprocess tests with forced host devices."""
+    return jax.make_mesh(shape, axes)

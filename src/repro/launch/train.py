@@ -1,0 +1,146 @@
+"""Training driver: data pipeline → jitted step → checkpoint/restart.
+
+Fault-tolerance contract (tested in tests/test_checkpoint.py):
+  * checkpoints are atomic and include the data-iterator state;
+  * ``--resume`` continues bit-exact from the latest checkpoint;
+  * ``--inject-failure-at N`` hard-kills the process mid-run (os._exit) to
+    simulate a node failure — a subsequent ``--resume`` run must finish;
+  * the step watchdog flags stragglers/hangs (policy hook logs here; a
+    real cluster controller would checkpoint-and-reschedule).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smoke --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LM_ARCHS, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, IteratorState, TokenPipeline
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainState, init_train_state, make_train_step
+from repro.train.optimizer import OptimizerConfig
+from repro.train.watchdog import StepWatchdog
+
+
+def default_smoke_model() -> ModelConfig:
+    return ModelConfig(name="smoke", n_layers=2, d_model=128, n_heads=4,
+                       n_kv_heads=2, d_ff=256, vocab_size=512,
+                       attn_q_block=64, attn_kv_block=64, loss_seq_chunk=64,
+                       param_dtype="float32", compute_dtype="float32",
+                       remat="none")
+
+
+def build_model_config(args) -> ModelConfig:
+    if args.arch == "smoke":
+        return default_smoke_model()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smoke",
+                    help=f"'smoke' or one of {LM_ARCHS}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's reduced smoke config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    ap.add_argument("--no-dedup", action="store_true")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = build_model_config(args)
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(2, args.steps
+                                                           // 10),
+                              total_steps=args.steps,
+                              accum_dtype="float32")
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      dedup=not args.no_dedup)
+
+    start_step = 0
+    extra = {}
+    state = None
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) \
+            is not None:
+        target = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(args.seed), cfg))
+        state, extra = ckpt.restore_checkpoint(args.ckpt_dir, target)
+        start_step = int(extra.get("step", 0))
+        print(f"resumed from step {start_step}")
+    if state is None:
+        state = init_train_state(jax.random.PRNGKey(args.seed), cfg)
+
+    it_state = IteratorState.from_dict(extra["iterator"]) \
+        if "iterator" in extra else None
+    pipe = TokenPipeline(dcfg, state=it_state)
+    batches = pipe.batches()
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      n_microbatches=args.microbatches),
+                      donate_argnums=(0,))
+    wd = StepWatchdog(on_straggler=lambda info: print(
+        f"[watchdog] {json.dumps(info)}"))
+
+    losses = []
+    for step in range(start_step, args.steps):
+        raw = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        wd.step_start()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        wd.step_end()
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"dedup_dropped {pipe.dedup_stats['dropped']}")
+        if args.inject_failure_at == step:
+            # die BEFORE this step's checkpoint — restart loses it
+            print(f"[failure-injection] dying at step {step}", flush=True)
+            os._exit(42)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_checkpoint(
+                args.ckpt_dir, step + 1, state,
+                extra={"step": step + 1,
+                       "iterator": pipe.state.to_dict()})
+
+    if args.ckpt_dir:
+        ckpt.save_checkpoint(args.ckpt_dir, args.steps, state,
+                             extra={"step": args.steps,
+                                    "iterator": pipe.state.to_dict()})
+    result = {"final_loss": losses[-1] if losses else None,
+              "first_loss": losses[0] if losses else None,
+              "steps_run": len(losses),
+              "dedup": pipe.dedup_stats,
+              "straggler_events": len(wd.events)}
+    print("RESULT " + json.dumps(result))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(result, f)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model stack: unified decoder over all assigned architecture families."""
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.decoder import (cache_sharding_rules, decode_step,  # noqa: F401
+                                  forward, init_cache, init_params, lm_loss,
+                                  padded_vocab, param_shapes,
+                                  param_sharding_rules, prefill)

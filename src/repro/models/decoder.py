@@ -1,0 +1,580 @@
+"""Unified decoder covering all assigned architecture families.
+
+Layers are stacked along a leading L dim and executed with ``lax.scan`` so
+HLO size (and CPU compile time for the 512-device dry-run) is independent of
+depth. Hybrid (Zamba2) stacks scan groups of Mamba2 layers with a *shared*
+attention block invoked between groups.
+
+The vocabulary is padded to a multiple of 2048 so embeddings / logits shard
+cleanly over the ``model`` axis; the CE loss is computed in sequence chunks
+so full (B, S, V) logits never materialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import dist
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.utils import round_up
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return round_up(cfg.vocab_size, VOCAB_PAD)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _norm(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _layer_param_shapes(cfg: ModelConfig) -> dict:
+    """Per-layer parameter shapes (without the leading L stack dim)."""
+    d, hd, hq, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    out: dict = {}
+    if cfg.block_kind == "attn":
+        attn = {"ln": (d,), "wq": (d, hq, hd), "wk": (d, hkv, hd),
+                "wv": (d, hkv, hd), "wo": (hq, hd, d)}
+        if cfg.qkv_bias:
+            attn.update({"bq": (hq, hd), "bk": (hkv, hd), "bv": (hkv, hd)})
+        out["attn"] = attn
+        if cfg.is_moe:
+            moe = {"ln": (d,), "router": (d, cfg.n_experts),
+                   "wg": (cfg.n_experts, d, cfg.expert_ff),
+                   "wu": (cfg.n_experts, d, cfg.expert_ff),
+                   "wd": (cfg.n_experts, cfg.expert_ff, d)}
+            if cfg.n_shared_experts:
+                sf = cfg.n_shared_experts * cfg.expert_ff
+                moe.update({"swg": (d, sf), "swu": (d, sf), "swd": (sf, d)})
+            out["moe"] = moe
+        else:
+            out["mlp"] = {"ln": (d,), "wg": (d, cfg.d_ff),
+                          "wu": (d, cfg.d_ff), "wd": (cfg.d_ff, d)}
+    elif cfg.block_kind == "mamba1":
+        di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        out["ssm"] = {"ln": (d,), "in_proj": (d, 2 * di),
+                      "conv_w": (cfg.ssm_conv, di), "conv_b": (di,),
+                      "x_proj": (di, r + 2 * n), "dt_w": (r, di),
+                      "dt_bias": (di,), "a_log": (di, n), "d_skip": (di,),
+                      "out_proj": (di, d)}
+    elif cfg.block_kind == "mamba2":
+        di, n, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        conv_dim = di + 2 * n
+        out["ssm"] = {"ln": (d,), "in_proj": (d, 2 * di + 2 * n + hh),
+                      "conv_w": (cfg.ssm_conv, conv_dim),
+                      "conv_b": (conv_dim,), "dt_bias": (hh,),
+                      "a_log": (hh,), "d_skip": (hh,), "out_ln": (di,),
+                      "out_proj": (di, d)}
+    else:
+        raise ValueError(cfg.block_kind)
+    return out
+
+
+def _shared_attn_shapes(cfg: ModelConfig) -> dict:
+    d, hd, hq, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    return {"ln": (d,), "wq": (d, hq, hd), "wk": (d, hkv, hd),
+            "wv": (d, hkv, hd), "wo": (hq, hd, d)}
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Full parameter tree as shape tuples (stacked layer dim first)."""
+    v = padded_vocab(cfg)
+    d = cfg.d_model
+    tree: dict = {
+        "embed": (v, d),
+        "final_ln": (d,),
+        "lm_head": (d, v),
+        "layers": jax.tree.map(
+            lambda shp: (cfg.n_layers, *shp), _layer_param_shapes(cfg),
+            is_leaf=lambda x: isinstance(x, tuple)),
+    }
+    if cfg.shared_attn_every:
+        tree["shared_attn"] = _shared_attn_shapes(cfg)
+        if cfg.d_ff:
+            # Zamba2's shared block is a full transformer block (attn+MLP)
+            tree["shared_mlp"] = {"ln": (d,), "wg": (d, cfg.d_ff),
+                                  "wu": (d, cfg.d_ff), "wd": (cfg.d_ff, d)}
+    if cfg.frontend == "patch":
+        tree["patch_proj"] = (d, d)
+    return tree
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+
+    def make(k, shp):
+        scale = 0.02
+        if len(shp) >= 2:
+            scale = 1.0 / math.sqrt(shp[-2] if len(shp) == 2 else shp[-2])
+        return _norm(k, shp, min(scale, 0.02), cfg.pdtype)
+
+    params = jax.tree.unflatten(treedef, [make(k, s)
+                                          for k, s in zip(keys, leaves)])
+    # SSM-specific sane initializations (dt bias, A_log) + unit norms
+    def fix(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name == "a_log":
+            vals = jnp.log(jnp.arange(1, x.shape[-1] + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(vals, x.shape).astype(x.dtype)
+        if name == "dt_bias":
+            return jnp.full(x.shape, -4.6, x.dtype)  # softplus⁻¹(0.01)
+        if name in ("ln", "out_ln", "final_ln"):
+            return jnp.ones_like(x)
+        return x
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def param_sharding_rules(cfg: ModelConfig) -> dict:
+    """PartitionSpec entries per parameter (same tree shape as params).
+
+    Mamba2 keeps its fused in_proj/conv replicated: the fused output dim
+    mixes (z | x | B | C | dt) whose boundaries don't align with shard
+    boundaries (DESIGN.md §4); Mamba1's clean 2·d_inner split stays TP.
+
+    Under the FSDP layout (dist.layout("fsdp")) every non-embedding param
+    shards its largest dim over pod×data×model and is all-gathered at use;
+    embeddings/lm_head stay vocab-sharded (the "vocab" alias survives).
+    """
+    from repro import dist as _dist
+    m2 = cfg.block_kind == "mamba2"
+    fsdp = _dist.current_layout() == "fsdp"
+
+    def spec_for(path_names: tuple[str, ...], shp: tuple[int, ...]):
+        name = path_names[-1]
+        stacked = path_names[0] == "layers"
+        lead = (None,) if stacked else ()
+        if fsdp and name not in ("embed", "lm_head"):
+            dims = shp[1:] if stacked else shp
+            if not dims:
+                return lead + (None,) * 0
+            big = max(range(len(dims)), key=lambda i: dims[i])
+            body = tuple(("pod", "data", "model") if i == big else None
+                         for i in range(len(dims)))
+            return lead + body
+        body: tuple
+        if name == "embed":
+            body = ("vocab", ("pod", "data")) if fsdp else ("vocab", None)
+        elif name == "lm_head":
+            body = ((("pod", "data")), "vocab") if fsdp else (None, "vocab")
+        elif name in ("wq", "wk", "wv"):
+            body = (None, "model", None)
+        elif name == "wo":
+            body = ("model", None, None)
+        elif name in ("bq", "bk", "bv"):
+            body = ("model", None)
+        elif name in ("wg", "wu"):
+            body = (("model", None, None) if len(shp) - len(lead) == 3
+                    else (None, "model"))
+        elif name == "wd":
+            body = (("model", None, None) if len(shp) - len(lead) == 3
+                    else ("model", None))
+        elif name in ("swg", "swu"):
+            body = (None, "model")
+        elif name == "swd":
+            body = ("model", None)
+        elif name == "in_proj":
+            body = (None, None) if m2 else (None, "model")
+        elif name == "out_proj":
+            body = ("model", None)
+        elif name == "conv_w":
+            body = (None, None) if m2 else (None, "model")
+        elif name == "conv_b":
+            body = (None,) if m2 else ("model",)
+        elif name == "x_proj":
+            body = ("model", None)
+        elif name == "dt_w":
+            body = (None, "model")
+        elif name == "a_log":
+            body = (("model", None) if len(shp) - len(lead) == 2
+                    else (None,))
+        elif name == "d_skip":
+            body = (None,) if m2 else ("model",)
+        elif name == "dt_bias":
+            body = (None,) if m2 else ("model",)
+        elif name == "out_ln":
+            body = (None,)
+        else:
+            body = tuple(None for _ in range(len(shp) - len(lead)))
+        full = lead + body
+        full = full + tuple(None for _ in range(len(shp) - len(full)))
+        return full[: len(shp)]
+
+    shapes = param_shapes(cfg)
+
+    def walk(path, node):
+        if isinstance(node, tuple):
+            return spec_for(path, node)
+        return {k: walk(path + (k,), v) for k, v in node.items()}
+
+    return walk((), shapes)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _block_body(cfg: ModelConfig, impl: str):
+    def body(carry, layer_params):
+        x, aux = carry
+        pos = jnp.arange(x.shape[1])
+        if cfg.block_kind == "attn":
+            if cfg.parallel_block and not cfg.is_moe:
+                x = L.parallel_attn_mlp_block(
+                    layer_params["attn"], layer_params["mlp"], x, cfg, pos,
+                    impl=impl)
+            else:
+                x = L.attention_block(layer_params["attn"], x, cfg, pos,
+                                      impl=impl)
+                if cfg.is_moe:
+                    x, a = L.moe_block(layer_params["moe"], x, cfg)
+                    aux = aux + a
+                else:
+                    x = L.mlp_block(layer_params["mlp"], x, cfg)
+        elif cfg.block_kind == "mamba1":
+            x = S.mamba1_block(layer_params["ssm"], x, cfg)
+        else:
+            x = S.mamba2_block(layer_params["ssm"], x, cfg)
+        return (x, aux), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif cfg.remat == "block_dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = jnp.einsum("bpd,de->bpe",
+                        batch["patch_embeds"].astype(cfg.cdtype),
+                        params["patch_proj"].astype(cfg.cdtype))
+        np_ = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, : x.shape[1] - np_]], axis=1)
+    return x
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig,
+            impl: str = "masked") -> tuple[jax.Array, jax.Array]:
+    """→ (final hidden states (B, S, D), moe aux loss scalar)."""
+    x = _embed_inputs(params, batch, cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+    body = _block_body(cfg, impl)
+
+    if cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        n_groups, tail = cfg.n_layers // k, cfg.n_layers % k
+        stacked = params["layers"]
+
+        def regroup(p, lo, hi):
+            return jax.tree.map(lambda a: a[lo:hi], p)
+
+        aux = aux0
+        for g in range(n_groups):
+            grp = regroup(stacked, g * k, (g + 1) * k)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), grp)
+            pos = jnp.arange(x.shape[1])
+            x = L.attention_block(params["shared_attn"], x, cfg, pos,
+                                  impl=impl)
+            if "shared_mlp" in params:
+                x = L.mlp_block(params["shared_mlp"], x, cfg)
+        if tail:
+            grp = regroup(stacked, n_groups * k, cfg.n_layers)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), grp)
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+
+    x = L.rms_norm(x, params["final_ln"], cfg.rms_eps)
+    return x, aux
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            impl: str = "masked") -> tuple[jax.Array, dict]:
+    """Next-token CE, computed in sequence chunks (no full logits)."""
+    hidden, aux = forward(params, batch, cfg, impl=impl)
+    b, s, d = hidden.shape
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    w_out = params["lm_head"].astype(cfg.cdtype)
+    sc = min(cfg.loss_seq_chunk, s)
+    ns = s // sc
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(carry, i):
+        # rematted: the (B, sc, V) logits are recomputed in backward
+        # instead of being stored per chunk (DESIGN.md §4 memory note)
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * sc, sc, axis=1)
+        # pin the loss layout: batch over pod×data only, vocab over model —
+        # under FSDP the hidden arrives batch-sharded over the model axis
+        # too, and without this the partitioner REPLICATES the CE matmul
+        h = dist.shard(h, ("pod", "data"), None, None)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * sc, sc, axis=1)
+        m = jax.lax.dynamic_slice_in_dim(mask, i * sc, sc, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", h, w_out,
+                            preferred_element_type=jnp.float32)
+        logits = dist.shard(logits, ("pod", "data"), None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * m
+        return (tot + nll.sum(), cnt + m.sum()), None
+
+    (totals, counts), _ = jax.lax.scan(
+        chunk_step,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(ns))
+    loss = totals / jnp.maximum(counts, 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux, "tokens": counts}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    """Decode cache pytree (bf16 KV / fp32 SSM states)."""
+    hd, hkv = cfg.hd, cfg.n_kv_heads
+    kvdt = jnp.dtype(cfg.cache_dtype)
+    cache: dict = {"pos": jnp.zeros((batch_size,), jnp.int32)}
+    ldim = cfg.n_layers
+    if cfg.block_kind == "attn":
+        cache["k"] = jnp.zeros((ldim, batch_size, max_len, hkv, hd), kvdt)
+        cache["v"] = jnp.zeros((ldim, batch_size, max_len, hkv, hd), kvdt)
+    elif cfg.block_kind == "mamba1":
+        di, n = cfg.d_inner, cfg.ssm_state
+        cache["conv"] = jnp.zeros((ldim, batch_size, cfg.ssm_conv - 1, di),
+                                  kvdt)
+        cache["ssm"] = jnp.zeros((ldim, batch_size, di, n), jnp.float32)
+    else:  # mamba2
+        di, n, hh, p = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                        cfg.ssm_head_dim)
+        conv_dim = di + 2 * n
+        cache["conv"] = jnp.zeros(
+            (ldim, batch_size, cfg.ssm_conv - 1, conv_dim), kvdt)
+        cache["ssm"] = jnp.zeros((ldim, batch_size, hh, p, n), jnp.float32)
+    if cfg.shared_attn_every:
+        groups = cfg.n_layers // cfg.shared_attn_every
+        cache["sa_k"] = jnp.zeros((groups, batch_size, max_len, hkv, hd),
+                                  kvdt)
+        cache["sa_v"] = jnp.zeros((groups, batch_size, max_len, hkv, hd),
+                                  kvdt)
+    return cache
+
+
+def cache_sharding_rules(cfg: ModelConfig) -> dict:
+    """Sequence dim of KV caches shards over model (flash-decode)."""
+    rules: dict = {"pos": (None,)}
+    if cfg.block_kind == "attn":
+        rules["k"] = (None, ("pod", "data"), "model", None, None)
+        rules["v"] = (None, ("pod", "data"), "model", None, None)
+    elif cfg.block_kind == "mamba1":
+        rules["conv"] = (None, ("pod", "data"), None, "model")
+        rules["ssm"] = (None, ("pod", "data"), "model", None)
+    else:
+        rules["conv"] = (None, ("pod", "data"), None, "model")
+        rules["ssm"] = (None, ("pod", "data"), "model", None, None)
+    if cfg.shared_attn_every:
+        rules["sa_k"] = (None, ("pod", "data"), "model", None, None)
+        rules["sa_v"] = (None, ("pod", "data"), "model", None, None)
+    return rules
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One decode step. tokens: (B, 1) int32 → (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+
+    if cfg.block_kind == "attn":
+        def body(x, inp):
+            lp, kc, vc = inp
+            if cfg.parallel_block and not cfg.is_moe:
+                x, new = L.parallel_attn_mlp_block(
+                    lp["attn"], lp["mlp"], x, cfg, None,
+                    cache={"k": kc, "v": vc}, pos=pos)
+            else:
+                x, new = L.attention_block_decode(
+                    lp["attn"], x, {"k": kc, "v": vc}, pos, cfg)
+                if cfg.is_moe:
+                    x, _ = L.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = L.mlp_block(lp["mlp"], x, cfg)
+            return x, (new["k"], new["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"],
+                                    cache["v"]))
+        new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    elif cfg.block_kind == "mamba1":
+        def body(x, inp):
+            lp, conv, ssm_st = inp
+            x, new = S.mamba1_decode(lp["ssm"], x,
+                                     {"conv": conv, "ssm": ssm_st}, cfg)
+            return x, (new["conv"], new["ssm"])
+
+        x, (convs, ssms) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        new_cache = dict(cache, conv=convs, ssm=ssms, pos=pos + 1)
+    else:  # mamba2 (+ optional shared attention)
+        def body(x, inp):
+            lp, conv, ssm_st = inp
+            x, new = S.mamba2_decode(lp["ssm"], x,
+                                     {"conv": conv, "ssm": ssm_st}, cfg)
+            return x, (new["conv"], new["ssm"])
+
+        if cfg.shared_attn_every:
+            k = cfg.shared_attn_every
+            n_groups, tail = cfg.n_layers // k, cfg.n_layers % k
+            convs_out, ssms_out, saks, savs = [], [], [], []
+            for g in range(n_groups):
+                sl = slice(g * k, (g + 1) * k)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+                x, (cv, sm) = jax.lax.scan(
+                    body, x, (grp, cache["conv"][sl], cache["ssm"][sl]))
+                convs_out.append(cv)
+                ssms_out.append(sm)
+                x, sa_new = L.attention_block_decode(
+                    params["shared_attn"], x,
+                    {"k": cache["sa_k"][g], "v": cache["sa_v"][g]}, pos, cfg)
+                saks.append(sa_new["k"])
+                savs.append(sa_new["v"])
+                if "shared_mlp" in params:
+                    x = L.mlp_block(params["shared_mlp"], x, cfg)
+            if tail:
+                sl = slice(n_groups * k, cfg.n_layers)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+                x, (cv, sm) = jax.lax.scan(
+                    body, x, (grp, cache["conv"][sl], cache["ssm"][sl]))
+                convs_out.append(cv)
+                ssms_out.append(sm)
+            new_cache = dict(
+                cache, conv=jnp.concatenate(convs_out),
+                ssm=jnp.concatenate(ssms_out),
+                sa_k=jnp.stack(saks), sa_v=jnp.stack(savs), pos=pos + 1)
+        else:
+            x, (convs, ssms) = jax.lax.scan(
+                body, x, (params["layers"], cache["conv"], cache["ssm"]))
+            new_cache = dict(cache, conv=convs, ssm=ssms, pos=pos + 1)
+
+    x = L.rms_norm(x, params["final_ln"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.cdtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig,
+            impl: str = "masked") -> tuple[jax.Array, dict]:
+    """Prefill: forward pass that also builds the decode cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_inputs(params, batch, cfg)
+    pos = jnp.arange(s)
+    cache = init_cache(cfg, b, s)
+
+    if cfg.block_kind == "attn":
+        def body(carry, lp):
+            x, = carry
+            if cfg.parallel_block and not cfg.is_moe:
+                x, (k, v) = L.parallel_attn_mlp_block(
+                    lp["attn"], lp["mlp"], x, cfg, pos, impl=impl,
+                    return_kv=True)
+            else:
+                x, (k, v) = L.attention_block(lp["attn"], x, cfg, pos,
+                                              impl=impl, return_kv=True)
+                if cfg.is_moe:
+                    x, _ = L.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = L.mlp_block(lp["mlp"], x, cfg)
+            return (x,), (k.astype(jnp.dtype(cfg.cache_dtype)),
+                          v.astype(jnp.dtype(cfg.cache_dtype)))
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x,), (ks, vs) = jax.lax.scan(body, (x,), params["layers"])
+        # (L, B, S, Hkv, hd) ← collected (L, B, S, Hkv, hd)
+        cache["k"] = dist.shard(ks, None, ("pod", "data"), "model", None,
+                                None)
+        cache["v"] = dist.shard(vs, None, ("pod", "data"), "model", None,
+                                None)
+    elif cfg.block_kind == "mamba1":
+        def body(carry, lp):
+            x, = carry
+            x, st = S.mamba1_block(lp["ssm"], x, cfg, return_state=True)
+            return (x,), (st["conv"], st["ssm"])
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x,), (convs, ssms) = jax.lax.scan(body, (x,), params["layers"])
+        cache["conv"], cache["ssm"] = convs, ssms
+    else:  # mamba2 (+ optional shared attention groups)
+        def body(carry, lp):
+            x, = carry
+            x, st = S.mamba2_block(lp["ssm"], x, cfg, return_state=True)
+            return (x,), (st["conv"], st["ssm"])
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.shared_attn_every:
+            k_ev = cfg.shared_attn_every
+            n_groups, tail = cfg.n_layers // k_ev, cfg.n_layers % k_ev
+            convs_l, ssms_l, saks, savs = [], [], [], []
+            for g in range(n_groups):
+                sl = slice(g * k_ev, (g + 1) * k_ev)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+                (x,), (cv, sm) = jax.lax.scan(body, (x,), grp)
+                convs_l.append(cv)
+                ssms_l.append(sm)
+                x, (sak, sav) = L.attention_block(
+                    params["shared_attn"], x, cfg, pos, impl=impl,
+                    return_kv=True)
+                saks.append(sak.astype(jnp.dtype(cfg.cache_dtype)))
+                savs.append(sav.astype(jnp.dtype(cfg.cache_dtype)))
+                if "shared_mlp" in params:
+                    x = L.mlp_block(params["shared_mlp"], x, cfg)
+            if tail:
+                sl = slice(n_groups * k_ev, cfg.n_layers)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+                (x,), (cv, sm) = jax.lax.scan(body, (x,), grp)
+                convs_l.append(cv)
+                ssms_l.append(sm)
+            cache["conv"] = jnp.concatenate(convs_l)
+            cache["ssm"] = jnp.concatenate(ssms_l)
+            cache["sa_k"] = dist.shard(jnp.stack(saks), None,
+                                       ("pod", "data"), "model", None, None)
+            cache["sa_v"] = dist.shard(jnp.stack(savs), None,
+                                       ("pod", "data"), "model", None, None)
+        else:
+            (x,), (convs, ssms) = jax.lax.scan(body, (x,), params["layers"])
+            cache["conv"], cache["ssm"] = convs, ssms
+
+    x = L.rms_norm(x, params["final_ln"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["lm_head"].astype(cfg.cdtype),
+                        preferred_element_type=jnp.float32)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, cache

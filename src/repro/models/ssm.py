@@ -1,0 +1,270 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD).
+
+TPU adaptation: Mamba1 uses a time-chunked associative scan (VPU-friendly,
+bounded intermediates); Mamba2 uses the chunked state-space-dual (SSD)
+formulation — intra-chunk attention-like matmuls + a tiny inter-chunk state
+scan — which is the MXU-native form (DESIGN.md §4). Decode is the O(1)
+recurrence, which is what makes ``long_500k`` tractable for these archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                          b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (d_conv, C); left-padded causal conv via shifts."""
+    d_conv = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(d_conv):
+        shift = d_conv - 1 - i
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., L) log-decays → (..., L, L) lower-tri cumulative log-decay."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :] + a[..., None, :] * 0
+    # L[i, j] = sum_{k=j+1..i} a_k = cs[i] - cs[j]
+    ii = jnp.arange(l)[:, None]
+    jj = jnp.arange(l)[None, :]
+    return jnp.where(ii >= jj, diff, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_scan(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array,
+                h0: jax.Array, chunk: int):
+    """Chunked selective scan.
+
+    xdt: (B, S, Di) — dt ⊙ x;  da: (B, S, Di, N) — dt ⊙ A (log decay);
+    b, c: (B, S, N). h0: (B, Di, N). Returns (y (B, S, Di), h_final).
+    """
+    bsz, s, di = xdt.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    xdt = xdt.reshape(bsz, nc, chunk, di)
+    da = da.reshape(bsz, nc, chunk, di, n)
+    b_ = b.reshape(bsz, nc, chunk, n)
+    c_ = c.reshape(bsz, nc, chunk, n)
+
+    def chunk_step(h, inputs):
+        xc, dac, bc, cc = inputs  # (B, Lc, ...)
+        g = jnp.exp(dac)                       # (B, Lc, Di, N)
+        u = xc[..., None] * bc[:, :, None, :]  # (B, Lc, Di, N)
+
+        def combine(l, r):
+            gl, ul = l
+            gr, ur = r
+            return gl * gr, ur + gr * ul
+
+        g_cum, u_cum = jax.lax.associative_scan(combine, (g, u), axis=1)
+        h_t = g_cum * h[:, None] + u_cum       # (B, Lc, Di, N)
+        y = jnp.einsum("bldn,bln->bld", h_t, cc)
+        return h_t[:, -1], y
+
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xdt.transpose(1, 0, 2, 3), da.transpose(1, 0, 2, 3, 4),
+         b_.transpose(1, 0, 2, 3), c_.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y, h_final
+
+
+def mamba1_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                 return_state: bool = False):
+    """Full Mamba1 residual block (training/prefill path)."""
+    bsz, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = rms_norm(x, params["ln"], cfg.rms_eps)
+    xz = jnp.einsum("bsd,de->bse", h, params["in_proj"].astype(cfg.cdtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = dist.shard_batch(xin, None, "model")
+    z = dist.shard_batch(z, None, "model")
+    xc = jax.nn.silu(causal_depthwise_conv(
+        xin, params["conv_w"].astype(cfg.cdtype),
+        params["conv_b"].astype(cfg.cdtype)))
+    proj = jnp.einsum("bse,ep->bsp", xc, params["x_proj"].astype(cfg.cdtype))
+    dt_raw = proj[..., : cfg.dt_rank]
+    bmat = proj[..., cfg.dt_rank: cfg.dt_rank + n].astype(jnp.float32)
+    cmat = proj[..., cfg.dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, params["dt_w"].astype(cfg.cdtype))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (Di, N)
+    da = dt[..., None] * a[None, None]                  # (B,S,Di,N)
+    sdt = jnp.dtype(cfg.ssm_scan_dtype)
+    xdt = (dt * xc.astype(jnp.float32)).astype(sdt)
+    da = da.astype(sdt)
+    h0 = jnp.zeros((bsz, di, n), sdt)
+    y, h_final = mamba1_scan(xdt, da, bmat.astype(sdt), cmat.astype(sdt),
+                             h0, min(cfg.ssm_chunk, s))
+    y = y.astype(jnp.float32)
+    h_final = h_final.astype(jnp.float32)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None] \
+        * xc.astype(jnp.float32)
+    y = (y.astype(cfg.cdtype) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.cdtype))
+    out = x + dist.shard_batch(out, None, None)
+    if return_state:
+        state = {"conv": xin[:, -(cfg.ssm_conv - 1):].astype(
+            jnp.dtype(cfg.cache_dtype)), "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba1_decode(params: dict, x: jax.Array, cache: dict,
+                  cfg: ModelConfig):
+    """Single-token Mamba1 step. x: (B, 1, D); cache: conv (B, dc-1, Di),
+    ssm (B, Di, N)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = rms_norm(x, params["ln"], cfg.rms_eps)
+    xz = jnp.einsum("bsd,de->bse", h, params["in_proj"].astype(cfg.cdtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], xin], axis=1)  # (B, dc, Di)
+    w = params["conv_w"].astype(cfg.cdtype)
+    xc = jax.nn.silu((conv_in * w[None]).sum(axis=1, keepdims=True)
+                     + params["conv_b"].astype(cfg.cdtype))
+    proj = jnp.einsum("bse,ep->bsp", xc, params["x_proj"].astype(cfg.cdtype))
+    dt_raw = proj[..., : cfg.dt_rank]
+    bmat = proj[..., cfg.dt_rank: cfg.dt_rank + n].astype(jnp.float32)
+    cmat = proj[..., cfg.dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, params["dt_w"].astype(cfg.cdtype))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    g = jnp.exp(dt[:, 0, :, None] * a[None])
+    hs = (g * cache["ssm"]
+          + (dt[:, 0, :, None] * xc.astype(jnp.float32)[:, 0, :, None])
+          * bmat[:, 0, None, :])
+    y = jnp.einsum("bdn,bn->bd", hs, cmat[:, 0])
+    y = y + params["d_skip"].astype(jnp.float32)[None] \
+        * xc.astype(jnp.float32)[:, 0]
+    y = (y[:, None].astype(cfg.cdtype) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.cdtype))
+    new_cache = {"conv": conv_in[:, 1:], "ssm": hs}
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def ssd(xdt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+        h0: jax.Array, chunk: int):
+    """Chunked state-space dual. xdt: (B,S,H,P) (dt-scaled inputs);
+    a: (B,S,H) log-decay; b, c: (B,S,N). h0: (B,H,P,N).
+
+    Returns (y (B,S,H,P), h_final). Matmul-heavy: intra-chunk terms are
+    (Lc × Lc) attention-like products on the MXU.
+    """
+    bsz, s, hh, p = xdt.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    x_ = xdt.reshape(bsz, nc, chunk, hh, p)
+    a_ = a.reshape(bsz, nc, chunk, hh).transpose(0, 1, 3, 2)  # (B,nc,H,Lc)
+    b_ = b.reshape(bsz, nc, chunk, n)
+    c_ = c.reshape(bsz, nc, chunk, n)
+
+    a_cs = jnp.cumsum(a_, axis=-1)                       # (B,nc,H,Lc)
+    l_mat = jnp.exp(_segsum(a_))                         # (B,nc,H,Lc,Lc)
+    att = jnp.einsum("bcln,bcsn->bcls", c_, b_,
+                     preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp",
+                        l_mat, att, x_.astype(jnp.float32))
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)        # (B,nc,H,Lc)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", b_, decay_states,
+                        x_.astype(jnp.float32))          # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cs[..., -1])                 # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = dec[..., None, None] * h + st
+        return h_new, h
+
+    h_final, h_prev = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+    state_decay = jnp.exp(a_cs)                          # (B,nc,H,Lc)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", c_, h_prev, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, hh, p)
+    return y, h_final
+
+
+def mamba2_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                 return_state: bool = False):
+    bsz, s, d = x.shape
+    di, n, hh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, params["ln"], cfg.rms_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h,
+                        params["in_proj"].astype(cfg.cdtype))
+    z, xbc_raw, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = causal_depthwise_conv(xbc_raw,
+                                params["conv_w"].astype(cfg.cdtype),
+                                params["conv_b"].astype(cfg.cdtype))
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xin = dist.shard_batch(xin, None, "model")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (H,)
+    xh = xin.reshape(bsz, s, hh, p)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    h0 = jnp.zeros((bsz, hh, p, n), jnp.float32)
+    y, h_final = ssd(xdt, dt * a[None, None], bmat.astype(jnp.float32),
+                     cmat.astype(jnp.float32), h0, min(cfg.ssm_chunk, s))
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(cfg.cdtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_ln"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.cdtype))
+    out = x + dist.shard_batch(out, None, None)
+    if return_state:
+        state = {"conv": xbc_raw[:, -(cfg.ssm_conv - 1):].astype(
+            jnp.dtype(cfg.cache_dtype)), "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba2_decode(params: dict, x: jax.Array, cache: dict,
+                  cfg: ModelConfig):
+    """Single-token Mamba2 step; cache: conv (B, dc-1, 2Di+2N... xbc dims),
+    ssm (B, H, P, N)."""
+    bsz = x.shape[0]
+    di, n, hh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, params["ln"], cfg.rms_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h,
+                        params["in_proj"].astype(cfg.cdtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)
+    w = params["conv_w"].astype(cfg.cdtype)
+    xbc1 = jax.nn.silu((conv_in * w[None]).sum(axis=1, keepdims=True)
+                       + params["conv_b"].astype(cfg.cdtype))
+    xin, bmat, cmat = jnp.split(xbc1, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    g = jnp.exp(dt * a[None])                            # (B,H)
+    xh = xin[:, 0].reshape(bsz, hh, p).astype(jnp.float32)
+    upd = (dt[..., None, None] * xh[..., None]
+           * bmat[:, 0, None, None, :].astype(jnp.float32))
+    hs = g[..., None, None] * cache["ssm"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", hs, cmat[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(cfg.cdtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_ln"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.cdtype))
+    return x + out, {"conv": conv_in[:, 1:], "ssm": hs}

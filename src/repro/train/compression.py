@@ -1,0 +1,64 @@
+"""Cross-pod gradient compression (distributed-optimization trick).
+
+The pod axis is DCN (slow links); an fp32 ring all-reduce of the gradients
+costs 2×4 bytes/param across it. Here the pod reduction is made EXPLICIT:
+a partial-manual ``shard_map`` keeps data/model axes automatic (the inner
+computation still SPMD-partitions normally) while the pod axis is manual,
+and the gradient exchange becomes an int8 all-gather + local dequant-mean —
+(P-1)/P × 1 byte/param of DCN traffic, an ~8× reduction.
+
+Quantization is per-tensor absmax int8 (round-to-nearest). With 2 pods the
+quantization error is an unbiased-ish dither on the half-gradient;
+EXPERIMENTS.md §Perf carries the convergence check.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import dist
+
+
+def compressed_pod_mean(tree):
+    """Mean of a gradient pytree across the manual 'pod' axis via int8."""
+    def one(g):
+        if g.dtype == jnp.int32 or g.ndim == 0:
+            return jax.lax.pmean(g, "pod")
+        gf = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        qs = jax.lax.all_gather(q, "pod")          # int8 on the wire
+        ss = jax.lax.all_gather(scale, "pod")      # (P,) fp32 scales
+        deq = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * g.ndim)
+        return deq.mean(axis=0).astype(g.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def pod_compressed_value_and_grad(loss_fn, mesh, batch_spec_prefix=P("pod")):
+    """value_and_grad whose cross-pod gradient exchange is int8.
+
+    ``loss_fn(params, batch) -> scalar`` must compute the mean loss over
+    its (pod-local) batch shard. Returns f(params, batch) -> (loss, grads)
+    with grads exact over data/model (automatic) and int8-compressed over
+    pod (manual).
+    """
+    def per_pod(params, batch):
+        with dist.manual_axes({"pod"}):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = compressed_pod_mean(grads)
+            loss = jax.lax.pmean(loss, "pod")
+        return loss, grads
+
+    def wrapped(params, batch):
+        in_specs = (P(), jax.tree.map(lambda _: batch_spec_prefix, batch))
+        out_specs = (P(), jax.tree.map(lambda _: P(), params))
+        return jax.shard_map(per_pod, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names={"pod"},
+                             check_vma=False)(params, batch)
+
+    return wrapped

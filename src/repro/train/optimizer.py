@@ -1,0 +1,128 @@
+"""AdamW with mixed precision + ZeRO-1 style optimizer-state sharding.
+
+No optax in this environment — the update is hand-rolled. Parameters live
+in ``param_dtype`` (bf16 in production); the optimizer state carries an
+fp32 master copy plus fp32 moments, all sharded over BOTH the parameter's
+TP axes and the ``data`` axis (ZeRO-1): each data shard owns a slice of the
+state, which XLA reduces/gathers around the update automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    accum_dtype: str = "bfloat16"   # gradient-accumulation dtype
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init_opt_state(params) -> dict:
+    # copy=True: the fp32 master must NOT alias fp32 params (donation)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state: dict,
+                  cfg: OptimizerConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step. grads in any dtype; math in fp32."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master_new = master - lr * delta
+        return m_new, v_new, master_new, master_new.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                       opt_state["master"], params)
+    m_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master_new = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    params_new = jax.tree.map(lambda t: t[3], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"master": master_new, "m": m_new, "v": v_new, "step": step}
+    return params_new, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def zero_sharding_entry(param_spec: tuple, shape: tuple[int, ...],
+                        data_axes: tuple[str, ...] = ("data",)) -> tuple:
+    """Extend a param's TP spec with ZeRO sharding over ``data``.
+
+    Picks the largest dimension not already sharded whose size divides the
+    data-axis product; falls back to the TP spec when none fits.
+    """
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = {a for e in spec if e is not None
+            for a in ((e,) if isinstance(e, str) else e)}
+    if any(a in used for a in data_axes):
+        return tuple(spec)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None:
+            spec[i] = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+            return tuple(spec)
+    return tuple(param_spec)
+
+
+def opt_state_sharding_rules(param_rules, param_shapes_tree) -> dict:
+    """Sharding rules for init_opt_state's tree given the param rules."""
+    def extend(rule, shp):
+        return zero_sharding_entry(tuple(rule), tuple(shp))
+
+    extended = jax.tree.map(
+        extend, param_rules, param_shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, (str, tuple)) for e in x))
+    return {"master": extended, "m": extended, "v": extended,
+            "step": ()}

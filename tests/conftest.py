@@ -1,0 +1,16 @@
+import os
+import sys
+
+# keep the test process at 1 visible device (the dry-run sets 512 in its
+# own subprocess; tests must NOT inherit that)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

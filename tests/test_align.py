@@ -1,0 +1,130 @@
+"""Spatiotemporal alignment (paper §7): channel merge vs dict reference,
+diagonal clustering, network dt-invariance, out-of-core path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import align as A
+from repro.core.align import AlignConfig, Events
+from repro.core.lsh import INVALID, Pairs
+
+
+def triplets(rows, pad_to=None):
+    """rows: list of (dt, idx1, sim). → masked arrays."""
+    rows = list(rows)
+    n = pad_to or len(rows)
+    dt = np.full(n, INVALID, np.int32)
+    i1 = np.full(n, INVALID, np.int32)
+    sim = np.zeros(n, np.int32)
+    val = np.zeros(n, bool)
+    for k, (d, i, s) in enumerate(rows):
+        dt[k], i1[k], sim[k], val[k] = d, i, s, True
+    return (jnp.asarray(dt), jnp.asarray(i1), jnp.asarray(sim),
+            jnp.asarray(val))
+
+
+def test_merge_channels_matches_dict(rng):
+    chans = []
+    expect = {}
+    for c in range(3):
+        rows = []
+        for _ in range(30):
+            d, i, s = int(rng.integers(0, 5)), int(rng.integers(0, 10)), \
+                int(rng.integers(1, 5))
+            rows.append((d, i, s))
+            expect[(d, i)] = expect.get((d, i), 0) + s
+        chans.append(triplets(rows, pad_to=40))
+    merged = A.merge_channels(chans, threshold=4)
+    got = {}
+    for d, i, s, v in zip(np.asarray(merged.dt), np.asarray(merged.idx1),
+                          np.asarray(merged.sim), np.asarray(merged.valid)):
+        if v:
+            got[(int(d), int(i))] = int(s)
+    expect = {k: v for k, v in expect.items() if v >= 4}
+    assert got == expect
+
+
+def test_cluster_station_basic():
+    """Two diagonal clusters + one isolated entry (pruned)."""
+    # NOTE: the merge pass is single-sweep in (idx_min, dt) order
+    # (DESIGN.md §7 approximation); the isolated entry sits at idx 70 so it
+    # does not interleave between A's diagonals.
+    rows = ([(100, i, 3) for i in range(5, 11)]          # cluster A
+            + [(101, 8, 3)]                               # adjacent diag → A
+            + [(250, i, 4) for i in (40, 44, 47)]         # cluster B
+            + [(999, 70, 2)])                             # isolated
+    pairs = Pairs(
+        idx1=triplets(rows, 20)[1], idx2=jnp.asarray(
+            np.asarray(triplets(rows, 20)[0])
+            + np.asarray(triplets(rows, 20)[1])),
+        sim=triplets(rows, 20)[2], valid=triplets(rows, 20)[3])
+    cfg = AlignConfig(gap=5, dt_merge_tol=2, min_cluster_size=2,
+                      min_cluster_sim=6)
+    ev = A.cluster_station(pairs, cfg)
+    v = np.asarray(ev.valid)
+    dts = sorted(np.asarray(ev.dt)[v].tolist())
+    assert len(dts) == 2, (dts,)
+    assert dts[0] == 100 and dts[1] == 250
+    sizes = np.asarray(ev.size)[v]
+    assert sorted(sizes.tolist()) == [3, 7]
+
+
+def _events(rows, pad_to=None):
+    """rows: (dt, onset, score) per event."""
+    rows = list(rows)
+    n = pad_to or len(rows)
+    dt = np.full(n, INVALID, np.int32)
+    onset = np.full(n, INVALID, np.int32)
+    score = np.zeros(n, np.int32)
+    valid = np.zeros(n, bool)
+    for k, (d, o, s) in enumerate(rows):
+        dt[k], onset[k], score[k], valid[k] = d, o, s, True
+    return Events(dt=jnp.asarray(dt), onset=jnp.asarray(onset),
+                  extent=jnp.zeros(n, jnp.int32),
+                  size=jnp.ones(n, jnp.int32), score=jnp.asarray(score),
+                  valid=jnp.asarray(valid))
+
+
+def test_network_association_dt_invariance():
+    """Same (dt, onset±tol) at ≥2 stations → detection; others dropped.
+
+    This encodes Figure 9: inter-event time is station-invariant while
+    onset shifts by travel time only (within the tolerance window).
+    """
+    cfg = AlignConfig(dt_tol=2, onset_tol=10, min_stations=2)
+    st0 = _events([(500, 100, 5), (800, 300, 4)], 6)
+    st1 = _events([(501, 105, 6), (1200, 50, 9)], 6)
+    st2 = _events([(499, 97, 3)], 6)
+    det = A.associate_network([st0, st1, st2], cfg, 3)
+    v = np.asarray(det["valid"])
+    dts = np.asarray(det["dt"])[v]
+    n_st = np.asarray(det["n_stations"])[v]
+    assert len(dts) == 1 and abs(int(dts[0]) - 500) <= 2
+    assert int(n_st[0]) == 3
+
+
+def test_network_association_respects_min_stations():
+    cfg = AlignConfig(dt_tol=1, onset_tol=5, min_stations=3)
+    st0 = _events([(500, 100, 5)], 4)
+    st1 = _events([(500, 102, 6)], 4)
+    det = A.associate_network([st0, st1], cfg, 2)
+    assert int(np.asarray(det["valid"]).sum()) == 0
+
+
+def test_align_streamed_matches_in_memory(rng, tmp_path):
+    chans = []
+    expect = {}
+    for c in range(2):
+        chunks = []
+        for g in range(3):
+            rows = np.stack([
+                rng.integers(0, 6, 25), rng.integers(0, 12, 25),
+                rng.integers(1, 4, 25)], axis=1)
+            chunks.append(rows)
+            for d, i, s in rows:
+                expect[(int(d), int(i))] = expect.get((int(d), int(i)), 0) \
+                    + int(s)
+        chans.append(chunks)
+    out = A.align_streamed(chans, threshold=5, tmpdir=str(tmp_path))
+    got = {(int(d), int(i)): int(s) for d, i, s in out}
+    assert got == {k: v for k, v in expect.items() if v >= 5}

@@ -1,0 +1,91 @@
+"""Checkpointing: roundtrip, atomicity, pruning, and the fault-tolerance
+contract (failure-injection restart via subprocess)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as C
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros(4)},
+            "opt": {"m": jnp.ones((8, 4)), "step": jnp.asarray(3)}}
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    state = _state()
+    C.save_checkpoint(str(tmp_path), 7, state, extra={"iterator": {"p": 5}})
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          state)
+    restored, extra = C.restore_checkpoint(str(tmp_path), target)
+    assert extra == {"iterator": {"p": 5}}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_background_save_and_prune(tmp_path):
+    state = _state()
+    threads = [C.save_checkpoint(str(tmp_path), s, state, background=True,
+                                 keep=2) for s in (1, 2, 3)]
+    for t in threads:
+        t.join()
+    steps = C.list_steps(str(tmp_path))
+    assert steps[-1] == 3 and len(steps) <= 2
+
+
+def test_no_partial_dirs_on_overwrite(tmp_path):
+    state = _state()
+    C.save_checkpoint(str(tmp_path), 1, state)
+    C.save_checkpoint(str(tmp_path), 1, state)  # overwrite same step
+    entries = [p.name for p in tmp_path.iterdir()]
+    assert entries == ["step_00000001"], entries
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    C.save_checkpoint(str(tmp_path), 1, _state())
+    bad_target = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                             "b": jax.ShapeDtypeStruct((4,), jnp.float32)},
+                  "opt": {"m": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                          "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    with pytest.raises(ValueError):
+        C.restore_checkpoint(str(tmp_path), bad_target)
+
+
+@pytest.mark.slow
+def test_failure_injection_and_resume(tmp_path):
+    """Kill training mid-run; resumed run must match an uninterrupted one."""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    common = [sys.executable, "-m", "repro.launch.train", "--arch", "smoke",
+              "--steps", "8", "--seq", "64", "--batch", "4",
+              "--ckpt-every", "2", "--no-dedup", "--seed", "3"]
+    # uninterrupted reference
+    ref_metrics = tmp_path / "ref.json"
+    subprocess.run(common + ["--ckpt-dir", str(tmp_path / "ref"),
+                             "--metrics-out", str(ref_metrics)],
+                   env=env, check=True, capture_output=True, timeout=900)
+    # crashing run
+    crash_dir = str(tmp_path / "crash")
+    p = subprocess.run(common + ["--ckpt-dir", crash_dir,
+                                 "--inject-failure-at", "5"],
+                       env=env, capture_output=True, timeout=900)
+    assert p.returncode == 42, p.stderr.decode()[-500:]
+    assert C.latest_step(crash_dir) == 4
+    # resume
+    res_metrics = tmp_path / "res.json"
+    subprocess.run(common + ["--ckpt-dir", crash_dir, "--resume",
+                             "--metrics-out", str(res_metrics)],
+                   env=env, check=True, capture_output=True, timeout=900)
+    ref = json.loads(ref_metrics.read_text())
+    res = json.loads(res_metrics.read_text())
+    assert abs(ref["final_loss"] - res["final_loss"]) < 1e-4, (ref, res)

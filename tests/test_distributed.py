@@ -1,0 +1,198 @@
+"""Multi-device semantics via subprocess (8 forced host devices):
+sharded step == single-device step, EP-MoE == dense, elastic checkpoint
+restore across mesh shapes, tiny-mesh dry-run smoke."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(code: str, timeout=1200) -> str:
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, timeout=timeout)
+    assert p.returncode == 0, (p.stdout.decode()[-2000:]
+                               + p.stderr.decode()[-3000:])
+    return p.stdout.decode()
+
+
+COMMON = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import ModelConfig, init_params, lm_loss
+from repro.models import param_sharding_rules
+from repro import dist
+
+CFG = ModelConfig(name="d", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=2048, attn_q_block=32,
+                  attn_kv_block=32, loss_seq_chunk=32,
+                  param_dtype="float32", compute_dtype="float32",
+                  remat="none")
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (8, 64)), jnp.int32)
+batch = {"tokens": toks, "labels": toks,
+         "loss_mask": jnp.ones((8, 64), jnp.float32)}
+params = init_params(jax.random.PRNGKey(0), CFG)
+"""
+
+
+def test_sharded_loss_and_grads_match_single_device():
+    out = run_py(COMMON + """
+# single device reference
+loss_ref, _ = lm_loss(params, batch, CFG)
+grads_ref = jax.grad(lambda p: lm_loss(p, batch, CFG)[0])(params)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rules = param_sharding_rules(CFG)
+
+def to_sh(rule_tree, tree):
+    def walk(r, t):
+        if isinstance(r, tuple):
+            spec = dist.sanitize_spec(t.shape, r)
+            return NamedSharding(mesh, spec if spec is not None else P())
+        return {k: walk(r[k], t[k]) for k in r}
+    return walk(rule_tree, tree)
+
+with mesh:
+    psh = to_sh(rules, params)
+    params_s = jax.device_put(params, psh)
+    batch_s = jax.device_put(batch, NamedSharding(mesh, P(("data",))))
+    f = jax.jit(lambda p, b: lm_loss(p, b, CFG)[0], in_shardings=(psh,
+                NamedSharding(mesh, P(("data",)))))
+    loss_s = f(params_s, batch_s)
+    grads_s = jax.jit(jax.grad(lambda p: lm_loss(p, batch_s, CFG)[0]),
+                      in_shardings=(psh,))(params_s)
+print("LOSS", float(loss_ref), float(loss_s))
+assert abs(float(loss_ref) - float(loss_s)) < 1e-4
+for a, b in zip(jax.tree.leaves(grads_ref), jax.tree.leaves(grads_s)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
+print("SHARDED_OK")
+""")
+    assert "SHARDED_OK" in out
+
+
+def test_moe_ep_shardmap_matches_dense():
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import ModelConfig, init_params
+from repro.models import layers as L
+
+CFG = ModelConfig(name="m", n_layers=1, d_model=64, n_heads=4, n_kv_heads=4,
+                  d_ff=0, vocab_size=256, n_experts=8, n_shared_experts=1,
+                  moe_top_k=2, expert_ff=32, capacity_factor=8.0,
+                  param_dtype="float32", compute_dtype="float32")
+rng = np.random.default_rng(0)
+params = init_params(jax.random.PRNGKey(0), CFG)
+lp = jax.tree.map(lambda a: a[0], params["layers"])
+x = jnp.asarray(rng.standard_normal((4, 16, 64)), jnp.float32)
+
+y_dense, aux_dense = L.moe_block(lp["moe"], x, CFG)   # no mesh → dense path
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with mesh:
+    moe_sh = {k: NamedSharding(mesh, P("model", None, None))
+              if k in ("wg", "wu", "wd") else NamedSharding(mesh, P())
+              for k in lp["moe"]}
+    lp_s = {"moe": jax.device_put(lp["moe"], moe_sh)}
+    xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+    f = jax.jit(lambda p, xx: L.moe_block(p, xx, CFG))
+    y_ep, aux_ep = f(lp_s["moe"], xs)
+np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep),
+                           atol=1e-4, rtol=1e-4)
+# EP aux is the per-data-shard balance loss meaned over shards — close to
+# but not identical with the global-batch aux
+assert abs(float(aux_dense) - float(aux_ep)) / max(float(aux_dense), 1e-9) < 0.3
+print("MOE_EP_OK")
+""")
+    assert "MOE_EP_OK" in out
+
+
+def test_decode_seq_sharded_cache_matches_unsharded():
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import (ModelConfig, decode_step, init_cache, init_params,
+                          cache_sharding_rules)
+from repro import dist
+
+CFG = ModelConfig(name="d", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=256, param_dtype="float32",
+                  compute_dtype="float32", cache_dtype="float32")
+rng = np.random.default_rng(0)
+params = init_params(jax.random.PRNGKey(0), CFG)
+cache = init_cache(CFG, 4, 32)
+# advance a few tokens unsharded
+toks = [jnp.asarray(rng.integers(0, 256, (4, 1)), jnp.int32)
+        for _ in range(5)]
+c = cache
+for t in toks[:-1]:
+    logits_ref, c = decode_step(params, c, t, CFG)
+logits_ref, _ = decode_step(params, c, toks[-1], CFG)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with mesh:
+    rules = cache_sharding_rules(CFG)
+    def sh(rule, t):
+        spec = dist.sanitize_spec(t.shape, rule)
+        return NamedSharding(mesh, spec if spec is not None else P())
+    cs = {k: sh(rules[k], v) for k, v in cache.items()}
+    c2 = jax.device_put(cache, cs)
+    f = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG))
+    for t in toks[:-1]:
+        logits_s, c2 = f(params, c2, t)
+    logits_s, _ = f(params, c2, toks[-1])
+np.testing.assert_allclose(np.asarray(logits_ref), np.asarray(logits_s),
+                           atol=2e-4)
+print("DECODE_SHARDED_OK")
+""")
+    assert "DECODE_SHARDED_OK" in out
+
+
+def test_elastic_checkpoint_restore_new_mesh(tmp_path):
+    out = run_py(f"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint as C
+
+mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+state = {{"w": jnp.arange(64.0).reshape(8, 8)}}
+state = jax.device_put(state, NamedSharding(mesh_a, P("data", "model")))
+C.save_checkpoint(r"{tmp_path}", 1, state)
+
+mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+target = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+sh = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
+restored, _ = C.restore_checkpoint(r"{tmp_path}", target, shardings=sh)
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+assert restored["w"].sharding.spec == P("model", "data")
+print("ELASTIC_OK")
+""")
+    assert "ELASTIC_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_tiny_mesh():
+    """The dry-run lowering path works on a small mesh (8 devices)."""
+    out = run_py("""
+import jax
+from repro.launch.dryrun import lower_lm_cell, _cell_name
+from repro.launch import hlo_stats
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+lowered, cfg, spec, extra = lower_lm_cell(
+    "internvl2-1b", "train_4k", mesh, "masked", 2)
+compiled = lowered.compile()
+st = hlo_stats.analyze_hlo(compiled.as_text())
+assert st.flops > 0 and st.bytes > 0
+print("DRYRUN_TINY_OK", st.flops > 0)
+""", timeout=2400)
+    assert "DRYRUN_TINY_OK" in out

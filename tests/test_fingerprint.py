@@ -1,0 +1,84 @@
+"""Fingerprint extraction (paper §5): shapes, MAD sampling, band cut."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fingerprint as F
+
+CFG = F.FingerprintConfig(img_freq=16, img_time=32, img_hop=8, top_k=64,
+                          mad_sample_rate=1.0)
+
+
+def _wave(rng, seconds=120.0):
+    return jnp.asarray(rng.standard_normal(int(seconds * CFG.fs))
+                       .astype(np.float32))
+
+
+def test_shapes_and_counts(rng):
+    x = _wave(rng)
+    bits, packed = F.fingerprints_from_waveform(x, CFG)
+    n_expected = CFG.n_fingerprints(x.shape[0])
+    assert bits.shape == (n_expected, CFG.fp_dim)
+    assert packed.shape == (n_expected, CFG.fp_dim // 32)
+
+
+def test_topk_sets_exactly_k_bits_per_row(rng):
+    x = _wave(rng)
+    bits, _ = F.fingerprints_from_waveform(x, CFG)
+    per_row = np.asarray(bits).sum(axis=1)
+    # ties can add a few extra; never fewer than K
+    assert (per_row >= CFG.top_k).all()
+    assert (per_row <= CFG.top_k + 8).all()
+
+
+def test_deterministic(rng):
+    x = _wave(rng, 60.0)
+    b1, _ = F.fingerprints_from_waveform(x, CFG, key=jax.random.PRNGKey(1))
+    b2, _ = F.fingerprints_from_waveform(x, CFG, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_mad_sampling_accuracy(rng):
+    """§5.2/Table 6: sampled MAD stats ≈ full stats → fingerprints mostly
+    identical."""
+    x = _wave(rng, 240.0)
+    full, _ = F.fingerprints_from_waveform(
+        x, F.FingerprintConfig(**{**CFG.__dict__, "mad_sample_rate": 1.0}))
+    sampled, _ = F.fingerprints_from_waveform(
+        x, F.FingerprintConfig(**{**CFG.__dict__, "mad_sample_rate": 0.2}),
+        key=jax.random.PRNGKey(7))
+    agree = (np.asarray(full) == np.asarray(sampled)).mean()
+    # paper Table 6 reports 99.5% at 10% sampling on 1.3M fingerprints;
+    # our test corpus is ~900 fingerprints so the estimator is noisier
+    assert agree > 0.93, agree
+
+
+def test_band_cut_excludes_out_of_band_energy(rng):
+    """§6.5: a strong 30 Hz hum must not move in-band (3–20 Hz) features."""
+    t = np.arange(int(120 * CFG.fs)) / CFG.fs
+    base = rng.standard_normal(t.size).astype(np.float32)
+    hum = 5.0 * np.sin(2 * np.pi * 30.0 * t).astype(np.float32)
+    s_base = np.asarray(F.spectrogram(jnp.asarray(base), CFG))
+    s_hum = np.asarray(F.spectrogram(jnp.asarray(base + hum), CFG))
+    # banded spectrogram only covers 3-20 Hz → hum adds spectral leakage
+    # only; relative change stays small
+    rel = np.abs(s_hum - s_base).mean() / (np.abs(s_base).mean() + 1e-9)
+    assert rel < 0.15, rel
+
+
+def test_mad_normalize_robust_to_scale(rng):
+    c = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    med, mad = F.mad_stats(c, 1.0, jax.random.PRNGKey(0))
+    z1 = F.mad_normalize(c, med, mad)
+    med2, mad2 = F.mad_stats(c * 10, 1.0, jax.random.PRNGKey(0))
+    z2 = F.mad_normalize(c * 10, med2, mad2)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-3)
+
+
+def test_frame_strides():
+    x = jnp.arange(10.0)
+    fr = F.frame(x, 4, 2)
+    np.testing.assert_array_equal(np.asarray(fr[0]), [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(fr[1]), [2, 3, 4, 5])
+    assert fr.shape == (4, 4)

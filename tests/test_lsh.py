@@ -1,0 +1,183 @@
+"""LSH search (paper §6): correctness vs brute force, S-curve behavior,
+occurrence filter, partitioned search equivalence, skew diagnostics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh as L
+from repro.core import theory
+
+
+def make_planted(rng, n=96, d=512, n_bits=40, n_pairs=8, overlap=0.9):
+    """Random sparse fingerprints + planted near-duplicate pairs."""
+    fp = np.zeros((n, d), bool)
+    for i in range(n):
+        fp[i, rng.choice(d, n_bits, replace=False)] = True
+    pairs = []
+    for p in range(n_pairs):
+        i = 2 * p
+        j = n - 1 - 2 * p
+        fp[j] = fp[i].copy()
+        flip = rng.choice(d, int(n_bits * (1 - overlap) * 2), replace=False)
+        fp[j, flip] = ~fp[j, flip]
+        pairs.append((min(i, j), max(i, j)))
+    return fp, pairs
+
+
+CFG = L.LSHConfig(n_tables=50, n_funcs=4, n_matches=2, bucket_cap=8,
+                  min_dt=1, occurrence_frac=0.0)
+
+
+def test_planted_pairs_found(rng):
+    fp, planted = make_planted(rng)
+    pairs, stats = L.search(jnp.asarray(fp), CFG)
+    found = {(int(a), int(b))
+             for a, b, v in zip(np.asarray(pairs.idx1),
+                                np.asarray(pairs.idx2),
+                                np.asarray(pairs.valid)) if v}
+    hit = sum(p in found for p in planted)
+    assert hit >= len(planted) - 1, (hit, len(planted))
+
+
+def test_matches_brute_force_high_threshold(rng):
+    """Every reported pair must be genuinely similar (precision against
+    the exact O(N²) join at the S-curve floor)."""
+    fp, _ = make_planted(rng, n_pairs=6)
+    pairs, _ = L.search(jnp.asarray(fp), CFG)
+    exact = L.brute_force_pairs(fp, threshold=0.2, min_dt=1)
+    exact_set = {(int(a), int(b)) for a, b, _ in exact}
+    for a, b, v, s in zip(np.asarray(pairs.idx1), np.asarray(pairs.idx2),
+                          np.asarray(pairs.valid), np.asarray(pairs.sim)):
+        if v and s >= 10:  # strong matches must be truly similar
+            assert (int(a), int(b)) in exact_set
+
+
+def test_recall_tracks_theory(rng):
+    """Detection rate of planted pairs ≈ theoretical S-curve value."""
+    hits, total, probs = 0, 0, []
+    for trial in range(4):
+        r = np.random.default_rng(trial)
+        fp, planted = make_planted(r, n=64, n_pairs=6, overlap=0.92)
+        fpj = jnp.asarray(fp)
+        pairs, _ = L.search(fpj, CFG)
+        found = {(int(a), int(b))
+                 for a, b, v in zip(np.asarray(pairs.idx1),
+                                    np.asarray(pairs.idx2),
+                                    np.asarray(pairs.valid)) if v}
+        from repro.utils import pack_bits
+        packed = np.asarray(pack_bits(fpj))
+        for (a, b) in planted:
+            inter = bin(int.from_bytes(
+                (packed[a] & packed[b]).tobytes(), "little")).count("1")
+            union = bin(int.from_bytes(
+                (packed[a] | packed[b]).tobytes(), "little")).count("1")
+            s = inter / max(union, 1)
+            probs.append(theory.detection_probability(
+                s, CFG.n_funcs, CFG.n_matches, CFG.n_tables))
+            hits += (a, b) in found
+            total += 1
+    expected = float(np.mean(probs))
+    rate = hits / total
+    assert abs(rate - expected) < 0.3, (rate, expected)
+
+
+def test_min_dt_excludes_adjacent(rng):
+    fp, _ = make_planted(rng)
+    cfg = L.LSHConfig(**{**CFG.__dict__, "min_dt": 10})
+    pairs, _ = L.search(jnp.asarray(fp), cfg)
+    v = np.asarray(pairs.valid)
+    dt = np.asarray(pairs.idx2)[v] - np.asarray(pairs.idx1)[v]
+    assert (dt >= 10).all()
+
+
+def test_occurrence_filter_kills_hub(rng):
+    """A 'repeating noise' hub matching everything gets dropped (§6.5)."""
+    n, d, nb = 80, 512, 40
+    fp = np.zeros((n, d), bool)
+    hub_bits = rng.choice(d, nb, replace=False)
+    for i in range(40):  # 40 near-identical noise fingerprints
+        fp[i, hub_bits] = True
+        fp[i, rng.choice(d, 3)] = True
+    for i in range(40, n):
+        fp[i, rng.choice(d, nb, replace=False)] = True
+    # one planted earthquake pair among the clean rows
+    fp[n - 1] = fp[40].copy()
+    cfg = L.LSHConfig(**{**CFG.__dict__, "occurrence_frac": 0.2,
+                         "min_dt": 1})
+    pairs, stats = L.search(jnp.asarray(fp), cfg)
+    v = np.asarray(pairs.valid)
+    i1 = np.asarray(pairs.idx1)[v]
+    i2 = np.asarray(pairs.idx2)[v]
+    assert not ((i1 < 40) & (i2 < 40)).any(), "hub pairs survived"
+    assert ((i1 == 40) & (i2 == n - 1)).any(), "planted pair lost"
+    assert int(stats["excluded_fingerprints"]) >= 40
+
+
+def test_partitioned_equals_global(rng):
+    fp, _ = make_planted(rng, n=64)
+    cfg = L.LSHConfig(**{**CFG.__dict__, "occurrence_frac": 0.0})
+    g_pairs, _ = L.search(jnp.asarray(fp), cfg)
+    blocks, _ = L.partitioned_search(jnp.asarray(fp), cfg, n_partitions=4)
+
+    def valid_set(prs):
+        out = set()
+        for pr in prs:
+            for a, b, v in zip(np.asarray(pr.idx1), np.asarray(pr.idx2),
+                               np.asarray(pr.valid)):
+                if v:
+                    out.add((int(a), int(b)))
+        return out
+
+    g = valid_set([g_pairs])
+    p = valid_set(blocks)
+    # identical pair sets (the paper: "partitioned search yields identical
+    # results")
+    assert g == p, (len(g), len(p), g ^ p)
+
+
+def test_more_funcs_fewer_lookups(rng):
+    """§6.3: raising k shrinks buckets → selectivity drops."""
+    fp, _ = make_planted(rng, n=128)
+    fpj = jnp.asarray(fp)
+    stats = {}
+    for k in (2, 4, 8):
+        cfg = L.LSHConfig(n_tables=20, n_funcs=k, n_matches=1)
+        mp = L.hash_mappings(fp.shape[1], cfg)
+        sigs = L.signatures(fpj, mp, cfg)
+        stats[k] = float(L.bucket_stats(sigs)["avg_lookups_per_query"])
+    assert stats[2] >= stats[4] >= stats[8]
+
+
+def test_signatures_valid_mask(rng):
+    fp, _ = make_planted(rng, n=32)
+    cfg = CFG
+    mp = L.hash_mappings(fp.shape[1], cfg)
+    valid = jnp.asarray(np.arange(32) < 16)
+    sigs = L.signatures(jnp.asarray(fp), mp, cfg, valid=valid)
+    s = np.asarray(sigs)
+    # invalid rows must not collide with each other
+    assert len(np.unique(s[16:], axis=0)) == 16
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_minmax_estimator_sanity(seed):
+    """Min-Max signatures collide more for more-similar inputs."""
+    rng = np.random.default_rng(seed)
+    d, nb = 256, 30
+    base = np.zeros(d, bool)
+    base[rng.choice(d, nb, replace=False)] = True
+    sim = base.copy()
+    flip = rng.choice(d, 4, replace=False)
+    sim[flip] = ~sim[flip]
+    rand = np.zeros(d, bool)
+    rand[rng.choice(d, nb, replace=False)] = True
+    cfg = L.LSHConfig(n_tables=60, n_funcs=4, n_matches=1)
+    mp = L.hash_mappings(d, cfg)
+    sigs = np.asarray(L.signatures(jnp.asarray(np.stack([base, sim, rand])),
+                                   mp, cfg))
+    close = (sigs[0] == sigs[1]).sum()
+    far = (sigs[0] == sigs[2]).sum()
+    assert close >= far

@@ -1,0 +1,202 @@
+"""Per-arch smoke tests (reduced configs, one forward/train step on CPU,
+shape + finiteness assertions) plus SSM-vs-recurrence oracles and blocked
+attention equivalence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import LM_ARCHS, get_smoke_config
+from repro.models import (ModelConfig, decode_step, forward, init_cache,
+                          init_params, lm_loss, padded_vocab, param_shapes,
+                          param_sharding_rules, prefill)
+from repro.models import layers as L
+from repro.models import ssm as S
+
+B, SEQ = 2, 64
+
+
+def _batch(rng, cfg, b=B, s=SEQ):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_patches, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_smoke_forward_and_grad(rng, arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(rng, cfg)
+    loss, metrics = lm_loss(params, batch, cfg)
+    assert np.isfinite(float(loss)), (arch, loss)
+    hidden, _ = forward(params, batch, cfg)
+    assert hidden.shape == (B, SEQ, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+    grads = jax.grad(lambda p: lm_loss(p, batch, cfg)[0])(params)
+    gn = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, (arch, gn)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "falcon-mamba-7b",
+                                  "zamba2-1.2b", "deepseek-moe-16b"])
+def test_arch_smoke_decode(rng, arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, B, 16)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    logits, cache = decode_step(params, cache, tok, cfg)
+    assert logits.shape == (B, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["pos"][0]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "falcon-mamba-7b",
+                                  "zamba2-1.2b", "command-r-35b"])
+def test_prefill_then_decode_matches_forward(rng, arch):
+    cfg = get_smoke_config(arch)
+    cfg = type(cfg)(**{**cfg.__dict__, "param_dtype": "float32",
+                       "compute_dtype": "float32",
+                       "cache_dtype": "float32"})
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(rng, cfg, b=1, s=32)
+    hidden, _ = forward(params, batch, cfg)
+    w = params["lm_head"].astype(jnp.float32)
+    want = jnp.einsum("bd,dv->bv", hidden[:, -1].astype(jnp.float32), w)
+    logits_last, cache = prefill(params, batch, cfg)
+    np.testing.assert_allclose(np.asarray(logits_last), np.asarray(want),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_param_shapes_and_rules_align():
+    for arch in LM_ARCHS:
+        cfg = get_smoke_config(arch)
+        shapes = param_shapes(cfg)
+        rules = param_sharding_rules(cfg)
+
+        def walk(s, r):
+            if isinstance(s, tuple):
+                assert isinstance(r, tuple) and len(r) == len(s), (s, r)
+                return
+            assert set(s) == set(r), (set(s), set(r))
+            for k in s:
+                walk(s[k], r[k])
+
+        walk(shapes, rules)
+
+
+# ---------------------------------------------------------------------------
+# SSM oracles: chunked scans == naive step-by-step recurrence
+# ---------------------------------------------------------------------------
+
+
+def test_mamba1_scan_matches_recurrence(rng):
+    b, s, di, n = 2, 24, 8, 4
+    xdt = rng.standard_normal((b, s, di)).astype(np.float32)
+    da = -np.abs(rng.standard_normal((b, s, di, n))).astype(np.float32)
+    bm = rng.standard_normal((b, s, n)).astype(np.float32)
+    cm = rng.standard_normal((b, s, n)).astype(np.float32)
+    h0 = np.zeros((b, di, n), np.float32)
+    y, hf = S.mamba1_scan(*map(jnp.asarray, (xdt, da, bm, cm, h0)), chunk=8)
+    # naive
+    h = h0.copy()
+    ys = []
+    for t in range(s):
+        h = np.exp(da[:, t]) * h + xdt[:, t][..., None] * bm[:, t][:, None]
+        ys.append((h * cm[:, t][:, None]).sum(-1))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, atol=1e-4)
+
+
+def test_ssd_matches_recurrence(rng):
+    b, s, hh, p, n = 2, 16, 3, 4, 5
+    xdt = rng.standard_normal((b, s, hh, p)).astype(np.float32)
+    a = -np.abs(rng.standard_normal((b, s, hh))).astype(np.float32) * 0.3
+    bm = rng.standard_normal((b, s, n)).astype(np.float32)
+    cm = rng.standard_normal((b, s, n)).astype(np.float32)
+    h0 = np.zeros((b, hh, p, n), np.float32)
+    y, hf = S.ssd(*map(jnp.asarray, (xdt, a, bm, cm, h0)), chunk=4)
+    h = h0.copy()
+    ys = []
+    for t in range(s):
+        g = np.exp(a[:, t])[..., None, None]
+        h = g * h + xdt[:, t][..., None] * bm[:, t][:, None, None, :]
+        ys.append(np.einsum("bhpn,bn->bhp", h, cm[:, t]))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), h, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention equivalence (masked vs triangular vs reference)
+# ---------------------------------------------------------------------------
+
+
+def test_blocked_attention_impls_agree(rng):
+    cfg = ModelConfig(attn_q_block=16, attn_kv_block=16)
+    q = jnp.asarray(rng.standard_normal((2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 64, 2, 16)), jnp.float32)
+    masked = L.blocked_attention(q, k, v, cfg, impl="masked")
+    tri = L.blocked_attention(q, k, v, cfg, impl="triangular")
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(tri),
+                               atol=2e-5)
+    from repro.kernels import ref
+    want = ref.flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                               jnp.swapaxes(v, 1, 2), causal=True)
+    np.testing.assert_allclose(np.asarray(jnp.swapaxes(masked, 1, 2)),
+                               np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+
+def test_moe_router_mass_conservation(rng):
+    cfg = get_smoke_config("deepseek-moe-16b")
+    h2 = jnp.asarray(rng.standard_normal((32, cfg.d_model)), jnp.float32)
+    rw = jnp.asarray(rng.standard_normal((cfg.d_model, cfg.n_experts)),
+                     jnp.float32)
+    top_e, top_w, aux = L._route(h2, rw, cfg)
+    w = np.asarray(top_w)
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert (np.asarray(top_e) < cfg.n_experts).all()
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_only_overflow(rng):
+    """With generous capacity, every token gets its full top-k output."""
+    cfg0 = get_smoke_config("deepseek-moe-16b")
+    cfg = type(cfg0)(**{**cfg0.__dict__, "capacity_factor": 8.0,
+                        "param_dtype": "float32",
+                        "compute_dtype": "float32"})
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y, aux = L.moe_block(lp["moe"], x, cfg)
+    # reference: dense per-token expert mix (no capacity)
+    h = L.rms_norm(x, lp["moe"]["ln"], cfg.rms_eps)
+    h2 = h.reshape(-1, cfg.d_model)
+    top_e, top_w, _ = L._route(h2, lp["moe"]["router"], cfg)
+    wg, wu, wd = (lp["moe"][k].astype(jnp.float32) for k in
+                  ("wg", "wu", "wd"))
+    dense = jnp.zeros_like(h2)
+    for slot in range(cfg.moe_top_k):
+        e = top_e[:, slot]
+        g = jnp.einsum("td,tdf->tf", h2, wg[e])
+        u = jnp.einsum("td,tdf->tf", h2, wu[e])
+        o = jnp.einsum("tf,tfd->td", jax.nn.silu(g) * u, wd[e])
+        dense = dense + top_w[:, slot:slot + 1] * o
+    # add shared experts
+    sg = jnp.einsum("td,df->tf", h2, lp["moe"]["swg"].astype(jnp.float32))
+    su = jnp.einsum("td,df->tf", h2, lp["moe"]["swu"].astype(jnp.float32))
+    dense = dense + jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su,
+                               lp["moe"]["swd"].astype(jnp.float32))
+    want = x + dense.reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-3,
+                               rtol=1e-3)

@@ -1,0 +1,114 @@
+"""Sharding-rule invariants: rules↔shapes alignment for every arch under
+both layouts, sanitize_spec semantics (mesh-subset degrade, uneven mode,
+manual axes, vocab alias), ZeRO extension properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import LM_ARCHS, get_config, get_smoke_config
+from repro.dist import _LAYOUT, _MANUAL, _UNEVEN
+from repro.models import param_shapes, param_sharding_rules
+from repro.train.optimizer import zero_sharding_entry
+
+
+def _walk(shapes, rules, fn):
+    if isinstance(shapes, tuple):
+        fn(shapes, rules)
+        return
+    assert set(shapes) == set(rules)
+    for k in shapes:
+        _walk(shapes[k], rules[k], fn)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("layout", ["tp", "fsdp"])
+def test_rules_align_with_shapes_all_layouts(arch, layout):
+    cfg = get_config(arch)  # FULL configs — rules are shape-only
+    tok = _LAYOUT.set(layout)
+    try:
+        rules = param_sharding_rules(cfg)
+    finally:
+        _LAYOUT.reset(tok)
+    shapes = param_shapes(cfg)
+
+    def check(shp, rule):
+        assert len(rule) == len(shp), (shp, rule)
+        for entry in rule:
+            assert entry is None or isinstance(entry, (str, tuple))
+
+    _walk(shapes, rules, check)
+
+
+def test_fsdp_rules_shard_every_big_param():
+    cfg = get_config("command-r-35b")
+    tok = _LAYOUT.set("fsdp")
+    try:
+        rules = param_sharding_rules(cfg)
+    finally:
+        _LAYOUT.reset(tok)
+    shapes = param_shapes(cfg)
+
+    def check(shp, rule):
+        n = int(np.prod(shp))
+        if n >= 1 << 20:  # every big tensor must shard over something
+            assert any(e is not None for e in rule), (shp, rule)
+
+    _walk(shapes, rules, check)
+
+
+def test_zero_sharding_entry_properties():
+    # extends with data on the largest unsharded dim
+    assert zero_sharding_entry((None, "model", None), (48, 64, 128)) \
+        == (None, "model", "data")
+    # never double-shards a tensor already using data
+    spec = zero_sharding_entry(("data", None), (16, 8))
+    assert spec == ("data", None)
+    # scalar-ish: unchanged
+    assert zero_sharding_entry((None,), (7,)) in ((None,), ("data",))
+
+
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_zero_entry_never_invents_axes(dims):
+    spec = zero_sharding_entry(tuple(None for _ in dims), tuple(dims))
+    assert len(spec) == len(dims)
+    for e in spec:
+        assert e in (None, "data") or isinstance(e, tuple)
+
+
+def test_sanitize_subset_and_uneven(monkeypatch):
+    """Pure-python behaviours of sanitize_spec via a fake mesh."""
+    import repro.dist as dist
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 8}
+        axis_names = ("data", "model")
+        empty = False
+
+    monkeypatch.setattr(dist, "current_mesh", lambda: FakeMesh())
+    # subset degrade: pod missing → ("pod","data") → ("data",)
+    assert dist.sanitize_spec((16, 8), (("pod", "data"), None))[0] == "data"
+    # divisibility drop
+    assert dist.sanitize_spec((6, 8), ("data", None))[0] is None
+    # uneven mode keeps dim >= axis size
+    tok = _UNEVEN.set(True)
+    try:
+        assert dist.sanitize_spec((6, 8), ("data", None))[0] == "data"
+        assert dist.sanitize_spec((3, 8), ("data", None))[0] is None
+    finally:
+        _UNEVEN.reset(tok)
+    # manual axes invisible
+    tok = _MANUAL.set(frozenset({"model"}))
+    try:
+        assert dist.sanitize_spec((8, 8), (None, "model"))[1] is None
+    finally:
+        _MANUAL.reset(tok)
+    # vocab alias resolves to model in tp...
+    assert dist.sanitize_spec((64, 8), ("vocab", None))[0] == "model"
+    # ...and survives fsdp while bare model drops
+    tok = _LAYOUT.set("fsdp")
+    try:
+        assert dist.sanitize_spec((64, 8), ("vocab", None))[0] == "model"
+        assert dist.sanitize_spec((64, 8), ("model", None))[0] is None
+    finally:
+        _LAYOUT.reset(tok)

@@ -1,0 +1,70 @@
+"""Property-based tests (hypothesis) for the bit/hash/segment substrate."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro import utils
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+@SET
+def test_pack_unpack_roundtrip(words, seed):
+    rng = np.random.default_rng(seed)
+    d = words * 32
+    bits = rng.random((3, d)) < 0.3
+    packed = utils.pack_bits(jnp.asarray(bits))
+    back = utils.unpack_bits(packed, d)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_popcount_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**32, size=64, dtype=np.uint32)
+    ours = np.asarray(utils.popcount(jnp.asarray(x)))
+    theirs = np.array([bin(v).count("1") for v in x])
+    np.testing.assert_array_equal(ours, theirs)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_mix32_is_permutation_like(seed):
+    # injective on a small domain: no collisions among 4096 consecutive ints
+    x = jnp.arange(4096, dtype=jnp.uint32) + jnp.uint32(seed % 2**20)
+    h = np.asarray(utils.mix32(x))
+    assert len(np.unique(h)) == 4096
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=50))
+@SET
+def test_run_lengths_and_rank(keys):
+    keys = np.sort(np.asarray(keys, np.int32))
+    seg, lens = utils.run_lengths(jnp.asarray(keys))
+    rank = utils.rank_in_run(jnp.asarray(keys))
+    seg, lens, rank = map(np.asarray, (seg, lens, rank))
+    # check against pure-python group-by
+    from itertools import groupby
+    expect_lens, expect_rank, expect_seg = [], [], []
+    for si, (_, grp) in enumerate(groupby(keys)):
+        grp = list(grp)
+        expect_lens += [len(grp)] * len(grp)
+        expect_rank += list(range(len(grp)))
+        expect_seg += [si] * len(grp)
+    np.testing.assert_array_equal(lens, expect_lens)
+    np.testing.assert_array_equal(rank, expect_rank)
+    np.testing.assert_array_equal(seg, expect_seg)
+
+
+def test_hash_combine_order_sensitive():
+    a = jnp.uint32(123)
+    b = jnp.uint32(456)
+    assert int(utils.hash_combine(a, b)) != int(utils.hash_combine(b, a))
+
+
+def test_tree_bytes():
+    tree = {"a": np.zeros((4, 4), np.float32), "b": np.zeros(3, np.int8)}
+    assert utils.tree_bytes(tree) == 64 + 3
