@@ -1,0 +1,105 @@
+"""Streaming vs batch search: incremental cost per chunk at equal N.
+
+Measures (a) steady-state ``StreamingIndex`` insert+query latency per
+block, (b) end-to-end detector chunk throughput, and (c) offline
+``lsh.search`` wall time over the same N fingerprints — the quantity the
+streaming path amortizes: arrival of one new chunk costs O(chunk) against
+the index instead of an O(N) re-sort of history.
+
+Emits csv lines plus a ``BENCH_stream.json`` trajectory point.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (bench_lsh_config, csv_line,
+                               station_fingerprints, timed)
+from repro.core import fingerprint as F
+from repro.core import lsh as L
+from repro.core.detect import DetectConfig
+from repro.stream import StreamingDetector, StreamConfig
+from repro.stream import index as SI
+
+
+def main():
+    ds, fcfg, bits, packed = station_fingerprints(station=1)
+    n = bits.shape[0]
+    lcfg = bench_lsh_config(fcfg)
+    mp = L.hash_mappings(fcfg.fp_dim, lcfg)
+    sigs = L.signatures(bits, mp, lcfg)
+
+    # --- offline: full sort-based search at N (what a re-run would pay)
+    t_search, _ = timed(lambda: L.candidate_pairs(sigs, lcfg).valid.sum())
+    csv_line("stream.batch_search_at_N", t_search * 1e6, f"N={n}")
+
+    # --- streaming index: steady-state insert+query per block
+    block = 64
+    state = SI.init_index(lcfg, SI.StreamIndexConfig(n_buckets=2048,
+                                                     bucket_cap=8))
+    ids0 = jnp.arange(block, dtype=jnp.int32)
+    # preload the index to ~N resident entries, then time one more block
+    for i in range(0, (n // block) * block, block):
+        state = SI.insert(state, sigs[i:i + block], ids0 + i, lcfg)
+    sb = sigs[:block]
+    holder = {"state": state, "next": n}
+
+    def insert_query():
+        # rolling steady state (insert donates its input buffers)
+        ids = ids0 + holder["next"]
+        holder["next"] += block
+        holder["state"] = SI.insert(holder["state"], sb, ids, lcfg)
+        return SI.query(holder["state"], sb, ids, lcfg).valid.sum()
+
+    t_iq, _ = timed(insert_query)
+    csv_line("stream.insert_query_block", t_iq * 1e6,
+             f"block={block} resident≈{n} "
+             f"speedup_vs_resort={t_search / max(t_iq, 1e-12):.1f}x")
+
+    # --- end-to-end detector chunk throughput (incl. fingerprinting)
+    cfg = DetectConfig(fingerprint=fcfg, lsh=lcfg)
+    det = StreamingDetector(
+        cfg, StreamConfig(block_fingerprints=block,
+                          index=SI.StreamIndexConfig(n_buckets=2048,
+                                                     bucket_cap=8),
+                          stats_warmup_blocks=2),
+        n_stations=1)
+    wf = ds.waveforms[1]
+    chunks = np.array_split(wf, 16)
+    for c in chunks[:4]:          # warm up traces + freeze stats
+        det.push(c)
+    t0 = __import__("time").perf_counter
+    start = t0()
+    for c in chunks[4:]:
+        det.push(c)
+    wall = t0() - start
+    ing = det.stations[0].stats.summary()
+    n_done = len(chunks) - 4
+    csv_line("stream.detector_chunk", wall / n_done * 1e6,
+             f"chunks_per_s={n_done / max(wall, 1e-9):.1f} "
+             f"samples_per_s={sum(c.size for c in chunks[4:]) / max(wall, 1e-9):.0f}")
+
+    point = {
+        "n_fingerprints": int(n),
+        "batch_search_us": round(t_search * 1e6, 1),
+        "insert_query_block_us": round(t_iq * 1e6, 1),
+        "block": block,
+        "amortized_speedup": round(t_search / max(t_iq, 1e-12), 2),
+        "detector_chunks_per_s": round(n_done / max(wall, 1e-9), 2),
+        "detector_samples_per_s": round(
+            sum(c.size for c in chunks[4:]) / max(wall, 1e-9), 1),
+        "ingest": ing,
+    }
+    out = os.environ.get("BENCH_OUT_DIR", ".")
+    with open(os.path.join(out, "BENCH_stream.json"), "w") as f:
+        json.dump(point, f, indent=2)
+    print(f"# wrote {os.path.join(out, 'BENCH_stream.json')}")
+    return point
+
+
+if __name__ == "__main__":
+    main()

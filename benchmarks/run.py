@@ -16,7 +16,7 @@ def main() -> None:
     from benchmarks import (bench_alternatives, bench_bandpass,
                             bench_factor_analysis, bench_lsh_params,
                             bench_mad_sampling, bench_occurrence_filter,
-                            bench_partitions, bench_scaling)
+                            bench_partitions, bench_scaling, bench_stream)
     suites = [
         ("factor_analysis(Fig10/Tab5)", bench_factor_analysis.main),
         ("occurrence_filter(Tab1)", bench_occurrence_filter.main),
@@ -26,6 +26,7 @@ def main() -> None:
         ("scaling(Fig14)", bench_scaling.main),
         ("mad_sampling(Tab6)", bench_mad_sampling.main),
         ("alternatives(Tab2)", bench_alternatives.main),
+        ("stream(incremental_index)", bench_stream.main),
     ]
     failures = 0
     for name, fn in suites:

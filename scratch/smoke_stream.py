@@ -1,0 +1,50 @@
+import numpy as np, jax, jax.numpy as jnp, time
+from repro.core import lsh as L
+from repro.core import fingerprint as F
+from repro.core.detect import DetectConfig
+from repro.core.synth import SynthConfig, make_dataset
+from repro.configs.fast_seismic import smoke_config
+from repro.stream import StreamingDetector, StreamConfig, stream_step, block_coeffs
+from repro.stream import index as _; from repro.stream.index import init_index, insert, query, StreamIndexConfig, index_stats
+
+cfg = smoke_config()
+fcfg, lcfg = cfg.fingerprint, cfg.lsh
+print("fp window", fcfg.window_samples, "lag", fcfg.lag_samples, "halo", fcfg.halo_samples)
+
+ds = make_dataset(SynthConfig(duration_s=600.0, n_stations=1, n_sources=2,
+                              events_per_source=5, event_snr=3.0, seed=3))
+wf = ds.waveforms[0]
+print("samples", wf.size, "offline n_fp", fcfg.n_fingerprints(wf.size))
+
+# offline reference
+bits, packed = F.fingerprints_from_waveform(jnp.asarray(wf), fcfg,
+                                            key=jax.random.PRNGKey(0))
+pairs_off, stats_off = L.search(bits, lcfg)
+v = np.asarray(pairs_off.valid)
+off = set(zip(np.asarray(pairs_off.idx1)[v].tolist(),
+              np.asarray(pairs_off.idx2)[v].tolist()))
+print("offline pairs", len(off), {k: (float(v) if hasattr(v,'item') else v) for k,v in list(stats_off.items())[:2]})
+
+# streaming with offline stats handed in (pure-machinery parity first)
+coeffs_all = F.coeffs_from_waveform(jnp.asarray(wf), fcfg)
+med_mad = F.mad_stats(coeffs_all, 1.0, jax.random.PRNGKey(0))
+scfg = StreamConfig(block_fingerprints=64,
+                    index=StreamIndexConfig(n_buckets=2048, bucket_cap=8),
+                    stats_warmup_blocks=2)
+det = StreamingDetector(cfg, scfg, n_stations=1,
+                        med_mad=(np.asarray(med_mad[0]), np.asarray(med_mad[1])))
+n_chunks = 10
+for c in np.array_split(wf, n_chunks):
+    det.push(c)
+st = det.stations[0]
+events, pairs_s, fstats = st.finalize()
+vs = np.asarray(pairs_s.valid)
+stream = set(zip(np.asarray(pairs_s.idx1)[vs].tolist(),
+                 np.asarray(pairs_s.idx2)[vs].tolist()))
+print("stream pairs", len(stream), "fstats", fstats)
+print("stream n_fp", st.ring.next_fp)
+common = off & stream
+print("recovered %.3f" % (len(common) / max(len(off), 1)),
+      "spurious", len(stream - off))
+print(index_stats(st.state))
+print("ingest", st.stats.summary())

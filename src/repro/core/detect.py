@@ -154,6 +154,8 @@ def detect_step_sharded(waveforms: jax.Array, med: jax.Array,
 
     from jax.sharding import PartitionSpec as P
 
+    from repro import dist
+
     all_axes = tuple(a for a in ("pod", "data", "model")
                      if a in mesh.shape)
     step = jax.vmap(functools.partial(detect_step, cfg=cfg),
@@ -162,7 +164,7 @@ def detect_step_sharded(waveforms: jax.Array, med: jax.Array,
     def per_shard(wf, md, md2):
         return step(wf, md, md2)
 
-    return jax.shard_map(
+    return dist.shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(all_axes, None), P(), P()),
         out_specs=P(all_axes),

@@ -89,6 +89,17 @@ class FingerprintConfig:
         """Adjacent fingerprints sharing samples (self-match exclusion)."""
         return self.img_time // self.img_hop
 
+    @property
+    def halo_samples(self) -> int:
+        """Samples a chunk boundary must overlap so that fingerprints are
+        sample-exact across a chunked/streaming split (window minus lag)."""
+        return self.window_samples - self.lag_samples
+
+    def block_samples(self, n_fingerprints: int) -> int:
+        """Samples spanned by a block of ``n_fingerprints`` consecutive
+        fingerprints (the streaming ingest unit)."""
+        return (n_fingerprints - 1) * self.lag_samples + self.window_samples
+
 
 # ---------------------------------------------------------------------------
 # framing + optional time-domain bandpass
@@ -218,6 +229,27 @@ def topk_binarize(z: jax.Array, cfg: FingerprintConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def coeffs_from_waveform(x: jax.Array, cfg: FingerprintConfig) -> jax.Array:
+    """Waveform (T,) → raw Haar coefficients (N, n_coeff).
+
+    The normalization-free front half of the pipeline; streaming ingest
+    calls this per block to feed its running median/MAD estimator before
+    binarization (the §5.2 two-pass structure made incremental).
+    """
+    spec = spectrogram(x, cfg)
+    imgs = spectral_images(spec, cfg)
+    return wavelet_coeffs(imgs, cfg)
+
+
+def binarize_coeffs(coeffs: jax.Array, cfg: FingerprintConfig,
+                    med_mad: tuple[jax.Array, jax.Array]
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(N, n_coeff) coefficients + (med, mad) → (bits, packed) fingerprints."""
+    z = mad_normalize(coeffs, *med_mad)
+    bits = topk_binarize(z, cfg)
+    return bits, pack_bits(bits)
+
+
 def fingerprints_from_waveform(
     x: jax.Array, cfg: FingerprintConfig, *, key: jax.Array | None = None,
     med_mad: tuple[jax.Array, jax.Array] | None = None,
@@ -229,11 +261,7 @@ def fingerprints_from_waveform(
     """
     if key is None:
         key = jax.random.PRNGKey(0)
-    spec = spectrogram(x, cfg)
-    imgs = spectral_images(spec, cfg)
-    coeffs = wavelet_coeffs(imgs, cfg)
+    coeffs = coeffs_from_waveform(x, cfg)
     if med_mad is None:
         med_mad = mad_stats(coeffs, cfg.mad_sample_rate, key)
-    z = mad_normalize(coeffs, *med_mad)
-    bits = topk_binarize(z, cfg)
-    return bits, pack_bits(bits)
+    return binarize_coeffs(coeffs, cfg, med_mad)

@@ -146,8 +146,8 @@ def _pairs_one_table(keys: jax.Array, cap: int) -> tuple[jax.Array, jax.Array]:
     return lo, hi
 
 
-def _count_pair_multiplicity(lo: jax.Array, hi: jax.Array,
-                             n_matches: int) -> Pairs:
+def count_pair_multiplicity(lo: jax.Array, hi: jax.Array,
+                            n_matches: int) -> Pairs:
     """Sort all (lo, hi) pairs; count duplicates (= #tables matched)."""
     p = lo.shape[0]
     lo_s, hi_s = jax.lax.sort((lo, hi), num_keys=2)
@@ -161,19 +161,30 @@ def _count_pair_multiplicity(lo: jax.Array, hi: jax.Array,
                  valid=valid)
 
 
+def finalize_pairs(lo: jax.Array, hi: jax.Array, cfg: LSHConfig) -> Pairs:
+    """Canonical endpoint streams → thresholded Pairs (shared batch/stream).
+
+    Applies the self-match exclusion (``min_dt``) and the m-of-t collision
+    threshold (``n_matches``). ``lo``/``hi`` are flat per-table emission
+    streams with INVALID in masked slots; a pair's similarity is its
+    multiplicity across the streams (= #tables in which it collided).
+    Both the offline sort-based search and the streaming index query end
+    in exactly this reduction.
+    """
+    if cfg.min_dt > 0:  # self-match exclusion
+        ok = (hi - lo) >= cfg.min_dt
+        lo = jnp.where(ok, lo, INVALID)
+        hi = jnp.where(ok, hi, INVALID)
+    return count_pair_multiplicity(lo, hi, cfg.n_matches)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def candidate_pairs(sigs: jax.Array, cfg: LSHConfig) -> Pairs:
     """(N, t) signatures → Pairs of size t * bucket_cap * N (masked)."""
     n, t = sigs.shape
     lo, hi = jax.vmap(lambda k: _pairs_one_table(k, cfg.bucket_cap),
                       in_axes=1)(sigs)  # (t, cap*N) each
-    lo = lo.reshape(-1)
-    hi = hi.reshape(-1)
-    if cfg.min_dt > 0:  # self-match exclusion
-        ok = (hi - lo) >= cfg.min_dt
-        lo = jnp.where(ok, lo, INVALID)
-        hi = jnp.where(ok, hi, INVALID)
-    return _count_pair_multiplicity(lo, hi, cfg.n_matches)
+    return finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
 
 
 # ---------------------------------------------------------------------------

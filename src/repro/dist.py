@@ -30,6 +30,38 @@ _LAYOUT: contextvars.ContextVar[str] = contextvars.ContextVar(
     "repro_layout", default="tp")
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    """Version-portable ``shard_map`` (new top-level API vs. experimental).
+
+    jax ≥ 0.5 exposes ``jax.shard_map`` with ``axis_names`` (the manual
+    subset) and ``check_vma``; jax 0.4.x only has
+    ``jax.experimental.shard_map.shard_map`` with the complementary
+    ``auto`` set and ``check_rep``. Call sites use the new-style kwargs.
+    """
+    if hasattr(jax, "shard_map"):
+        import inspect
+        sig = inspect.signature(jax.shard_map).parameters
+        kw = {}
+        if "check_vma" in sig:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in sig:       # mid-band: top-level API, old kwarg
+            kw["check_rep"] = check_vma
+        if axis_names is not None:
+            if "axis_names" in sig:
+                kw["axis_names"] = set(axis_names)
+            elif "auto" in sig:
+                kw["auto"] = frozenset(mesh.axis_names) \
+                    - frozenset(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 @contextlib.contextmanager
 def layout(mode: str):
     assert mode in ("tp", "fsdp"), mode
@@ -51,6 +83,11 @@ def manual_axes(axes):
         yield
     finally:
         _MANUAL.reset(tok)
+
+
+def in_manual_region() -> bool:
+    """True while tracing inside a partial-manual shard_map region."""
+    return bool(_MANUAL.get())
 
 
 @contextlib.contextmanager

@@ -1,0 +1,224 @@
+"""Batched similarity-serving over a shared streaming LSH index.
+
+The detection-side sibling of ``launch/serve.py``: a ``ServeEngine``-shaped
+slot/refill loop where requests are *query windows* of raw waveform
+("when did something like this happen?") answered against a shared
+``StreamingIndex`` built by continuous ingestion. Each request's window is
+split into fingerprint blocks; every tick runs one jitted batched step
+that fingerprints + queries one block per active slot (read-only — serving
+never mutates the index), so concurrent requests share device dispatches
+exactly like decode slots share a decode step.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fast_seismic import smoke_config, stream_smoke_config
+from repro.core import fingerprint as fp_mod
+from repro.core import lsh as lsh_mod
+from repro.core.detect import DetectConfig
+from repro.core.fingerprint import FingerprintConfig
+from repro.core.lsh import INVALID, LSHConfig
+from repro.core.synth import SynthConfig, make_dataset
+from repro.stream import index as index_mod
+from repro.stream.engine import StreamingDetector, block_coeffs
+from repro.stream.index import IndexState
+from repro.stream.ingest import StreamConfig
+
+
+@dataclass
+class QueryRequest:
+    rid: int
+    window: np.ndarray            # raw waveform samples
+    matches: list = field(default_factory=list)  # (corpus_fp_id, sim)
+    ticks: int = 0
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "top_k"))
+def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
+                mad: jax.Array, mappings: jax.Array, slot_valid: jax.Array,
+                fcfg: FingerprintConfig, lcfg: LSHConfig, top_k: int = 32):
+    """(S, block_samples) slot blocks → per-slot (ids, sims) match tables.
+
+    Query fingerprints get ids beyond any corpus id, so the index's
+    id-ordered emission returns every stored partner; invalid slots get
+    filler signatures and match nothing. Each slot returns at most
+    ``top_k`` matches per tick (highest collision counts first).
+    """
+    def one_slot(block, valid):
+        coeffs = fp_mod.coeffs_from_waveform(block, fcfg)
+        bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
+        n = bits.shape[0]
+        sigs = lsh_mod.signatures(bits, mappings, lcfg, valid=valid)
+        # distinct ids above every corpus id → each window fingerprint
+        # pairs with all of its stored partners
+        qids = jnp.int32(INVALID - 1 - n) + jnp.arange(n, dtype=jnp.int32)
+        pairs = index_mod.query(state, sigs, qids, lcfg)
+        # partner ids + collision counts, densified to a fixed top-k
+        sims = jnp.where(pairs.valid, pairs.sim, 0)
+        top = jax.lax.top_k(sims, k=min(top_k, sims.shape[0]))[1]
+        return pairs.idx1[top], sims[top]
+
+    return jax.vmap(one_slot)(blocks, slot_valid)
+
+
+class ServeDetectEngine:
+    """Static-slot continuous serving against a shared streaming index."""
+
+    def __init__(self, cfg: DetectConfig, scfg: StreamConfig,
+                 state: IndexState, med_mad, n_slots: int = 4,
+                 top_k: int = 32):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.state = state
+        self.med = jnp.asarray(med_mad[0])
+        self.mad = jnp.asarray(med_mad[1])
+        self.mappings = lsh_mod.hash_mappings(cfg.fingerprint.fp_dim,
+                                              cfg.lsh)
+        self.n_slots = n_slots
+        self.top_k = top_k
+        self.block_samples = cfg.fingerprint.block_samples(
+            scfg.block_fingerprints)
+        self.slot_req: list[QueryRequest | None] = [None] * n_slots
+        self.slot_blocks: list[list[np.ndarray]] = [[] for _ in
+                                                    range(n_slots)]
+        self.ticks = 0
+
+    def _split_blocks(self, window: np.ndarray
+                      ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Fixed-size (block, fp_valid_mask) covering the window.
+
+        Tails are zero-padded; the mask marks fingerprints whose analysis
+        window lies fully inside real samples, so padding never queries.
+        """
+        fcfg = self.cfg.fingerprint
+        n_fp = self.scfg.block_fingerprints
+        bs, adv = self.block_samples, n_fp * fcfg.lag_samples
+        blocks, start = [], 0
+        while start == 0 or start + fcfg.window_samples <= window.size:
+            blk = np.zeros(bs, np.float32)
+            seg = window[start: start + bs]
+            blk[: seg.size] = seg
+            avail = window.size - start
+            n_valid = max(0, min(
+                n_fp, (avail - fcfg.window_samples) // fcfg.lag_samples + 1))
+            blocks.append((blk, np.arange(n_fp) < n_valid))
+            start += adv
+        return blocks
+
+    def run(self, requests: list[QueryRequest]) -> dict:
+        queue = list(requests)
+        for r in queue:
+            r.t_submit = time.perf_counter()
+        active = lambda: any(r is not None for r in self.slot_req)
+        t0 = time.perf_counter()
+        while queue or active():
+            for slot in range(self.n_slots):      # refill empty slots
+                if self.slot_req[slot] is None and queue:
+                    req = queue.pop(0)
+                    self.slot_req[slot] = req
+                    self.slot_blocks[slot] = self._split_blocks(req.window)
+            n_fp = self.scfg.block_fingerprints
+            batch = np.stack([
+                self.slot_blocks[s][0][0] if self.slot_req[s] is not None
+                else np.zeros(self.block_samples, np.float32)
+                for s in range(self.n_slots)])
+            slot_valid = jnp.asarray(np.stack([
+                self.slot_blocks[s][0][1] if self.slot_req[s] is not None
+                else np.zeros(n_fp, bool)
+                for s in range(self.n_slots)]))
+            ids, sims = _serve_step(
+                self.state, jnp.asarray(batch), self.med, self.mad,
+                self.mappings, slot_valid, self.cfg.fingerprint,
+                self.cfg.lsh, self.top_k)
+            self.ticks += 1
+            ids_h, sims_h = np.asarray(ids), np.asarray(sims)
+            for slot in range(self.n_slots):
+                req = self.slot_req[slot]
+                if req is None:
+                    continue
+                keep = sims_h[slot] > 0
+                req.matches.extend(zip(ids_h[slot][keep].tolist(),
+                                       sims_h[slot][keep].tolist()))
+                req.ticks += 1
+                self.slot_blocks[slot].pop(0)
+                if not self.slot_blocks[slot]:
+                    req.done = True
+                    req.t_done = time.perf_counter()
+                    self.slot_req[slot] = None
+        wall = time.perf_counter() - t0
+        lats = [r.latency_s for r in requests]
+        return {
+            "requests": len(requests),
+            "ticks": self.ticks,
+            "wall_s": round(wall, 3),
+            "requests_per_s": round(len(requests) / max(wall, 1e-9), 1),
+            "latency_ms_p50": round(float(np.percentile(lats, 50)) * 1e3, 1),
+            "latency_ms_p95": round(float(np.percentile(lats, 95)) * 1e3, 1),
+            "hit_requests": sum(1 for r in requests if r.matches),
+        }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--duration-s", type=float, default=600.0)
+    ap.add_argument("--window-s", type=float, default=20.0)
+    args = ap.parse_args(argv)
+
+    cfg, scfg = smoke_config(), stream_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=args.duration_s, n_stations=1,
+                                  n_sources=2, events_per_source=5,
+                                  event_snr=3.0, seed=3))
+    wf = ds.waveforms[0]
+
+    # build the corpus index by streaming the station in
+    det = StreamingDetector(cfg, scfg, n_stations=1)
+    for chunk in np.array_split(wf, 16):
+        det.push(chunk)
+    st = det.stations[0]
+    st.flush()
+    assert st.stats_frozen, "ingest too short to freeze MAD statistics"
+    med_mad = (np.asarray(st.med_mad[0]), np.asarray(st.med_mad[1]))
+
+    # query windows centered on known event arrivals (+ random controls)
+    rng = np.random.default_rng(0)
+    win = int(args.window_s * cfg.fingerprint.fs)
+    reqs = []
+    for i in range(args.requests):
+        if i < len(ds.event_times):
+            t0 = int(ds.arrival_time(i, 0) * cfg.fingerprint.fs)
+        else:
+            t0 = int(rng.integers(0, wf.size - win))
+        lo = max(0, min(t0, wf.size - win))
+        reqs.append(QueryRequest(rid=i, window=wf[lo: lo + win]))
+
+    eng = ServeDetectEngine(cfg, scfg, st.state, med_mad,
+                            n_slots=args.slots)
+    stats = eng.run(reqs)
+    assert all(r.done for r in reqs)
+    print("RESULT " + json.dumps(stats))
+    return stats
+
+
+if __name__ == "__main__":
+    main()

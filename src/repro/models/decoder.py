@@ -265,6 +265,29 @@ def _block_body(cfg: ModelConfig, impl: str):
     return body
 
 
+def _scan_blocks(body, carry, xs):
+    """``lax.scan`` over stacked layer params, unrolled in manual regions.
+
+    jaxlib 0.4.x's SPMD partitioner aborts (manual-subgroup check) on a
+    scan whose xs/closure carry partial-manual shardings — the per-step
+    dynamic gathers lose the subgroup annotation. A Python unroll turns
+    them into static slices, which partition fine; outside manual regions
+    this is the usual depth-invariant scan.
+    """
+    if not dist.in_manual_region():
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
 def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
     x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
     if cfg.frontend == "patch" and "patch_embeds" in batch:
@@ -294,7 +317,7 @@ def forward(params: dict, batch: dict, cfg: ModelConfig,
         aux = aux0
         for g in range(n_groups):
             grp = regroup(stacked, g * k, (g + 1) * k)
-            (x, aux), _ = jax.lax.scan(body, (x, aux), grp)
+            (x, aux), _ = _scan_blocks(body, (x, aux), grp)
             pos = jnp.arange(x.shape[1])
             x = L.attention_block(params["shared_attn"], x, cfg, pos,
                                   impl=impl)
@@ -302,9 +325,9 @@ def forward(params: dict, batch: dict, cfg: ModelConfig,
                 x = L.mlp_block(params["shared_mlp"], x, cfg)
         if tail:
             grp = regroup(stacked, n_groups * k, cfg.n_layers)
-            (x, aux), _ = jax.lax.scan(body, (x, aux), grp)
+            (x, aux), _ = _scan_blocks(body, (x, aux), grp)
     else:
-        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+        (x, aux), _ = _scan_blocks(body, (x, aux0), params["layers"])
 
     x = L.rms_norm(x, params["final_ln"], cfg.rms_eps)
     return x, aux
@@ -321,30 +344,49 @@ def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
     sc = min(cfg.loss_seq_chunk, s)
     ns = s // sc
 
-    @functools.partial(jax.checkpoint, prevent_cse=False)
-    def chunk_step(carry, i):
-        # rematted: the (B, sc, V) logits are recomputed in backward
-        # instead of being stored per chunk (DESIGN.md §4 memory note)
-        tot, cnt = carry
-        h = jax.lax.dynamic_slice_in_dim(hidden, i * sc, sc, axis=1)
+    def _chunk_loss(h, y, m):
+        # rematted (by both wrappers below): the (B, sc, V) logits are
+        # recomputed in backward instead of being stored per chunk
+        # (DESIGN.md §4 memory note)
         # pin the loss layout: batch over pod×data only, vocab over model —
         # under FSDP the hidden arrives batch-sharded over the model axis
         # too, and without this the partitioner REPLICATES the CE matmul
         h = dist.shard(h, ("pod", "data"), None, None)
-        y = jax.lax.dynamic_slice_in_dim(labels, i * sc, sc, axis=1)
-        m = jax.lax.dynamic_slice_in_dim(mask, i * sc, sc, axis=1)
         logits = jnp.einsum("bsd,dv->bsv", h, w_out,
                             preferred_element_type=jnp.float32)
         logits = dist.shard(logits, ("pod", "data"), None, "vocab")
         lse = jax.nn.logsumexp(logits, axis=-1)
         picked = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
         nll = (lse - picked) * m
-        return (tot + nll.sum(), cnt + m.sum()), None
+        return nll.sum(), m.sum()
 
-    (totals, counts), _ = jax.lax.scan(
-        chunk_step,
-        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
-        jnp.arange(ns))
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(carry, i):
+        # slices INSIDE the remat: the scan stores only (carry, i) per
+        # step, not a second full copy of hidden/labels/mask
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * sc, sc, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * sc, sc, axis=1)
+        m = jax.lax.dynamic_slice_in_dim(mask, i * sc, sc, axis=1)
+        t, c = _chunk_loss(h, y, m)
+        return (tot + t, cnt + c), None
+
+    zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if dist.in_manual_region():
+        # static chunk starts: traced-start dynamic-slices inside a scan
+        # abort jaxlib 0.4.x's partitioner in partial-manual regions (see
+        # _scan_blocks)
+        ckpt_loss = functools.partial(jax.checkpoint,
+                                      prevent_cse=False)(_chunk_loss)
+        totals, counts = zero
+        for i in range(ns):
+            t, c = ckpt_loss(
+                jax.lax.slice_in_dim(hidden, i * sc, (i + 1) * sc, axis=1),
+                jax.lax.slice_in_dim(labels, i * sc, (i + 1) * sc, axis=1),
+                jax.lax.slice_in_dim(mask, i * sc, (i + 1) * sc, axis=1))
+            totals, counts = totals + t, counts + c
+    else:
+        (totals, counts), _ = jax.lax.scan(chunk_step, zero, jnp.arange(ns))
     loss = totals / jnp.maximum(counts, 1.0)
     total = loss + cfg.router_aux_coef * aux
     return total, {"ce": loss, "aux": aux, "tokens": counts}

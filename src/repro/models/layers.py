@@ -120,13 +120,15 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     kT = dist.shard_batch(kT, "model", None, None)
     vT = dist.shard_batch(vT, "model", None, None)
 
+    # jaxlib 0.4.x partial-manual regions cannot partition scans whose
+    # bodies gather region inputs with traced starts (see decoder.
+    # _scan_blocks) — unroll both loops there; static slices are fine.
+    unroll = dist.in_manual_region()
+
     def q_block(iq, qblk):
         # qblk: (B, Hq, bq, hd)
-        @functools.partial(jax.checkpoint, prevent_cse=False)
-        def kv_step(carry, ik):
+        def _kv_math(carry, kblk, vblk, ik):
             acc, m, l = carry
-            kblk = jax.lax.dynamic_slice_in_dim(kT, ik * bk, bk, axis=2)
-            vblk = jax.lax.dynamic_slice_in_dim(vT, ik * bk, bk, axis=2)
             qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             mask = (ki <= qi) if causal else jnp.ones((bq, bk), bool)
@@ -138,21 +140,43 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * alpha[..., None] + pv
-            return (acc_new, m_new, l_new), None
+            return acc_new, m_new, l_new
+
+        kv_math = functools.partial(jax.checkpoint,
+                                    prevent_cse=False)(_kv_math)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, ik):
+            # slices INSIDE the remat: the kv scan stores only (carry, ik)
+            # per step, never a second full copy of kT/vT
+            kblk = jax.lax.dynamic_slice_in_dim(kT, ik * bk, bk, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vT, ik * bk, bk, axis=2)
+            return _kv_math(carry, kblk, vblk, ik), None
 
         acc0 = jnp.zeros((b, hq, bq, hd), jnp.float32)
         m0 = jnp.full((b, hq, bq), -1e30, jnp.float32)
         l0 = jnp.zeros((b, hq, bq), jnp.float32)
         if impl == "triangular" and causal:
             n_allowed = int(iq) * bq // bk + 1  # static per unrolled block
-            ks = jnp.arange(n_allowed)
         else:
-            ks = jnp.arange(nk)
-        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), ks)
+            n_allowed = nk
+        if unroll:
+            carry = (acc0, m0, l0)
+            for ik in range(n_allowed):
+                kblk = jax.lax.slice_in_dim(kT, ik * bk, (ik + 1) * bk,
+                                            axis=2)
+                vblk = jax.lax.slice_in_dim(vT, ik * bk, (ik + 1) * bk,
+                                            axis=2)
+                carry = kv_math(carry, kblk, vblk, jnp.int32(ik))
+            acc, m, l = carry
+        else:
+            (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          jnp.arange(n_allowed))
         return (acc / jnp.maximum(l[..., None], 1e-20)).astype(q.dtype)
 
-    if impl == "triangular" and causal:
-        outs = [q_block(i, jax.lax.dynamic_slice_in_dim(qT, i * bq, bq, 2))
+    if (impl == "triangular" and causal) or unroll:
+        outs = [q_block(i, jax.lax.slice_in_dim(qT, i * bq, (i + 1) * bq,
+                                                axis=2))
                 for i in range(nq)]
         out = jnp.concatenate(outs, axis=2)
     else:
@@ -416,7 +440,7 @@ def moe_block(params: dict, x: jax.Array, cfg: ModelConfig):
             return y, aux
 
         spec_h = P(ba if ba else None, None)
-        out = jax.shard_map(
+        out = dist.shard_map(
             per_shard, mesh=mesh,
             in_specs=(spec_h, P(None, None), P("model", None, None),
                       P("model", None, None), P("model", None, None)),

@@ -1,0 +1,38 @@
+"""Streaming detection subsystem: FAST as a continuous service.
+
+The paper's pipeline is strictly batch — fingerprint everything, sort
+everything, then search — so a decade of history is re-sorted whenever one
+new week of data arrives (§6.4 exists to make that giant sort fit in
+memory). This package re-expresses detection as *query-against-index* over
+an unbounded stream:
+
+``ingest``   ``WaveformRing`` turns arbitrary-length chunks into fixed
+             fingerprint blocks with the exact STFT halo across
+             boundaries, and ``StreamingMAD`` keeps the §5.2 median/MAD
+             statistics as a uniform reservoir (no second pass).
+
+``index``    ``StreamingIndex``: the LSH hash tables materialized as
+             fixed-capacity device-resident bucket arrays with jitted
+             O(batch) ``insert``/``query`` (ring-buffer eviction caps
+             mega-buckets structurally). Pair semantics — min_dt,
+             m-of-t matches — are shared with the offline search via
+             ``core.lsh.finalize_pairs``.
+
+``engine``   ``StreamingDetector`` composes ring → fingerprints →
+             signatures → insert+query → incremental pair accumulation →
+             the offline alignment stack, per station, with per-chunk
+             latency/throughput stats.
+
+``launch/serve_detect.py`` wraps a shared index in a slot/refill request
+loop (the ``ServeEngine`` idiom) for concurrent query-window serving.
+
+A parity test (tests/test_stream.py) holds the streamed path to ≥95% of
+the offline ``lsh.search`` pair set on synthetic traces.
+"""
+from repro.stream.engine import (StationStream, StreamingDetector,  # noqa: F401
+                                 StreamStats, block_coeffs, stream_step)
+from repro.stream.index import (IndexState, StreamIndexConfig,  # noqa: F401
+                                expire, index_stats, init_index, insert,
+                                query)
+from repro.stream.ingest import (StreamConfig, StreamingMAD,  # noqa: F401
+                                 WaveformRing)

@@ -1,0 +1,178 @@
+"""Device-resident incremental LSH index (streaming replacement for §6).
+
+The offline search re-sorts every signature on every run; here the hash
+tables are *materialized* as fixed-capacity bucket arrays that live on
+device across chunks:
+
+  ``sig[t, B, C]``  stored per-table signature of each slot (uint32)
+  ``ids[t, B, C]``  global fingerprint id of each slot (INVALID = empty)
+  ``cursor[t, B]``  per-bucket ring write position (monotonic)
+
+``insert`` scatters a batch of signatures into their buckets — within a
+batch, same-bucket rows get consecutive ring positions via a sort +
+rank-in-run, so a bucket overflowing its capacity ``C`` evicts its oldest
+entries (the paper's mega-bucket pathology is therefore *structurally*
+capped, like ``bucket_cap`` in the offline sort-based search). ``query``
+gathers each signature's bucket occupants, keeps exact-signature hits, and
+feeds the per-table emission streams through the same
+``finalize_pairs`` (min_dt self-match exclusion + m-of-t threshold) as the
+batch path — one implementation of the pair semantics, two search engines.
+
+Both ops are jitted with static shapes: chunk after chunk of the same
+batch size reuses one executable (no retracing), which is what makes the
+incremental path O(batch) instead of O(corpus).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import INVALID, LSHConfig, Pairs, finalize_pairs
+from repro.utils import hash_u32, hash_combine, rank_in_run, run_lengths
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamIndexConfig:
+    """Shape of the resident index (capacity knobs, not semantics)."""
+
+    n_buckets: int = 4096     # buckets per table (power of two)
+    bucket_cap: int = 8       # slots per bucket (ring, oldest evicted)
+
+    def __post_init__(self):
+        assert self.n_buckets & (self.n_buckets - 1) == 0, \
+            f"n_buckets must be a power of two, got {self.n_buckets}"
+
+    def state_bytes(self, n_tables: int) -> int:
+        slots = n_tables * self.n_buckets * self.bucket_cap
+        return slots * (4 + 4) + n_tables * self.n_buckets * 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IndexState:
+    sig: jax.Array      # (t, B, C) uint32
+    ids: jax.Array      # (t, B, C) int32, INVALID where empty
+    cursor: jax.Array   # (t, B) int32 monotonic ring cursor
+    inserted: jax.Array  # () int32 total rows ever inserted
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return self.sig.shape
+
+
+def init_index(lcfg: LSHConfig, icfg: StreamIndexConfig) -> IndexState:
+    t, b, c = lcfg.n_tables, icfg.n_buckets, icfg.bucket_cap
+    return IndexState(
+        sig=jnp.zeros((t, b, c), jnp.uint32),
+        ids=jnp.full((t, b, c), INVALID, jnp.int32),
+        cursor=jnp.zeros((t, b), jnp.int32),
+        inserted=jnp.zeros((), jnp.int32),
+    )
+
+
+def _bucket_ids(sigs: jax.Array, n_buckets: int, seed: int) -> jax.Array:
+    """(N, t) signatures → (N, t) bucket indices, salted per table."""
+    t = sigs.shape[1]
+    salts = hash_u32(jnp.arange(t, dtype=jnp.uint32), seed ^ 0xB0C4E7)
+    h = hash_combine(sigs.astype(jnp.uint32), salts[None, :])
+    return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+
+
+def _insert_one_table(sig_tb, ids_tb, cursor_tb, buckets, keys, new_ids,
+                      valid):
+    """Scatter one batch into one table's (B, C) bucket arrays."""
+    b, c = sig_tb.shape
+    n = buckets.shape[0]
+    order_key = jnp.where(valid, buckets, jnp.int32(b))  # invalid rows last
+    sb, perm = jax.lax.sort((order_key, jnp.arange(n, dtype=jnp.int32)),
+                            num_keys=1)
+    rank = rank_in_run(sb)
+    _, lens = run_lengths(sb)
+    keep = (sb < b) & (rank >= lens - c)   # newest C of each bucket run
+    pos = (cursor_tb[jnp.where(sb < b, sb, 0)] + rank) % c
+    slot = jnp.where(keep, sb * c + pos, b * c)  # OOB → dropped
+    k_s = keys[perm]
+    id_s = new_ids[perm]
+    new_sig = sig_tb.reshape(-1).at[slot].set(k_s, mode="drop").reshape(b, c)
+    new_ids_tb = ids_tb.reshape(-1).at[slot].set(id_s, mode="drop") \
+        .reshape(b, c)
+    # advance cursors by the full run length (ring continues past drops)
+    adds = valid.astype(jnp.int32)
+    new_cursor = cursor_tb.at[buckets].add(adds, mode="drop")
+    return new_sig, new_ids_tb, new_cursor
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
+           cfg: LSHConfig, valid: jax.Array | None = None) -> IndexState:
+    """Insert a batch of per-table signatures under global fingerprint ids.
+
+    sigs: (N, t) uint32; ids: (N,) int32 (monotone across the stream).
+    Fixed shapes — one trace per (N, index shape) combination.
+    """
+    t, b, c = state.shape
+    n = sigs.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    buckets = _bucket_ids(sigs, b, cfg.seed)          # (N, t)
+    new_sig, new_ids, new_cursor = jax.vmap(
+        _insert_one_table, in_axes=(0, 0, 0, 1, 1, None, None))(
+        state.sig, state.ids, state.cursor, buckets,
+        sigs.astype(jnp.uint32), ids, valid)
+    return IndexState(sig=new_sig, ids=new_ids, cursor=new_cursor,
+                      inserted=state.inserted + valid.sum(dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
+          cfg: LSHConfig) -> Pairs:
+    """Find stored partners of a signature batch → thresholded Pairs.
+
+    Only partners with stored id < query id are emitted, so a batch that
+    was just inserted pairs exactly once with every earlier fingerprint
+    (including same-batch ones) per colliding table — the streaming
+    equivalent of the offline rank-window emission. Returns a masked
+    ``Pairs`` of static size t * N * C.
+    """
+    t, b, c = state.shape
+    n = sigs.shape[0]
+    buckets = _bucket_ids(sigs, b, cfg.seed)          # (N, t)
+
+    def one_table(sig_tb, ids_tb, bkt, keys):
+        occ_sig = sig_tb[bkt]                          # (N, C)
+        occ_id = ids_tb[bkt]                           # (N, C)
+        hit = (occ_sig == keys[:, None]) & (occ_id != INVALID) \
+            & (occ_id < qids[:, None])
+        lo = jnp.where(hit, occ_id, INVALID)
+        hi = jnp.where(hit, qids[:, None], INVALID)
+        return lo, hi
+
+    lo, hi = jax.vmap(one_table, in_axes=(0, 0, 1, 1))(
+        state.sig, state.ids, buckets, sigs.astype(jnp.uint32))
+    return finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
+
+
+@jax.jit
+def expire(state: IndexState, min_id: jax.Array) -> IndexState:
+    """Sliding detection window: drop entries with id < min_id."""
+    keep = state.ids >= jnp.int32(min_id)
+    return IndexState(sig=state.sig,
+                      ids=jnp.where(keep, state.ids, INVALID),
+                      cursor=state.cursor, inserted=state.inserted)
+
+
+def index_stats(state: IndexState) -> dict:
+    """Occupancy / skew diagnostics (host-side, for monitoring)."""
+    occupied = np.asarray(state.ids != INVALID)
+    per_bucket = occupied.sum(axis=2)
+    return {
+        "inserted": int(state.inserted),
+        "resident": int(occupied.sum()),
+        "occupancy": float(occupied.mean()),
+        "full_buckets": int((per_bucket == state.ids.shape[2]).sum()),
+        "max_bucket_fill": int(per_bucket.max()),
+    }

@@ -1,0 +1,123 @@
+"""Continuous ingestion: arbitrary chunks → fixed fingerprint blocks.
+
+``WaveformRing`` buffers incoming samples and emits *blocks* — fixed-size
+windows that each yield exactly ``block_fingerprints`` fingerprints — while
+retaining the STFT/spectral-image halo (``FingerprintConfig.halo_samples``)
+across block boundaries. Because block starts are aligned to the
+fingerprint lag, block fingerprints are **sample-exact** equal to the
+offline ones computed over the whole trace: the streaming path changes
+*when* work happens, not *what* is computed.
+
+``StreamingMAD`` replaces the paper's two-pass §5.2 median/MAD structure
+with a uniform reservoir over coefficient rows: every row ever seen has
+equal probability of being in the sample, so the statistics converge to
+the offline sampled statistics without a second pass over history.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.fingerprint import FingerprintConfig
+from repro.stream.index import StreamIndexConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Streaming-side knobs (capacity/cadence; detection semantics stay in
+    LSHConfig/AlignConfig so offline and streaming share one meaning)."""
+
+    block_fingerprints: int = 64   # fingerprints per jitted step
+    index: StreamIndexConfig = StreamIndexConfig()  # resident index shape
+    stats_warmup_blocks: int = 2   # blocks buffered before MAD stats freeze
+    reservoir_rows: int = 2048     # coefficient rows kept for median/MAD
+    seed: int = 0
+
+
+class WaveformRing:
+    """Host-side sample ring for one station.
+
+    push() accepts chunks of any length and returns zero or more
+    fixed-size blocks; a ``halo_samples`` tail is retained so adjacent
+    blocks overlap exactly like the offline sliding windows.
+    """
+
+    def __init__(self, fcfg: FingerprintConfig, block_fingerprints: int):
+        assert block_fingerprints >= 1
+        self.fcfg = fcfg
+        self.block_fp = block_fingerprints
+        self.block_samples = fcfg.block_samples(block_fingerprints)
+        self.advance = block_fingerprints * fcfg.lag_samples
+        self.buf = np.zeros(0, np.float32)
+        self.next_fp = 0          # global index of the next fingerprint
+        self.samples_in = 0
+
+    def push(self, chunk: np.ndarray) -> list[tuple[int, np.ndarray]]:
+        """Append samples; emit ready (base_fingerprint_id, block) tuples."""
+        chunk = np.asarray(chunk, np.float32).reshape(-1)
+        self.samples_in += chunk.size
+        self.buf = np.concatenate([self.buf, chunk])
+        out = []
+        while self.buf.size >= self.block_samples:
+            out.append((self.next_fp, self.buf[:self.block_samples].copy()))
+            self.buf = self.buf[self.advance:]
+            self.next_fp += self.block_fp
+        return out
+
+    def flush_partial(self) -> tuple[int, np.ndarray, int] | None:
+        """Emit the tail as a zero-padded block with a valid-count.
+
+        Returns (base_fingerprint_id, block, n_valid) covering however many
+        whole fingerprints the buffer still holds, or None if fewer than
+        one. Consumes those fingerprints (the halo stays), so ingestion may
+        continue afterwards — flush is a checkpoint, not a terminator.
+        """
+        w, lag = self.fcfg.window_samples, self.fcfg.lag_samples
+        if self.buf.size < w:
+            return None
+        n_valid = (self.buf.size - w) // lag + 1
+        block = np.zeros(self.block_samples, np.float32)
+        block[: self.buf.size] = self.buf
+        out = (self.next_fp, block, n_valid)
+        self.buf = self.buf[n_valid * lag:]
+        self.next_fp += n_valid
+        return out
+
+    @property
+    def pending_samples(self) -> int:
+        return int(self.buf.size)
+
+
+class StreamingMAD:
+    """Uniform reservoir of coefficient rows → running median/MAD (§5.2).
+
+    Deterministic given the seed and arrival order; ``stats()`` matches
+    ``fingerprint.mad_stats`` computed over a uniform row sample.
+    """
+
+    def __init__(self, n_rows: int, n_coeff: int, seed: int = 0):
+        self.n_rows = n_rows
+        self.rows = np.zeros((n_rows, n_coeff), np.float32)
+        self.rng = np.random.default_rng(seed)
+        self.seen = 0
+        self.filled = 0
+
+    def update(self, coeffs: np.ndarray) -> None:
+        coeffs = np.asarray(coeffs, np.float32)
+        for row in coeffs:
+            self.seen += 1
+            if self.filled < self.n_rows:
+                self.rows[self.filled] = row
+                self.filled += 1
+            else:
+                j = int(self.rng.integers(0, self.seen))
+                if j < self.n_rows:
+                    self.rows[j] = row
+
+    def stats(self) -> tuple[np.ndarray, np.ndarray]:
+        assert self.filled >= 2, "need ≥2 coefficient rows for MAD stats"
+        sample = self.rows[: self.filled]
+        med = np.median(sample, axis=0)
+        mad = np.median(np.abs(sample - med[None, :]), axis=0)
+        return med.astype(np.float32), mad.astype(np.float32)

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim for network-less environments.
+
+Property-based tests import ``given``/``settings``/``st`` from here instead
+of hard-importing :mod:`hypothesis`. When hypothesis is installed the real
+objects are re-exported; when it is missing, ``@given(...)`` turns the test
+into a skip and the deterministic tests in the same module still collect
+and run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: absorbs any attribute
+        access / call so module-level strategy expressions still evaluate."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -3,7 +3,7 @@ both layouts, sanitize_spec semantics (mesh-subset degrade, uneven mode,
 manual axes, vocab alias), ZeRO extension properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import LM_ARCHS, get_config, get_smoke_config
 from repro.dist import _LAYOUT, _MANUAL, _UNEVEN

@@ -1,0 +1,276 @@
+"""Streaming detection subsystem: index semantics, ingest halo exactness,
+offline/streaming parity, retracing discipline, serving smoke."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.fast_seismic import smoke_config, stream_smoke_config
+from repro.core import fingerprint as F
+from repro.core import lsh as L
+from repro.core.lsh import INVALID, LSHConfig
+from repro.core.synth import SynthConfig, make_dataset
+from repro.stream import (StreamConfig, StreamingDetector, StreamIndexConfig,
+                          WaveformRing)
+from repro.stream import index as SI
+from repro.stream.engine import stream_step
+from repro.stream.ingest import StreamingMAD
+
+CFG = LSHConfig(n_tables=20, n_funcs=4, n_matches=2, bucket_cap=8,
+                min_dt=1, occurrence_frac=0.0)
+
+
+def _random_sigs(rng, n, t=CFG.n_tables):
+    return jnp.asarray(rng.integers(0, 2**32, (n, t), dtype=np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# StreamingIndex unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_index_insert_query_roundtrip(rng):
+    icfg = StreamIndexConfig(n_buckets=256, bucket_cap=4)
+    state = SI.init_index(CFG, icfg)
+    sigs = _random_sigs(rng, 16)
+    # duplicate signatures → guaranteed collisions in every table
+    sigs = sigs.at[12].set(sigs[3])
+    ids = jnp.arange(16, dtype=jnp.int32)
+    state = SI.insert(state, sigs, ids, CFG)
+    pairs = SI.query(state, sigs, ids, CFG)
+    v = np.asarray(pairs.valid)
+    found = set(zip(np.asarray(pairs.idx1)[v].tolist(),
+                    np.asarray(pairs.idx2)[v].tolist()))
+    assert (3, 12) in found
+    sims = np.asarray(pairs.sim)[v]
+    got = {p: s for p, s in zip(found, sims)}
+    assert got[(3, 12)] == CFG.n_tables  # collided in every table
+    # random signatures should not pair up
+    assert len(found) == 1
+
+
+def test_index_cross_batch_pairs_and_id_order(rng):
+    state = SI.init_index(CFG, StreamIndexConfig(n_buckets=256, bucket_cap=4))
+    s1 = _random_sigs(rng, 8)
+    s2 = _random_sigs(rng, 8)
+    s2 = s2.at[5].set(s1[2])      # batch-2 row matches batch-1 row
+    state = SI.insert(state, s1, jnp.arange(8, dtype=jnp.int32), CFG)
+    pairs1 = SI.query(state, s1, jnp.arange(8, dtype=jnp.int32), CFG)
+    state = SI.insert(state, s2, 8 + jnp.arange(8, dtype=jnp.int32), CFG)
+    pairs2 = SI.query(state, s2, 8 + jnp.arange(8, dtype=jnp.int32), CFG)
+    v2 = np.asarray(pairs2.valid)
+    found = set(zip(np.asarray(pairs2.idx1)[v2].tolist(),
+                    np.asarray(pairs2.idx2)[v2].tolist()))
+    assert found == {(2, 13)}
+    assert int(np.asarray(pairs1.valid).sum()) == 0
+
+
+def test_index_min_dt_exclusion(rng):
+    cfg = L.LSHConfig(n_tables=8, n_funcs=4, n_matches=1, bucket_cap=8,
+                      min_dt=4, occurrence_frac=0.0)
+    state = SI.init_index(cfg, StreamIndexConfig(n_buckets=64, bucket_cap=8))
+    sigs = jnp.tile(_random_sigs(rng, 1, t=8), (6, 1))   # all identical
+    ids = jnp.arange(6, dtype=jnp.int32)
+    state = SI.insert(state, sigs, ids, cfg)
+    pairs = SI.query(state, sigs, ids, cfg)
+    v = np.asarray(pairs.valid)
+    dts = (np.asarray(pairs.idx2) - np.asarray(pairs.idx1))[v]
+    assert (dts >= 4).all() and v.sum() > 0
+
+
+def test_index_ring_eviction(rng):
+    """A bucket holds at most cap entries; oldest get evicted."""
+    cfg = L.LSHConfig(n_tables=4, n_funcs=4, n_matches=1, bucket_cap=8,
+                      min_dt=1, occurrence_frac=0.0)
+    state = SI.init_index(cfg, StreamIndexConfig(n_buckets=64, bucket_cap=2))
+    sig = _random_sigs(rng, 1, t=4)
+    for i in range(5):            # same signature, five separate inserts
+        state = SI.insert(state, sig, jnp.asarray([i], jnp.int32), cfg)
+    pairs = SI.query(state, sig, jnp.asarray([5], jnp.int32), cfg)
+    v = np.asarray(pairs.valid)
+    partners = np.asarray(pairs.idx1)[v]
+    # only the 2 newest residents can pair (ids 3 and 4)
+    assert set(partners.tolist()) == {3, 4}
+    st = SI.index_stats(state)
+    assert st["max_bucket_fill"] <= 2
+    assert st["inserted"] == 5
+
+
+def test_index_expire_sliding_window(rng):
+    state = SI.init_index(CFG, StreamIndexConfig(n_buckets=256, bucket_cap=4))
+    sigs = _random_sigs(rng, 8)
+    state = SI.insert(state, sigs, jnp.arange(8, dtype=jnp.int32), CFG)
+    state = SI.expire(state, 5)
+    resident = np.asarray(state.ids)
+    assert (resident[resident != INVALID] >= 5).all()
+    # expired entries no longer pair
+    pairs = SI.query(state, sigs, 100 + jnp.arange(8, dtype=jnp.int32), CFG)
+    v = np.asarray(pairs.valid)
+    assert (np.asarray(pairs.idx1)[v] >= 5).all()
+
+
+def test_index_valid_mask_not_stored(rng):
+    state = SI.init_index(CFG, StreamIndexConfig(n_buckets=256, bucket_cap=4))
+    sigs = _random_sigs(rng, 8)
+    valid = jnp.asarray([True] * 4 + [False] * 4)
+    state = SI.insert(state, sigs, jnp.arange(8, dtype=jnp.int32), CFG,
+                      valid=valid)
+    assert SI.index_stats(state)["resident"] == 4 * CFG.n_tables
+
+
+# ---------------------------------------------------------------------------
+# ingest: ring framing + halo exactness + reservoir stats
+# ---------------------------------------------------------------------------
+
+
+def test_ring_blocks_are_sample_exact(rng):
+    fcfg = F.FingerprintConfig(img_freq=16, img_time=32, img_hop=8, top_k=64,
+                               mad_sample_rate=1.0)
+    wf = rng.standard_normal(30_000).astype(np.float32)
+    ring = WaveformRing(fcfg, block_fingerprints=16)
+    blocks = []
+    for chunk in np.array_split(wf, 7):   # uneven chunk lengths
+        blocks.extend(ring.push(chunk))
+    tail = ring.flush_partial()
+    coeffs_off = np.asarray(F.coeffs_from_waveform(jnp.asarray(wf), fcfg))
+    got = 0
+    for base, blk in blocks:
+        cb = np.asarray(F.coeffs_from_waveform(jnp.asarray(blk), fcfg))
+        np.testing.assert_allclose(cb, coeffs_off[base: base + 16],
+                                   rtol=1e-5, atol=1e-5)
+        got += cb.shape[0]
+    assert tail is not None
+    base, blk, n_valid = tail
+    cb = np.asarray(F.coeffs_from_waveform(jnp.asarray(blk), fcfg))[:n_valid]
+    np.testing.assert_allclose(cb, coeffs_off[base: base + n_valid],
+                               rtol=1e-5, atol=1e-5)
+    assert got + n_valid == fcfg.n_fingerprints(wf.size)
+
+
+def test_streaming_mad_matches_full_sample(rng):
+    coeffs = rng.standard_normal((200, 32)).astype(np.float32)
+    sm = StreamingMAD(n_rows=400, n_coeff=32, seed=0)   # reservoir > rows
+    for part in np.array_split(coeffs, 9):
+        sm.update(part)
+    med, mad = sm.stats()
+    np.testing.assert_allclose(med, np.median(coeffs, axis=0), atol=1e-6)
+    np.testing.assert_allclose(
+        mad, np.median(np.abs(coeffs - np.median(coeffs, 0)[None]), 0),
+        atol=1e-6)
+    # capped reservoir keeps exactly n_rows with uniform-ish coverage
+    sm2 = StreamingMAD(n_rows=64, n_coeff=32, seed=0)
+    for part in np.array_split(coeffs, 9):
+        sm2.update(part)
+    assert sm2.filled == 64 and sm2.seen == 200
+
+
+# ---------------------------------------------------------------------------
+# parity: streamed chunks == offline search (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _parity_setup():
+    cfg = smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=600.0, n_stations=1,
+                                  n_sources=2, events_per_source=5,
+                                  event_snr=3.0, seed=3))
+    wf = ds.waveforms[0]
+    fcfg = cfg.fingerprint
+    bits, _ = F.fingerprints_from_waveform(jnp.asarray(wf), fcfg,
+                                           key=jax.random.PRNGKey(0))
+    pairs_off, _ = L.search(bits, cfg.lsh)
+    v = np.asarray(pairs_off.valid)
+    off = set(zip(np.asarray(pairs_off.idx1)[v].tolist(),
+                  np.asarray(pairs_off.idx2)[v].tolist()))
+    med_mad = F.mad_stats(F.coeffs_from_waveform(jnp.asarray(wf), fcfg),
+                          1.0, jax.random.PRNGKey(0))
+    return cfg, wf, off, (np.asarray(med_mad[0]), np.asarray(med_mad[1]))
+
+
+def _stream_pairs(cfg, wf, n_chunks, med_mad=None, scfg=None):
+    scfg = scfg or StreamConfig(
+        block_fingerprints=64,
+        index=StreamIndexConfig(n_buckets=2048, bucket_cap=8),
+        stats_warmup_blocks=2)
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    for chunk in np.array_split(wf, n_chunks):
+        det.push(chunk)
+    events, pairs, fstats = det.stations[0].finalize()
+    v = np.asarray(pairs.valid)
+    got = set(zip(np.asarray(pairs.idx1)[v].tolist(),
+                  np.asarray(pairs.idx2)[v].tolist()))
+    return got, fstats, det
+
+
+@pytest.mark.slow
+def test_streaming_parity_with_offline_search():
+    """≥95% of offline pairs recovered from ≥8 chunks, no spurious blowup."""
+    cfg, wf, off, med_mad = _parity_setup()
+    got, fstats, det = _stream_pairs(cfg, wf, n_chunks=10, med_mad=med_mad)
+    assert len(off) > 0
+    recovered = len(off & got) / len(off)
+    assert recovered >= 0.95, (recovered, len(off), len(got))
+    assert len(got - off) <= max(2, int(0.1 * len(off))), (got - off)
+    # event counts must not blow up vs the offline pair population
+    assert fstats["events"] <= max(4, 2 * len(off))
+
+
+@pytest.mark.slow
+def test_streaming_parity_self_stats():
+    """Self-computed reservoir statistics stay close to offline results."""
+    cfg, wf, off, _ = _parity_setup()
+    got, fstats, _ = _stream_pairs(cfg, wf, n_chunks=10)
+    recovered = len(off & got) / max(len(off), 1)
+    assert recovered >= 0.7, (recovered, len(off), len(got))
+    assert len(got - off) <= max(3, len(off))
+    assert fstats["events"] <= 2 * max(2, len(off))
+
+
+def test_stream_step_no_retracing():
+    """Same-shape chunks reuse one executable for insert/query/step."""
+    cfg, wf, _, med_mad = _parity_setup()
+    scfg = StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=512, bucket_cap=8))
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    st = det.stations[0]
+    chunks = np.array_split(wf, 10)
+    for c in chunks[:3]:
+        det.push(c)
+    blocks_before = st.stats.blocks
+    traces_before = stream_step._cache_size()
+    ins_before = SI.insert._cache_size()
+    q_before = SI.query._cache_size()
+    for c in chunks[3:]:
+        det.push(c)
+    assert st.stats.blocks > blocks_before   # more same-shape blocks ran
+    assert stream_step._cache_size() == traces_before
+    assert SI.insert._cache_size() == ins_before
+    assert SI.query._cache_size() == q_before
+
+
+# ---------------------------------------------------------------------------
+# engine composition + serving
+# ---------------------------------------------------------------------------
+
+
+def test_multi_station_streaming_detections():
+    cfg, scfg = smoke_config(), stream_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=600.0, n_stations=3,
+                                  n_sources=2, events_per_source=5,
+                                  event_snr=3.0, seed=11))
+    det = StreamingDetector(cfg, scfg, n_stations=3)
+    for start in range(0, ds.waveforms.shape[1], 6000):
+        det.push(ds.waveforms[:, start: start + 6000])
+    detections, events, stats = det.finalize()
+    assert detections is not None
+    assert stats["detections"] >= 1          # reoccurring sources found
+    assert len(stats["ingest"]) == 3
+    assert all(s["fingerprints"] > 0 for s in stats["ingest"])
+
+
+def test_serve_detect_end_to_end():
+    from repro.launch import serve_detect
+    stats = serve_detect.main(["--requests", "6", "--slots", "3",
+                               "--duration-s", "400"])
+    assert stats["requests"] == 6
+    assert stats["hit_requests"] >= 1        # event windows match corpus
