@@ -6,12 +6,20 @@ block, (b) end-to-end detector chunk throughput, and (c) offline
 streaming path amortizes: arrival of one new chunk costs O(chunk) against
 the index instead of an O(N) re-sort of history.
 
+``--memory`` additionally measures the bounded-mode claim: peak host
+memory (tracemalloc) and peak buffered candidate-triplet rows of the
+sliding-window + rolling-occurrence-filter path over a 1× and a 3× longer
+synthetic stream. Flat peaks across the 3× run are the measured evidence
+that host pair state is bounded by the window, not the stream length.
+
 Emits csv lines plus a ``BENCH_stream.json`` trajectory point.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import tracemalloc
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +30,63 @@ from benchmarks.common import (bench_lsh_config, csv_line,
 from repro.core import fingerprint as F
 from repro.core import lsh as L
 from repro.core.detect import DetectConfig
+from repro.core.synth import SynthConfig, make_dataset
 from repro.stream import StreamingDetector, StreamConfig
 from repro.stream import index as SI
 
 
-def main():
+def memory_point(base_duration_s: float = 600.0) -> dict:
+    """Peak host memory of the rolling-filter path at 1× vs 3× stream."""
+    from repro.configs.fast_seismic import (smoke_config,
+                                            stream_bounded_smoke_config)
+    cfg, scfg = smoke_config(), stream_bounded_smoke_config()
+    out = {}
+    for mult in (1, 3):
+        ds = make_dataset(SynthConfig(duration_s=base_duration_s * mult,
+                                      n_stations=1, n_sources=2,
+                                      events_per_source=4 * mult,
+                                      event_snr=3.0, seed=7))
+        wf = ds.waveforms[0]
+        det = StreamingDetector(cfg, scfg, n_stations=1)
+        chunks = [wf[s: s + 6000] for s in range(0, wf.size, 6000)]
+        for c in chunks[:4]:          # compile + freeze stats untraced
+            det.push(c)
+        det.stations[0].flush()       # pre-compile the masked-tail step too
+        tracemalloc.start()
+        for c in chunks[4:]:
+            det.push(c)
+        det.stations[0].flush()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        st = det.stations[0]
+        out[f"x{mult}"] = {
+            "samples": int(wf.size),
+            "fingerprints": int(st.ring.next_fp),
+            "pairs_seen": int(st.filter.pairs_seen),
+            "windows_closed": int(st.filter.windows_closed),
+            "peak_traced_mb": round(peak / 2**20, 3),
+            "peak_buffered_triplets": int(st.peak_tri_rows),
+            "final_buffered_triplets": int(st.host_state_rows()),
+        }
+        csv_line(f"stream.memory_x{mult}", peak / 2**20,
+                 f"unit=MB triplets={st.peak_tri_rows} "
+                 f"windows={st.filter.windows_closed}")
+    out["peak_mb_ratio_x3_over_x1"] = round(
+        out["x3"]["peak_traced_mb"] / max(out["x1"]["peak_traced_mb"],
+                                          1e-9), 3)
+    out["peak_triplets_ratio_x3_over_x1"] = round(
+        out["x3"]["peak_buffered_triplets"]
+        / max(out["x1"]["peak_buffered_triplets"], 1), 3)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--memory", action="store_true",
+                    help="also record rolling-filter peak host memory "
+                         "(1x vs 3x stream) into BENCH_stream.json")
+    ap.add_argument("--memory-duration-s", type=float, default=600.0)
+    args = ap.parse_args(argv)
     ds, fcfg, bits, packed = station_fingerprints(station=1)
     n = bits.shape[0]
     lcfg = bench_lsh_config(fcfg)
@@ -94,6 +154,8 @@ def main():
             sum(c.size for c in chunks[4:]) / max(wall, 1e-9), 1),
         "ingest": ing,
     }
+    if args.memory:
+        point["rolling_memory"] = memory_point(args.memory_duration_s)
     out = os.environ.get("BENCH_OUT_DIR", ".")
     with open(os.path.join(out, "BENCH_stream.json"), "w") as f:
         json.dump(point, f, indent=2)

@@ -7,14 +7,23 @@ index per station — each chunk costs O(chunk), no re-sort of history.
 Finishes by comparing streamed detections against the injected ground
 truth and against an offline re-run of the identical configuration.
 
+With ``--bounded`` the detector runs in the sliding-window regime: index
+entries expire beyond the detection window, candidate pairs retire through
+the rolling occurrence filter (host state bounded by the window, not the
+stream), and multi-station detections print as near-real-time alerts the
+moment their windows close instead of only at finalize.
+
 Run:  PYTHONPATH=src python examples/stream_detect.py [--duration 600]
+      PYTHONPATH=src python examples/stream_detect.py --bounded
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.configs.fast_seismic import smoke_config, stream_smoke_config
+from repro.configs.fast_seismic import (smoke_config,
+                                        stream_bounded_smoke_config,
+                                        stream_smoke_config)
 from repro.core import SynthConfig, make_dataset
 from repro.core.detect import detect_events, recall_against_truth
 from repro.stream import StreamingDetector
@@ -25,9 +34,13 @@ def main():
     ap.add_argument("--duration", type=float, default=600.0)
     ap.add_argument("--chunk-s", type=float, default=60.0)
     ap.add_argument("--stations", type=int, default=3)
+    ap.add_argument("--bounded", action="store_true",
+                    help="sliding window + rolling filter + live alerts")
     args = ap.parse_args()
 
-    cfg, scfg = smoke_config(), stream_smoke_config()
+    cfg = smoke_config()
+    scfg = (stream_bounded_smoke_config() if args.bounded
+            else stream_smoke_config())
     dataset = make_dataset(SynthConfig(
         duration_s=args.duration, n_stations=args.stations, n_sources=3,
         events_per_source=4, event_snr=3.0,
@@ -38,7 +51,14 @@ def main():
     det = StreamingDetector(cfg, scfg, n_stations=args.stations)
     t0 = time.perf_counter()
     for start in range(0, wf.shape[1], chunk):
+        n_alerts = len(det.alerts)
         det.push(wf[:, start: start + chunk])
+        for rows in det.alerts[n_alerts:]:
+            for dt, onset, n_st, score in rows:
+                lag_s = cfg.fingerprint.lag_samples / cfg.fingerprint.fs
+                print(f"  ALERT t≈{onset * lag_s:6.0f}s dt={dt * lag_s:.0f}s "
+                      f"stations={n_st} score={score} "
+                      f"(stream at {(start + chunk) / cfg.fingerprint.fs:.0f}s)")
     detections, events, stats = det.finalize()
     stream_wall = time.perf_counter() - t0
     rec = recall_against_truth(detections, events, dataset, cfg.fingerprint)

@@ -1,0 +1,66 @@
+"""Generate tests/golden/stream_pairs.json (fixed-seed parity pin)."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fast_seismic import smoke_config
+from repro.core import fingerprint as F
+from repro.core import lsh as L
+from repro.core.synth import SynthConfig, make_dataset
+from repro.stream import StreamingDetector, StreamConfig, StreamIndexConfig
+
+SYNTH = dict(duration_s=600.0, n_stations=1, n_sources=2,
+             events_per_source=5, event_snr=3.0, seed=3)
+N_CHUNKS = 10
+
+cfg = smoke_config()
+ds = make_dataset(SynthConfig(**SYNTH))
+wf = ds.waveforms[0]
+fcfg = cfg.fingerprint
+bits, _ = F.fingerprints_from_waveform(jnp.asarray(wf), fcfg,
+                                       key=jax.random.PRNGKey(0))
+pairs_off, _ = L.search(bits, cfg.lsh)
+v = np.asarray(pairs_off.valid)
+off = sorted(zip(np.asarray(pairs_off.idx1)[v].tolist(),
+                 np.asarray(pairs_off.idx2)[v].tolist()))
+med_mad = F.mad_stats(F.coeffs_from_waveform(jnp.asarray(wf), fcfg), 1.0,
+                      jax.random.PRNGKey(0))
+med_mad = (np.asarray(med_mad[0]), np.asarray(med_mad[1]))
+
+
+def stream_pairs(mm):
+    scfg = StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=2048, bucket_cap=8),
+                        stats_warmup_blocks=2)
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=mm)
+    for chunk in np.array_split(wf, N_CHUNKS):
+        det.push(chunk)
+    _, pairs, _ = det.stations[0].finalize()
+    pv = np.asarray(pairs.valid)
+    return sorted(zip(np.asarray(pairs.idx1)[pv].tolist(),
+                      np.asarray(pairs.idx2)[pv].tolist()))
+
+
+two = stream_pairs(med_mad)
+self_ = stream_pairs(None)
+offs, twos, selfs = set(off), set(two), set(self_)
+r2 = len(offs & twos) / len(offs)
+rs = len(offs & selfs) / len(offs)
+print(f"offline={len(offs)} two_pass={len(twos)} (recall {r2:.3f}) "
+      f"self={len(selfs)} (recall {rs:.3f})")
+
+out = {
+    "synth": SYNTH,
+    "n_chunks": N_CHUNKS,
+    "offline_pairs": [list(p) for p in off],
+    "stream_two_pass_pairs": [list(p) for p in two],
+    "two_pass_recall": round(r2, 4),
+    "self_stats_recall": round(rs, 4),
+}
+p = pathlib.Path("tests/golden/stream_pairs.json")
+p.parent.mkdir(parents=True, exist_ok=True)
+p.write_text(json.dumps(out, indent=1))
+print("wrote", p)

@@ -50,21 +50,46 @@ def stream_config() -> StreamConfig:
 
     256 fingerprints per jitted step (~9 min of 100 Hz data per block at
     the 2 s lag); 2^14 buckets × cap 8 per table holds ~1.3e5 resident
-    fingerprints per station before ring eviction — a rolling multi-day
-    window on device.
+    fingerprints per station before ring eviction. The sliding detection
+    window expires ids older than 3 days (129 600 fingerprints at the 2 s
+    lag — matching the index capacity), and the rolling occurrence filter
+    retires candidate pairs day-by-day (43 200 fingerprints), so both
+    device and host state stay flat over an unbounded stream.
     """
+    day = 43_200  # fingerprints per day at the 2 s lag (86400 s / 2 s)
     return StreamConfig(block_fingerprints=256,
                         index=StreamIndexConfig(n_buckets=16384,
                                                 bucket_cap=8),
-                        stats_warmup_blocks=2, reservoir_rows=4096)
+                        stats_warmup_blocks=2, reservoir_rows=4096,
+                        window_fingerprints=3 * day,
+                        filter_window_fingerprints=day)
 
 
 def stream_smoke_config() -> StreamConfig:
-    """CPU-scale streaming block matching ``smoke_config``."""
+    """CPU-scale streaming block matching ``smoke_config``.
+
+    Windows stay disabled: this is the parity configuration whose
+    accumulated pair set is held against the offline search.
+    """
     return StreamConfig(block_fingerprints=64,
                         index=StreamIndexConfig(n_buckets=2048,
                                                 bucket_cap=8),
                         stats_warmup_blocks=2, reservoir_rows=1024)
+
+
+def stream_bounded_smoke_config() -> StreamConfig:
+    """CPU-scale *bounded* streaming: sliding window + rolling filter.
+
+    Window lengths are sized to the smoke traces (hundreds of
+    fingerprints) so tests and benches exercise expiry and several window
+    closes without needing hours of synthetic data.
+    """
+    return StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=2048,
+                                                bucket_cap=8),
+                        stats_warmup_blocks=2, reservoir_rows=1024,
+                        window_fingerprints=128,
+                        filter_window_fingerprints=64)
 
 
 # Dry-run shapes: (n_chunks, samples_per_chunk). ``station_year`` ≈ one

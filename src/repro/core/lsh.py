@@ -192,12 +192,17 @@ def candidate_pairs(sigs: jax.Array, cfg: LSHConfig) -> Pairs:
 # ---------------------------------------------------------------------------
 
 
-def occurrence_filter(pairs: Pairs, n_fp: int,
-                      frac: float) -> tuple[Pairs, jax.Array]:
+def occurrence_filter(pairs: Pairs, n_fp: int, frac: float,
+                      limit: int | None = None) -> tuple[Pairs, jax.Array]:
     """Drop fingerprints matching more than ``frac`` of the partition.
 
     Also drops their match partners (the paper excludes "this fingerprint
     as well as its neighbors"). Returns (filtered pairs, excluded mask).
+
+    ``n_fp`` sizes the id space (segment count); ``limit`` overrides the
+    occurrence cap when the partition whose fraction is meant differs from
+    the id space — the rolling streaming filter counts occurrences over a
+    window of ids whose partners may reach back a further lookback span.
     """
     v = pairs.valid
     i1 = jnp.where(v, pairs.idx1, 0)
@@ -205,7 +210,8 @@ def occurrence_filter(pairs: Pairs, n_fp: int,
     w = v.astype(jnp.int32)
     cnt = (jax.ops.segment_sum(w, i1, num_segments=n_fp)
            + jax.ops.segment_sum(w, i2, num_segments=n_fp))
-    limit = jnp.int32(max(1, int(frac * n_fp)))
+    limit = jnp.int32(max(1, int(frac * n_fp)) if limit is None
+                      else max(1, int(limit)))
     excluded = cnt > limit
     # neighbors of excluded fingerprints
     nb1 = jax.ops.segment_max(jnp.where(v, excluded[i2].astype(jnp.int32), 0),

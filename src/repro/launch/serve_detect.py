@@ -9,8 +9,29 @@ that fingerprints + queries one block per active slot (read-only — serving
 never mutates the index), so concurrent requests share device dispatches
 exactly like decode slots share a decode step.
 
+Restartable service flags:
+
+  ``--snapshot-every N``  checkpoint the ingesting detector (index pytree,
+                          waveform ring, MAD reservoir) every N chunks via
+                          ``train/checkpoint.py`` into ``--snapshot-dir``.
+  ``--restore``           instead of re-streaming the corpus from scratch,
+                          restore the latest snapshot from
+                          ``--snapshot-dir`` and ingest only the samples
+                          that arrived after it — a killed service resumes
+                          where it left off and serves the same index.
+  ``--window-fp N``       sliding detection window: the jitted step expires
+                          index entries more than N fingerprints behind the
+                          newest id, bounding what queries can match.
+  ``--filter-window-fp N``  rolling occurrence-filter window: candidate
+                          pairs are retired per closed window, bounding
+                          host pair state for unbounded ingestion.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
+  PYTHONPATH=src python -m repro.launch.serve_detect \
+      --snapshot-every 4 --snapshot-dir /tmp/fast_snap     # then kill …
+  PYTHONPATH=src python -m repro.launch.serve_detect \
+      --restore --snapshot-dir /tmp/fast_snap              # … and resume
 """
 from __future__ import annotations
 
@@ -183,18 +204,47 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--duration-s", type=float, default=600.0)
     ap.add_argument("--window-s", type=float, default=20.0)
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="checkpoint the ingesting detector every N chunks")
+    ap.add_argument("--snapshot-dir", default="/tmp/fast_serve_snapshots")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume ingestion from the latest snapshot")
+    ap.add_argument("--window-fp", type=int, default=0,
+                    help="sliding detection window (fingerprints; 0 = off)")
+    ap.add_argument("--filter-window-fp", type=int, default=0,
+                    help="rolling occurrence-filter window (0 = finalize)")
     args = ap.parse_args(argv)
 
     cfg, scfg = smoke_config(), stream_smoke_config()
+    if args.window_fp or args.filter_window_fp:
+        import dataclasses
+        scfg = dataclasses.replace(
+            scfg, window_fingerprints=args.window_fp,
+            filter_window_fingerprints=args.filter_window_fp)
     ds = make_dataset(SynthConfig(duration_s=args.duration_s, n_stations=1,
                                   n_sources=2, events_per_source=5,
                                   event_snr=3.0, seed=3))
     wf = ds.waveforms[0]
 
-    # build the corpus index by streaming the station in
-    det = StreamingDetector(cfg, scfg, n_stations=1)
-    for chunk in np.array_split(wf, 16):
-        det.push(chunk)
+    # build the corpus index by streaming the station in (resuming from the
+    # latest snapshot when asked — only post-snapshot samples re-ingest)
+    skip = 0
+    if args.restore:
+        det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg)
+        skip = det.stations[0].ring.samples_in
+        print(f"# restored step {step}: {skip} samples already ingested")
+    else:
+        det = StreamingDetector(cfg, scfg, n_stations=1)
+    chunks = np.array_split(wf, 16)
+    seen = 0
+    for ci, chunk in enumerate(chunks):
+        seen += chunk.size
+        if seen <= skip:
+            continue
+        det.push(chunk if seen - chunk.size >= skip
+                 else chunk[chunk.size - (seen - skip):])
+        if args.snapshot_every and (ci + 1) % args.snapshot_every == 0:
+            det.snapshot(args.snapshot_dir, step=ci + 1)
     st = det.stations[0]
     st.flush()
     assert st.stats_frozen, "ingest too short to freeze MAD statistics"

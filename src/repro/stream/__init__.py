@@ -24,13 +24,26 @@ an unbounded stream:
              latency/throughput stats.
 
 ``launch/serve_detect.py`` wraps a shared index in a slot/refill request
-loop (the ``ServeEngine`` idiom) for concurrent query-window serving.
+loop (the ``ServeEngine`` idiom) for concurrent query-window serving, with
+periodic snapshots (``--snapshot-every``) and restart (``--restore``).
+
+Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
+the jitted step expires index entries beyond a sliding detection window,
+and with ``filter_window_fingerprints`` the ``RollingPairFilter`` retires
+candidate pairs window-by-window through the §6.5 occurrence filter into
+compact event rows — O(window) host state, near-real-time multi-station
+alerts via ``StreamingDetector.poll_detections``, and exact kill/restore
+via ``snapshot``/``restore`` (checkpointed through ``train/checkpoint``).
 
 A parity test (tests/test_stream.py) holds the streamed path to ≥95% of
-the offline ``lsh.search`` pair set on synthetic traces.
+the offline ``lsh.search`` pair set on synthetic traces; a golden test
+(tests/golden/) pins the exact streamed pair set against drift.
 """
-from repro.stream.engine import (StationStream, StreamingDetector,  # noqa: F401
-                                 StreamStats, block_coeffs, stream_step)
+from repro.stream.engine import (RollingPairFilter,  # noqa: F401
+                                 StationStream, StreamingDetector,
+                                 StreamStats, block_coeffs,
+                                 events_from_rows, events_to_rows,
+                                 pairs_from_triplets, stream_step)
 from repro.stream.index import (IndexState, StreamIndexConfig,  # noqa: F401
                                 expire, index_stats, init_index, insert,
                                 query)

@@ -3,12 +3,32 @@
 ``StationStream`` owns one station's ingestion state: a ``WaveformRing``
 (chunk framing + halo), a ``StreamingMAD`` (running §5.2 statistics), and a
 ``StreamingIndex`` state. Each ready block runs one jitted fixed-shape
-step — fingerprint, sign, insert, query — and the emitted pairs accumulate
-host-side. ``StreamingDetector`` composes stations and finishes with the
-*same* alignment stack as the offline path (occurrence filter →
-channel merge → ``cluster_station`` → network association), so a streamed
-trace yields the same detections as a batch re-run, at O(chunk) cost per
-arrival instead of O(history).
+step — fingerprint, sign, expire, insert, query — and the emitted pairs
+either accumulate host-side (parity mode) or flow through a
+``RollingPairFilter`` (bounded mode). ``StreamingDetector`` composes
+stations and finishes with the *same* alignment stack as the offline path
+(occurrence filter → channel merge → ``cluster_station`` → network
+association), so a streamed trace yields the same detections as a batch
+re-run, at O(chunk) cost per arrival instead of O(history).
+
+Two memory regimes, selected by ``StreamConfig``:
+
+* **parity mode** (defaults): every emitted triplet is kept until
+  ``finalize`` runs the offline occurrence filter + clustering over the
+  full accumulation — exact offline semantics, O(stream) host state.
+* **bounded mode** (``window_fingerprints`` + ``filter_window_fingerprints``
+  > 0): the jitted step expires index entries older than the sliding
+  window, and triplets are retired window-by-window through the rolling
+  occurrence filter into compact event rows — O(window) host state for an
+  unbounded stream (the paper's §5.3/§6.5 partition-bounded post-processing
+  made continuous). With ≥2 stations, ``poll_detections`` additionally
+  associates closed-window events across stations after every push, so
+  network detections surface near-real-time instead of only at finalize.
+
+``snapshot``/``restore`` checkpoint the whole detector (index pytree, ring,
+reservoir, pending blocks, rolling-filter state) through
+``train/checkpoint.py``: a killed service restored from its last snapshot
+reproduces the uninterrupted run's detections exactly.
 """
 from __future__ import annotations
 
@@ -30,6 +50,7 @@ from repro.core.lsh import INVALID, LSHConfig, Pairs
 from repro.stream import index as index_mod
 from repro.stream.index import IndexState
 from repro.stream.ingest import StreamConfig, StreamingMAD, WaveformRing
+from repro.train import checkpoint as ckpt_mod
 
 
 @functools.partial(jax.jit, static_argnames=("fcfg",))
@@ -38,26 +59,230 @@ def block_coeffs(block: jax.Array, fcfg: FingerprintConfig) -> jax.Array:
     return fp_mod.coeffs_from_waveform(block, fcfg)
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg"),
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, base_id: jax.Array,
-                valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig
-                ) -> tuple[IndexState, Pairs]:
-    """One fixed-shape streaming step: binarize → sign → insert → query.
+                valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
+                window: int = 0) -> tuple[IndexState, Pairs]:
+    """One fixed-shape streaming step: binarize → sign → expire → insert →
+    query.
 
     Same-shape blocks reuse one executable (base_id and the valid mask are
-    traced, configs are static); insert-then-query with the id-ordered
-    emission rule yields each (earlier, later) pair exactly once per
-    colliding table. Invalid rows (zero-padded flush tails) get unique
-    filler signatures, are not stored, and cannot match.
+    traced, configs and the window length are static); insert-then-query
+    with the id-ordered emission rule yields each (earlier, later) pair
+    exactly once per colliding table. Invalid rows (zero-padded flush
+    tails) get unique filler signatures, are not stored, and cannot match.
+
+    ``window`` > 0 expires index entries older than the newest id in this
+    block minus the window *before* inserting it, so every emitted pair
+    satisfies idx2 - idx1 < window — the sliding detection window.
     """
     bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
     sigs = lsh_mod.signatures(bits, mappings, lcfg, valid=valid)
     ids = base_id + jnp.arange(sigs.shape[0], dtype=jnp.int32)
+    if window > 0:
+        newest = base_id + valid.sum(dtype=jnp.int32)
+        state = index_mod.expire(state, newest - jnp.int32(window))
     state = index_mod.insert(state, sigs, ids, lcfg, valid=valid)
     pairs = index_mod.query(state, sigs, ids, lcfg)
     return state, pairs
+
+
+def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
+    """(m, 3) host triplets (idx1, idx2, sim) → masked fixed-size ``Pairs``.
+
+    Padded to a multiple of ``pad_to`` so downstream jitted consumers see
+    few distinct shapes.
+    """
+    tri = np.asarray(tri).reshape(-1, 3)
+    m = tri.shape[0]
+    size = max(pad_to, -(-max(m, 1) // pad_to) * pad_to)
+    idx1 = np.full(size, INVALID, np.int32)
+    idx2 = np.full(size, INVALID, np.int32)
+    sim = np.zeros(size, np.int32)
+    val = np.zeros(size, bool)
+    idx1[:m] = tri[:, 0]
+    idx2[:m] = tri[:, 1]
+    sim[:m] = tri[:, 2]
+    val[:m] = True
+    return Pairs(idx1=jnp.asarray(idx1), idx2=jnp.asarray(idx2),
+                 sim=jnp.asarray(sim), valid=jnp.asarray(val))
+
+
+def events_to_rows(events: Events) -> np.ndarray:
+    """Valid entries of an ``Events`` pytree → compact (k, 5) int64 rows
+    (dt, onset, extent, size, score)."""
+    v = np.asarray(events.valid)
+    return np.stack(
+        [np.asarray(events.dt)[v], np.asarray(events.onset)[v],
+         np.asarray(events.extent)[v], np.asarray(events.size)[v],
+         np.asarray(events.score)[v]], axis=1).astype(np.int64)
+
+
+def events_from_rows(rows: np.ndarray, pad_to: int = 256) -> Events:
+    """(k, 5) rows → masked ``Events`` padded to a multiple of ``pad_to``."""
+    rows = np.asarray(rows, np.int64).reshape(-1, 5)
+    k = rows.shape[0]
+    size = max(pad_to, -(-max(k, 1) // pad_to) * pad_to)
+    full = np.zeros((size, 5), np.int64)
+    full[:k] = rows
+    val = np.arange(size) < k
+    fill = np.where(val, 0, INVALID)
+    return Events(
+        dt=jnp.asarray((full[:, 0] + fill).astype(np.int32)),
+        onset=jnp.asarray((full[:, 1] + fill).astype(np.int32)),
+        extent=jnp.asarray(full[:, 2].astype(np.int32)),
+        size=jnp.asarray(full[:, 3].astype(np.int32)),
+        score=jnp.asarray(full[:, 4].astype(np.int32)),
+        valid=jnp.asarray(val))
+
+
+class RollingPairFilter:
+    """Rolling per-window §6.5 occurrence filter + clustering.
+
+    Every emitted pair is assigned to the window of its *later* member (the
+    query id that emitted it). Once the processed-id frontier passes a
+    window's end, no further pair can land in it, so the window closes:
+    the occurrence filter runs over its pairs with ids rebased into the
+    static [w_start - lookback, w_start + window) span (the sliding index
+    window guarantees partners reach back at most ``lookback``), survivors
+    are channel-merged and diagonal-clustered exactly like finalize, and
+    only the resulting compact event rows are retained. Buffered host pair
+    state is therefore O(window) for an unbounded stream — the streaming
+    analogue of the paper's partition-bounded post-processing.
+    """
+
+    def __init__(self, cfg: DetectConfig, window: int, lookback: int,
+                 pad_to: int = 1024):
+        if window <= 0 or lookback <= 0:
+            raise ValueError(f"need positive filter window and lookback, "
+                             f"got {window}, {lookback}")
+        self.cfg = cfg
+        self.window = int(window)
+        self.lookback = int(lookback)
+        self.pad_to = pad_to
+        self.w_start = 0
+        self.buf: list[np.ndarray] = []     # open-window (m, 3) triplets
+        self.buf_rows = 0
+        self.peak_rows = 0
+        self.event_rows: list[np.ndarray] = []  # closed (k, 5) rows, active
+        self.archive_rows: list[np.ndarray] = []  # retired from association
+        self.windows_closed = 0
+        self.pairs_seen = 0
+        self.pairs_kept = 0
+
+    def add(self, tri: np.ndarray) -> None:
+        tri = np.asarray(tri).reshape(-1, 3)
+        if tri.shape[0]:
+            self.buf.append(tri)
+            self.buf_rows += tri.shape[0]
+            self.peak_rows = max(self.peak_rows, self.buf_rows)
+            self.pairs_seen += tri.shape[0]
+
+    def advance(self, frontier: int) -> int:
+        """Close every window whose end the processed frontier has passed."""
+        closed = 0
+        while frontier >= self.w_start + self.window:
+            self._close(self.w_start + self.window)
+            closed += 1
+        return closed
+
+    def close_all(self, frontier: int) -> None:
+        """Flush the open tail window (finalize boundary)."""
+        self.advance(frontier)
+        if self.buf_rows:
+            self._close(self.w_start + self.window)
+
+    def rows_tail(self, min_onset: int) -> np.ndarray:
+        """Active event rows with onset ≥ ``min_onset`` (association feed)."""
+        if not self.event_rows:
+            return np.zeros((0, 5), np.int64)
+        rows = np.concatenate(self.event_rows, axis=0)
+        return rows[rows[:, 1] >= min_onset]
+
+    def retire_below(self, min_onset: int) -> None:
+        """Move rows the association floor has passed into the archive.
+
+        Retired rows can never alert again (``rows_tail`` already excluded
+        them), so keeping them out of the active list makes the per-push
+        association scan O(active window), not O(stream). They remain part
+        of ``all_rows`` for the authoritative finalize.
+        """
+        if not self.event_rows:
+            return
+        rows = np.concatenate(self.event_rows, axis=0)
+        old = rows[:, 1] < min_onset
+        if not old.any():
+            return
+        self.archive_rows.append(rows[old])
+        keep = rows[~old]
+        self.event_rows = [keep] if keep.shape[0] else []
+
+    def all_rows(self) -> np.ndarray:
+        rows = self.archive_rows + self.event_rows
+        if not rows:
+            return np.zeros((0, 5), np.int64)
+        return np.concatenate(rows, axis=0)
+
+    def _close(self, w_end: int) -> None:
+        tri = (np.concatenate(self.buf, axis=0) if self.buf
+               else np.zeros((0, 3), np.int64))
+        in_w = tri[:, 1] < w_end
+        cur, rest = tri[in_w], tri[~in_w]
+        self.buf = [rest] if rest.shape[0] else []
+        self.buf_rows = int(rest.shape[0])
+        if cur.shape[0]:
+            rows = self._filter_cluster(cur)
+            if rows.shape[0]:
+                self.event_rows.append(rows)
+        self.w_start = w_end
+        self.windows_closed += 1
+
+    def _filter_cluster(self, tri: np.ndarray) -> np.ndarray:
+        """One window's triplets → occurrence-filtered clustered rows."""
+        lcfg, acfg = self.cfg.lsh, self.cfg.align
+        pairs = pairs_from_triplets(tri, self.pad_to)
+        if lcfg.occurrence_frac > 0:
+            base = self.w_start - self.lookback
+            v = pairs.valid
+            local = Pairs(
+                idx1=jnp.where(v, pairs.idx1 - base, INVALID),
+                idx2=jnp.where(v, pairs.idx2 - base, INVALID),
+                sim=pairs.sim, valid=v)
+            filt, _ = lsh_mod.occurrence_filter(
+                local, self.lookback + self.window, lcfg.occurrence_frac,
+                limit=max(1, int(lcfg.occurrence_frac * self.window)))
+            keep = filt.valid
+            pairs = Pairs(idx1=jnp.where(keep, pairs.idx1, INVALID),
+                          idx2=jnp.where(keep, pairs.idx2, INVALID),
+                          sim=jnp.where(keep, pairs.sim, 0), valid=keep)
+        self.pairs_kept += int(pairs.count())
+        merged = align_mod.merge_channels(
+            [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
+            acfg.channel_threshold)
+        events = align_mod.cluster_station(merged, acfg)
+        return events_to_rows(events)
+
+    def snapshot(self) -> tuple[dict, dict]:
+        buf = (np.concatenate(self.buf, axis=0).astype(np.int64)
+               if self.buf else np.zeros((0, 3), np.int64))
+        return ({"buf": buf, "events": self.all_rows()},
+                {"w_start": self.w_start, "windows_closed":
+                 self.windows_closed, "pairs_seen": self.pairs_seen,
+                 "pairs_kept": self.pairs_kept, "peak_rows": self.peak_rows})
+
+    def restore(self, arrays: dict, scalars: dict) -> None:
+        buf = np.asarray(arrays["buf"], np.int64).reshape(-1, 3)
+        self.buf = [buf] if buf.shape[0] else []
+        self.buf_rows = int(buf.shape[0])
+        rows = np.asarray(arrays["events"], np.int64).reshape(-1, 5)
+        self.event_rows = [rows] if rows.shape[0] else []
+        self.w_start = int(scalars["w_start"])
+        self.windows_closed = int(scalars["windows_closed"])
+        self.pairs_seen = int(scalars["pairs_seen"])
+        self.pairs_kept = int(scalars["pairs_kept"])
+        self.peak_rows = int(scalars["peak_rows"])
 
 
 @dataclasses.dataclass
@@ -104,11 +329,23 @@ class StationStream:
             self.med_mad = (jnp.asarray(med_mad[0]), jnp.asarray(med_mad[1]))
         self.pending: list[tuple[int, jax.Array]] = []  # pre-freeze blocks
         self.triplets: list[np.ndarray] = []            # (m, 3) idx1,idx2,sim
+        self.rolling = scfg.filter_window_fingerprints > 0
+        self.filter = (RollingPairFilter(cfg, scfg.filter_window_fingerprints,
+                                         scfg.window_fingerprints)
+                       if self.rolling else None)
+        self.processed_fp = 0       # ids fully through the jitted step
+        self._tri_rows = 0
+        self.peak_tri_rows = 0
         self.stats = StreamStats()
 
     @property
     def stats_frozen(self) -> bool:
         return self.med_mad is not None
+
+    def host_state_rows(self) -> int:
+        """Candidate triplet rows currently buffered host-side — the
+        quantity the rolling filter bounds."""
+        return self.filter.buf_rows if self.rolling else self._tri_rows
 
     def push(self, chunk: np.ndarray) -> int:
         """Ingest one chunk; returns pairs emitted by its ready blocks."""
@@ -149,14 +386,27 @@ class StationStream:
         self.state, pairs = stream_step(
             self.state, coeffs, med, mad, self.mappings,
             jnp.int32(base_id), jnp.asarray(vmask),
-            self.cfg.fingerprint, self.cfg.lsh)
+            self.cfg.fingerprint, self.cfg.lsh,
+            self.scfg.window_fingerprints)
         pv = np.asarray(pairs.valid)
         m = int(pv.sum())
+        self.processed_fp = base_id + int(vmask.sum())
         if m:
-            self.triplets.append(np.stack([
+            tri = np.stack([
                 np.asarray(pairs.idx1)[pv],
                 np.asarray(pairs.idx2)[pv],
-                np.asarray(pairs.sim)[pv]], axis=1).astype(np.int64))
+                np.asarray(pairs.sim)[pv]], axis=1).astype(np.int64)
+            if self.rolling:
+                self.filter.add(tri)
+            else:
+                self.triplets.append(tri)
+                self._tri_rows += m
+        if self.rolling:
+            self.filter.advance(self.processed_fp)
+            self.peak_tri_rows = max(self.peak_tri_rows,
+                                     self.filter.peak_rows)
+        else:
+            self.peak_tri_rows = max(self.peak_tri_rows, self._tri_rows)
         self.stats.blocks += 1
         self.stats.fingerprints += int(vmask.sum())
         self.stats.pairs += m
@@ -189,26 +439,32 @@ class StationStream:
         """All emitted triplets as a masked fixed-size ``Pairs``."""
         tri = (np.concatenate(self.triplets, axis=0) if self.triplets
                else np.zeros((0, 3), np.int64))
-        m = tri.shape[0]
-        size = max(pad_to, -(-max(m, 1) // pad_to) * pad_to)
-        idx1 = np.full(size, INVALID, np.int32)
-        idx2 = np.full(size, INVALID, np.int32)
-        sim = np.zeros(size, np.int32)
-        val = np.zeros(size, bool)
-        idx1[:m] = tri[:, 0]
-        idx2[:m] = tri[:, 1]
-        sim[:m] = tri[:, 2]
-        val[:m] = True
-        return Pairs(idx1=jnp.asarray(idx1), idx2=jnp.asarray(idx2),
-                     sim=jnp.asarray(sim), valid=jnp.asarray(val))
+        return pairs_from_triplets(tri, pad_to)
 
     def finalize(self) -> tuple[Events, Pairs, dict]:
-        """Occurrence filter + channel merge + diagonal clustering."""
+        """Occurrence filter + channel merge + diagonal clustering.
+
+        Parity mode runs the offline reduction over the full accumulated
+        pair set. Bounded mode closes the open rolling window and returns
+        the concatenation of per-window events; raw pairs were already
+        retired window-by-window, so the returned ``Pairs`` is empty.
+        """
         self.flush()
         lcfg, acfg = self.cfg.lsh, self.cfg.align
-        pairs = self.accumulated_pairs()
         n_fp = self.ring.next_fp
-        fstats: dict = {"fingerprints": n_fp}
+        if self.rolling:
+            self.filter.close_all(self.processed_fp)
+            events = events_from_rows(self.filter.all_rows())
+            fstats = {
+                "fingerprints": n_fp,
+                "pairs": self.filter.pairs_kept,
+                "windows": self.filter.windows_closed,
+                "events": int(events.count()),
+                "peak_buffered_triplets": self.peak_tri_rows,
+            }
+            return events, pairs_from_triplets(np.zeros((0, 3))), fstats
+        pairs = self.accumulated_pairs()
+        fstats = {"fingerprints": n_fp}
         if lcfg.occurrence_frac > 0 and n_fp > 0:
             pairs, excluded = lsh_mod.occurrence_filter(
                 pairs, n_fp, lcfg.occurrence_frac)
@@ -219,7 +475,96 @@ class StationStream:
         events = align_mod.cluster_station(merged, acfg)
         fstats["pairs"] = int(pairs.count())
         fstats["events"] = int(events.count())
+        fstats["peak_buffered_triplets"] = self.peak_tri_rows
         return events, pairs, fstats
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """(flat arrays, json-able extra) capturing this station exactly."""
+        arrays = {
+            "index/sig": np.asarray(jax.device_get(self.state.sig)),
+            "index/ids": np.asarray(jax.device_get(self.state.ids)),
+            "index/cursor": np.asarray(jax.device_get(self.state.cursor)),
+            "index/inserted": np.asarray(jax.device_get(
+                self.state.inserted)),
+        }
+        ring_a, ring_s = self.ring.snapshot()
+        arrays["ring/buf"] = ring_a["buf"]
+        mad_a, mad_s = self.mad.snapshot()
+        arrays["mad/rows"] = mad_a["rows"]
+        arrays["stats/chunk_wall_s"] = np.asarray(self.stats.chunk_wall_s,
+                                                  np.float64)
+        extra = {
+            "ring": ring_s, "mad": mad_s,
+            "frozen": self.stats_frozen,
+            "processed_fp": self.processed_fp,
+            "peak_tri_rows": self.peak_tri_rows,
+            "stats": {"chunks": self.stats.chunks,
+                      "blocks": self.stats.blocks,
+                      "samples": self.stats.samples,
+                      "fingerprints": self.stats.fingerprints,
+                      "pairs": self.stats.pairs},
+        }
+        if self.stats_frozen:
+            arrays["med"] = np.asarray(self.med_mad[0])
+            arrays["mad_stat"] = np.asarray(self.med_mad[1])
+        if self.pending:
+            arrays["pending/base"] = np.asarray(
+                [b for b, _ in self.pending], np.int64)
+            arrays["pending/coeffs"] = np.stack(
+                [np.asarray(c) for _, c in self.pending]).astype(np.float32)
+        if self.rolling:
+            f_a, f_s = self.filter.snapshot()
+            arrays["filter/buf"] = f_a["buf"]
+            arrays["filter/events"] = f_a["events"]
+            extra["filter"] = f_s
+        else:
+            arrays["triplets"] = (
+                np.concatenate(self.triplets, axis=0).astype(np.int64)
+                if self.triplets else np.zeros((0, 3), np.int64))
+        return arrays, extra
+
+    def restore_state(self, arrays: dict, extra: dict) -> None:
+        t, b, c = self.state.shape
+        self.state = IndexState(
+            sig=jnp.asarray(arrays["index/sig"], jnp.uint32),
+            ids=jnp.asarray(arrays["index/ids"], jnp.int32),
+            cursor=jnp.asarray(arrays["index/cursor"], jnp.int32),
+            inserted=jnp.asarray(arrays["index/inserted"], jnp.int32))
+        assert self.state.shape == (t, b, c), \
+            (self.state.shape, (t, b, c))
+        self.ring.restore({"buf": arrays["ring/buf"]}, extra["ring"])
+        self.mad.restore({"rows": arrays["mad/rows"]}, extra["mad"])
+        self.med_mad = None
+        if extra["frozen"]:
+            self.med_mad = (jnp.asarray(arrays["med"]),
+                            jnp.asarray(arrays["mad_stat"]))
+        self.pending = []
+        if "pending/base" in arrays:
+            bases = np.asarray(arrays["pending/base"], np.int64)
+            coeffs = np.asarray(arrays["pending/coeffs"], np.float32)
+            self.pending = [(int(bases[i]), jnp.asarray(coeffs[i]))
+                            for i in range(bases.shape[0])]
+        if self.rolling:
+            self.filter.restore(
+                {"buf": arrays["filter/buf"],
+                 "events": arrays["filter/events"]}, extra["filter"])
+            self.triplets = []
+            self._tri_rows = 0
+        else:
+            tri = np.asarray(arrays["triplets"], np.int64).reshape(-1, 3)
+            self.triplets = [tri] if tri.shape[0] else []
+            self._tri_rows = int(tri.shape[0])
+        self.processed_fp = int(extra["processed_fp"])
+        self.peak_tri_rows = int(extra["peak_tri_rows"])
+        s = extra["stats"]
+        self.stats = StreamStats(
+            chunks=int(s["chunks"]), blocks=int(s["blocks"]),
+            samples=int(s["samples"]),
+            fingerprints=int(s["fingerprints"]), pairs=int(s["pairs"]),
+            chunk_wall_s=np.asarray(arrays["stats/chunk_wall_s"],
+                                    np.float64).tolist())
 
 
 class StreamingDetector:
@@ -228,7 +573,9 @@ class StreamingDetector:
     ``push`` accepts (n_stations, chunk_len) or a 1-D chunk for a single
     station; chunk lengths may vary call to call. ``finalize`` runs the
     per-station alignment and (when n_stations ≥ 2) the network
-    association, mirroring ``detect_events``.
+    association, mirroring ``detect_events``. In bounded mode each push
+    also polls the incremental association: newly final multi-station
+    detections land in ``alerts`` as they close, not only at finalize.
     """
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig | None = None,
@@ -238,6 +585,11 @@ class StreamingDetector:
         self.scfg = scfg or StreamConfig()
         self.stations = [StationStream(cfg, self.scfg, med_mad=med_mad)
                          for _ in range(n_stations)]
+        self.rolling = self.scfg.filter_window_fingerprints > 0
+        self.alerts: list[np.ndarray] = []   # (k, 4) dt, onset, n_st, score
+        self._emitted = np.zeros((0, 2), np.int64)  # alerted (dt, onset)
+        self._assoc_lo = 0
+        self._polled_windows = 0  # window closes seen by the last poll
 
     def push(self, chunk: np.ndarray) -> int:
         chunk = np.asarray(chunk, np.float32)
@@ -245,7 +597,64 @@ class StreamingDetector:
             chunk = chunk[None, :]
         assert chunk.shape[0] == len(self.stations), \
             (chunk.shape, len(self.stations))
-        return sum(st.push(chunk[i]) for i, st in enumerate(self.stations))
+        emitted = sum(st.push(chunk[i])
+                      for i, st in enumerate(self.stations))
+        if self.rolling and len(self.stations) >= 2:
+            new = self.poll_detections()
+            if new.shape[0]:
+                self.alerts.append(new)
+        return emitted
+
+    def poll_detections(self) -> np.ndarray:
+        """Incremental network association over closed-window events.
+
+        Returns (k, 4) int64 rows (dt, onset, n_stations, score) for
+        groups not alerted before — the near-real-time view. ``finalize``
+        remains the authoritative association over the full event history.
+        """
+        acfg = self.cfg.align
+        if not self.rolling or len(self.stations) < 2:
+            return np.zeros((0, 4), np.int64)
+        # the active rows only change when a window closes — don't repeat
+        # the association dispatch on pushes that closed nothing
+        closed = sum(st.filter.windows_closed for st in self.stations)
+        if closed == self._polled_windows:
+            return np.zeros((0, 4), np.int64)
+        self._polled_windows = closed
+        per_station = [st.filter.rows_tail(self._assoc_lo)
+                       for st in self.stations]
+        if sum(r.shape[0] for r in per_station) == 0:
+            return np.zeros((0, 4), np.int64)
+        events = [events_from_rows(r) for r in per_station]
+        det = align_mod.associate_network(events, acfg, len(self.stations))
+        v = np.asarray(det["valid"])
+        rows = np.stack([np.asarray(det["dt"])[v],
+                         np.asarray(det["onset"])[v],
+                         np.asarray(det["n_stations"])[v],
+                         np.asarray(det["score"])[v]],
+                        axis=1).astype(np.int64)
+        if self._emitted.shape[0] and rows.shape[0]:
+            near = ((np.abs(rows[:, 0, None] - self._emitted[None, :, 0])
+                     <= acfg.dt_tol)
+                    & (np.abs(rows[:, 1, None] - self._emitted[None, :, 1])
+                       <= acfg.onset_tol))
+            rows = rows[~near.any(axis=1)]
+        if rows.shape[0]:
+            self._emitted = np.concatenate([self._emitted, rows[:, :2]])
+        # onsets below every station's closed frontier minus the sliding
+        # window can gain no further members — stop rescanning them, and
+        # archive rows + dedup keys the floor has passed so the per-push
+        # scan stays O(active window) instead of O(stream)
+        frontier = min(st.filter.w_start for st in self.stations)
+        self._assoc_lo = max(self._assoc_lo, frontier
+                             - self.scfg.window_fingerprints
+                             - 2 * acfg.onset_tol)
+        for st in self.stations:
+            st.filter.retire_below(self._assoc_lo)
+        if self._emitted.shape[0]:
+            live = self._emitted[:, 1] >= self._assoc_lo - acfg.onset_tol
+            self._emitted = self._emitted[live]
+        return rows
 
     def finalize(self) -> tuple[dict | None, list[Events], dict]:
         station_events, stats = [], {}
@@ -259,5 +668,81 @@ class StreamingDetector:
             detections = align_mod.associate_network(
                 station_events, self.cfg.align, len(self.stations))
             stats["detections"] = int(detections["valid"].sum())
+        if self.rolling:
+            stats["alerts"] = int(sum(a.shape[0] for a in self.alerts))
         stats["ingest"] = [st.stats.summary() for st in self.stations]
         return detections, station_events, stats
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot(self, ckpt_dir: str, step: int | None = None, *,
+                 background: bool = False, keep: int = 3):
+        """Checkpoint the whole detector through ``train/checkpoint.py``.
+
+        One ``step_<N>`` directory holds every station's index pytree, ring
+        buffer, MAD reservoir, pending blocks, and (bounded mode) rolling
+        filter state, plus the detector's alert dedup keys — everything
+        needed for ``restore`` to continue the stream bit-exactly.
+        """
+        arrays: dict[str, np.ndarray] = {}
+        st_extra = []
+        for i, st in enumerate(self.stations):
+            a, e = st.snapshot_state()
+            arrays.update({f"s{i}/{k}": v for k, v in a.items()})
+            st_extra.append(e)
+        arrays["detector/emitted"] = self._emitted
+        arrays["detector/alerts"] = (
+            np.concatenate(self.alerts, axis=0).astype(np.int64)
+            if self.alerts else np.zeros((0, 4), np.int64))
+        extra = {"n_stations": len(self.stations), "stations": st_extra,
+                 "assoc_lo": self._assoc_lo,
+                 "scfg": {
+                     "block_fingerprints": self.scfg.block_fingerprints,
+                     "window_fingerprints": self.scfg.window_fingerprints,
+                     "filter_window_fingerprints":
+                         self.scfg.filter_window_fingerprints,
+                 }}
+        if step is None:
+            step = self.stations[0].stats.chunks
+        return ckpt_mod.save_checkpoint(ckpt_dir, step, arrays, extra=extra,
+                                        background=background, keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, cfg: DetectConfig,
+                scfg: StreamConfig | None = None, *,
+                step: int | None = None) -> tuple["StreamingDetector", int]:
+        """Rebuild a detector from its latest (or given) snapshot.
+
+        The snapshot records the streaming mode it was taken under; a
+        ``scfg`` whose block size or window lengths differ is rejected up
+        front (the station state layouts are not interchangeable).
+        """
+        arrays, extra, step = ckpt_mod.restore_flat(ckpt_dir, step=step)
+        det = cls(cfg, scfg, n_stations=int(extra["n_stations"]))
+        saved = extra.get("scfg", {})
+        for key, have in (
+                ("block_fingerprints", det.scfg.block_fingerprints),
+                ("window_fingerprints", det.scfg.window_fingerprints),
+                ("filter_window_fingerprints",
+                 det.scfg.filter_window_fingerprints)):
+            if key in saved and int(saved[key]) != int(have):
+                raise ValueError(
+                    f"snapshot was taken with {key}={saved[key]} but the "
+                    f"restoring StreamConfig has {have}; pass a matching "
+                    f"config (e.g. the same --window-fp/--filter-window-fp "
+                    f"flags the snapshotting service ran with)")
+        for i, st in enumerate(det.stations):
+            prefix = f"s{i}/"
+            sub = {k[len(prefix):]: v for k, v in arrays.items()
+                   if k.startswith(prefix)}
+            st.restore_state(sub, extra["stations"][i])
+        det._emitted = np.asarray(arrays["detector/emitted"],
+                                  np.int64).reshape(-1, 2)
+        alerts = np.asarray(arrays["detector/alerts"],
+                            np.int64).reshape(-1, 4)
+        det.alerts = [alerts] if alerts.shape[0] else []
+        det._assoc_lo = int(extra["assoc_lo"])
+        if det.rolling:
+            det._polled_windows = sum(st.filter.windows_closed
+                                      for st in det.stations)
+        return det, step

@@ -26,13 +26,47 @@ from repro.stream.index import StreamIndexConfig
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
     """Streaming-side knobs (capacity/cadence; detection semantics stay in
-    LSHConfig/AlignConfig so offline and streaming share one meaning)."""
+    LSHConfig/AlignConfig so offline and streaming share one meaning).
+
+    ``window_fingerprints`` > 0 turns the detector into a sliding-window
+    service: index entries older than the newest id minus the window are
+    expired inside the jitted step, so a fingerprint only ever pairs with
+    partners at most one window behind it. ``filter_window_fingerprints``
+    > 0 additionally replaces the finalize-only occurrence filter with a
+    rolling per-window filter + clustering pass, bounding the host-side
+    pair/triplet state by the window size (requires a sliding window; see
+    ``engine.RollingPairFilter``). Both default to 0: the unbounded
+    accumulate-then-finalize path with exact offline parity.
+
+    One fingerprint spans ``FingerprintConfig.lag_samples / fs`` seconds of
+    stream time (2 s at paper settings), so a window of N days is
+    ``N * 86400 * fs / lag_samples`` fingerprints.
+    """
 
     block_fingerprints: int = 64   # fingerprints per jitted step
     index: StreamIndexConfig = StreamIndexConfig()  # resident index shape
     stats_warmup_blocks: int = 2   # blocks buffered before MAD stats freeze
     reservoir_rows: int = 2048     # coefficient rows kept for median/MAD
     seed: int = 0
+    window_fingerprints: int = 0   # sliding detection window (0 = keep all)
+    filter_window_fingerprints: int = 0  # rolling occurrence filter window
+
+    def __post_init__(self):
+        # ValueError (not assert): these are reachable from CLI flags and
+        # must hold under `python -O` too — a filter window without an
+        # expire window would let partners reach arbitrarily far back and
+        # silently break the rolling filter's rebased id space.
+        if self.filter_window_fingerprints > 0 \
+                and self.window_fingerprints <= 0:
+            raise ValueError(
+                "rolling occurrence filter needs a sliding window "
+                "(window_fingerprints > 0): the expire window is what "
+                "bounds how far back partners reach")
+        if 0 < self.window_fingerprints < self.block_fingerprints:
+            raise ValueError(
+                f"window_fingerprints={self.window_fingerprints} smaller "
+                f"than one block ({self.block_fingerprints}) would expire "
+                f"the block being inserted")
 
 
 class WaveformRing:
@@ -88,6 +122,16 @@ class WaveformRing:
     def pending_samples(self) -> int:
         return int(self.buf.size)
 
+    def snapshot(self) -> tuple[dict, dict]:
+        """(arrays, json-able scalars) capturing the ring exactly."""
+        return ({"buf": self.buf.copy()},
+                {"next_fp": self.next_fp, "samples_in": self.samples_in})
+
+    def restore(self, arrays: dict, scalars: dict) -> None:
+        self.buf = np.asarray(arrays["buf"], np.float32).reshape(-1).copy()
+        self.next_fp = int(scalars["next_fp"])
+        self.samples_in = int(scalars["samples_in"])
+
 
 class StreamingMAD:
     """Uniform reservoir of coefficient rows → running median/MAD (§5.2).
@@ -114,6 +158,20 @@ class StreamingMAD:
                 j = int(self.rng.integers(0, self.seen))
                 if j < self.n_rows:
                     self.rows[j] = row
+
+    def snapshot(self) -> tuple[dict, dict]:
+        """(arrays, json-able scalars incl. PCG state) — exact restore."""
+        return ({"rows": self.rows.copy()},
+                {"seen": self.seen, "filled": self.filled,
+                 "rng_state": self.rng.bit_generator.state})
+
+    def restore(self, arrays: dict, scalars: dict) -> None:
+        rows = np.asarray(arrays["rows"], np.float32)
+        assert rows.shape == self.rows.shape, (rows.shape, self.rows.shape)
+        self.rows = rows.copy()
+        self.seen = int(scalars["seen"])
+        self.filled = int(scalars["filled"])
+        self.rng.bit_generator.state = scalars["rng_state"]
 
     def stats(self) -> tuple[np.ndarray, np.ndarray]:
         assert self.filled >= 2, "need ≥2 coefficient rows for MAD stats"

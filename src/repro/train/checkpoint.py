@@ -100,6 +100,26 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def restore_flat(ckpt_dir: str, *, step: int | None = None
+                 ) -> tuple[dict[str, np.ndarray], dict, int]:
+    """Rebuild the flat key-path → host array dict without a target oracle.
+
+    For states whose leaf *shapes* are part of the state (e.g. a streaming
+    ingest ring whose pending-sample buffer length varies), the caller
+    cannot supply a ShapeDtypeStruct pytree up front; the manifest itself
+    is the shape oracle. Returns (arrays, extra-metadata, step).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    meta = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as arrays:
+        out = {k: arrays[k] for k in arrays.files}
+    return out, meta.get("extra", {}), int(step)
+
+
 def restore_checkpoint(ckpt_dir: str, target, *, step: int | None = None,
                        shardings=None) -> tuple[Any, dict]:
     """Rebuild ``target``-structured state from disk.

@@ -11,6 +11,14 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_collection_modifyitems(config, items):
+    # `tier1` is an alias marker: every test not marked slow belongs to the
+    # tier-1 suite, so `-m tier1` selects exactly the fast default set.
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,11 +1,17 @@
 """Streaming detection subsystem: index semantics, ingest halo exactness,
-offline/streaming parity, retracing discipline, serving smoke."""
+offline/streaming parity (incl. golden pin), bounded sliding-window mode,
+snapshot/restore, retracing discipline, serving smoke."""
+import json
+import pathlib
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.fast_seismic import smoke_config, stream_smoke_config
+from repro.configs.fast_seismic import (smoke_config,
+                                        stream_bounded_smoke_config,
+                                        stream_smoke_config)
 from repro.core import fingerprint as F
 from repro.core import lsh as L
 from repro.core.lsh import INVALID, LSHConfig
@@ -226,6 +232,180 @@ def test_streaming_parity_self_stats():
     assert fstats["events"] <= 2 * max(2, len(off))
 
 
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "stream_pairs.json"
+
+
+def test_streaming_golden_pair_parity():
+    """Golden pin: fixed-seed trace, expected pair sets under tests/golden/.
+
+    Two-pass stats must reproduce the stored streamed pair set *exactly*
+    (and with it 100% recovery of the stored offline set); self-computed
+    reservoir stats must stay at or above the recorded ~88% recovery. Any
+    parity drift fails loudly here instead of sliding under the slow
+    threshold tests.
+    """
+    gold = json.loads(GOLDEN.read_text())
+    cfg = smoke_config()
+    ds = make_dataset(SynthConfig(**gold["synth"]))
+    wf = ds.waveforms[0]
+    fcfg = cfg.fingerprint
+    med_mad = F.mad_stats(F.coeffs_from_waveform(jnp.asarray(wf), fcfg),
+                          1.0, jax.random.PRNGKey(0))
+    med_mad = (np.asarray(med_mad[0]), np.asarray(med_mad[1]))
+    off = {tuple(p) for p in gold["offline_pairs"]}
+    expect_two = {tuple(p) for p in gold["stream_two_pass_pairs"]}
+
+    got_two, _, _ = _stream_pairs(cfg, wf, gold["n_chunks"],
+                                  med_mad=med_mad)
+    assert got_two == expect_two, (
+        sorted(got_two - expect_two), sorted(expect_two - got_two))
+    assert len(off & got_two) == len(off)      # 100% of offline recovered
+
+    got_self, _, _ = _stream_pairs(cfg, wf, gold["n_chunks"])
+    recovered = len(off & got_self) / len(off)
+    floor = gold["self_stats_recall"] - 0.03   # small slack under the pin
+    assert recovered >= floor, (recovered, gold["self_stats_recall"])
+
+
+# ---------------------------------------------------------------------------
+# bounded mode: sliding window + rolling filter + incremental association
+# ---------------------------------------------------------------------------
+
+
+def _bounded_setup(n_stations=3, duration_s=600.0, seed=11):
+    cfg, scfg = smoke_config(), stream_bounded_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=duration_s,
+                                  n_stations=n_stations, n_sources=2,
+                                  events_per_source=5, event_snr=3.0,
+                                  seed=seed))
+    return cfg, scfg, ds
+
+
+def test_bounded_mode_windows_and_alerts():
+    """Sliding window + rolling filter: pairs respect the window, host
+    triplet state stays bounded, and multi-station alerts surface before
+    finalize."""
+    cfg, scfg, ds = _bounded_setup()
+    det = StreamingDetector(cfg, scfg, n_stations=3)
+    for start in range(0, ds.waveforms.shape[1], 6000):
+        det.push(ds.waveforms[:, start: start + 6000])
+    # near-real-time association fired during the stream
+    assert sum(a.shape[0] for a in det.alerts) >= 1
+    detections, events, stats = det.finalize()
+    assert stats["detections"] >= 1
+    assert stats["alerts"] >= 1
+    for i in range(3):
+        # rolling filter closed windows and bounded the buffered pairs
+        assert stats[f"station{i}_windows"] >= 2
+        assert (stats[f"station{i}_peak_buffered_triplets"]
+                <= 32 * scfg.filter_window_fingerprints)
+        # every retained pair honored the sliding window
+        st = det.stations[i]
+        assert st.host_state_rows() <= st.peak_tri_rows
+        rows = st.filter.all_rows()
+        if rows.shape[0]:
+            assert (rows[:, 0] < scfg.window_fingerprints).all()
+
+
+def test_bounded_mode_expiry_caps_pair_reach():
+    """With a sliding window, emitted pair dt never exceeds the window."""
+    cfg, scfg, ds = _bounded_setup(n_stations=1)
+    det = StreamingDetector(cfg, scfg, n_stations=1)
+    st = det.stations[0]
+    seen = []
+    inner_add = st.filter.add
+    st.filter.add = lambda tri: (seen.append(np.asarray(tri)),
+                                 inner_add(tri))[1]
+    for chunk in np.array_split(ds.waveforms[0], 8):
+        det.push(chunk)
+    st.flush()
+    tri = np.concatenate(seen, axis=0)
+    assert tri.shape[0] > 0
+    assert ((tri[:, 1] - tri[:, 0]) < scfg.window_fingerprints).all()
+    # and without a window the same trace emits farther-reaching pairs
+    det2 = StreamingDetector(cfg, stream_smoke_config(), n_stations=1)
+    for chunk in np.array_split(ds.waveforms[0], 8):
+        det2.push(chunk)
+    det2.stations[0].flush()
+    tri2 = (np.concatenate(det2.stations[0].triplets, axis=0)
+            if det2.stations[0].triplets else np.zeros((0, 3), np.int64))
+    assert (tri2[:, 1] - tri2[:, 0]).max() >= scfg.window_fingerprints
+
+
+def test_snapshot_restore_roundtrip(tmp_path):
+    """Kill/restore mid-stream reproduces the uninterrupted detections
+    exactly (acceptance criterion)."""
+    cfg, scfg, ds = _bounded_setup()
+    wf = ds.waveforms
+    starts = list(range(0, wf.shape[1], 6000))
+    half = len(starts) // 2
+
+    run = StreamingDetector(cfg, scfg, n_stations=3)
+    for s in starts[:half]:
+        run.push(wf[:, s: s + 6000])
+    run.snapshot(str(tmp_path), step=half)
+
+    restored, step = StreamingDetector.restore(str(tmp_path), cfg, scfg)
+    assert step == half
+    for s in starts[half:]:
+        run.push(wf[:, s: s + 6000])
+        restored.push(wf[:, s: s + 6000])
+
+    uninterrupted = StreamingDetector(cfg, scfg, n_stations=3)
+    for s in starts:
+        uninterrupted.push(wf[:, s: s + 6000])
+
+    d0, _, s0 = uninterrupted.finalize()
+    d1, _, s1 = run.finalize()
+    d2, _, s2 = restored.finalize()
+    for name in ("dt", "onset", "n_stations", "score", "valid"):
+        np.testing.assert_array_equal(np.asarray(d0[name]),
+                                      np.asarray(d2[name]), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(d0[name]),
+                                      np.asarray(d1[name]), err_msg=name)
+    assert s2["detections"] == s0["detections"]
+    # alert history also carries across the restore
+    assert (sum(a.shape[0] for a in restored.alerts)
+            == sum(a.shape[0] for a in run.alerts))
+
+
+def test_snapshot_restore_rejects_mode_mismatch(tmp_path):
+    """Restoring under a different streaming mode fails up front with a
+    clear error, not a KeyError deep in state reconstruction."""
+    cfg, scfg, ds = _bounded_setup(n_stations=1, duration_s=400.0)
+    det = StreamingDetector(cfg, scfg, n_stations=1)
+    for chunk in np.array_split(ds.waveforms[0], 4):
+        det.push(chunk)
+    det.snapshot(str(tmp_path))
+    with pytest.raises(ValueError, match="window_fingerprints"):
+        StreamingDetector.restore(str(tmp_path), cfg, stream_smoke_config())
+
+
+def test_snapshot_restore_parity_mode(tmp_path):
+    """Snapshot/restore is exact in the unbounded parity mode too (the
+    accumulated triplets and reservoir state travel with the index)."""
+    cfg, scfg = smoke_config(), stream_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=400.0, n_stations=1,
+                                  n_sources=2, events_per_source=4,
+                                  event_snr=3.0, seed=5))
+    wf = ds.waveforms[0]
+    chunks = np.array_split(wf, 8)
+
+    run = StreamingDetector(cfg, scfg, n_stations=1)
+    for c in chunks[:3]:
+        run.push(c)
+    run.snapshot(str(tmp_path))
+    restored, _ = StreamingDetector.restore(str(tmp_path), cfg, scfg)
+    for c in chunks[3:]:
+        run.push(c)
+        restored.push(c)
+    e1, p1, f1 = run.stations[0].finalize()
+    e2, p2, f2 = restored.stations[0].finalize()
+    np.testing.assert_array_equal(np.asarray(p1.idx1), np.asarray(p2.idx1))
+    np.testing.assert_array_equal(np.asarray(p1.valid), np.asarray(p2.valid))
+    assert f1 == f2
+
+
 def test_stream_step_no_retracing():
     """Same-shape chunks reuse one executable for insert/query/step."""
     cfg, wf, _, med_mad = _parity_setup()
@@ -246,6 +426,39 @@ def test_stream_step_no_retracing():
     assert stream_step._cache_size() == traces_before
     assert SI.insert._cache_size() == ins_before
     assert SI.query._cache_size() == q_before
+
+
+def test_bounded_stream_step_no_retracing():
+    """Expire + rolling-filter steps trigger no recompilation across
+    chunks: the sliding window is a static arg (one extra trace total) and
+    window closes reuse the padded merge/cluster executables."""
+    from repro.core import align as align_mod
+
+    cfg, scfg, ds = _bounded_setup(n_stations=1)
+    wf = ds.waveforms[0]
+    fcfg = cfg.fingerprint
+    med_mad = F.mad_stats(F.coeffs_from_waveform(jnp.asarray(wf), fcfg),
+                          1.0, jax.random.PRNGKey(0))
+    det = StreamingDetector(cfg, scfg, n_stations=1,
+                            med_mad=(np.asarray(med_mad[0]),
+                                     np.asarray(med_mad[1])))
+    st = det.stations[0]
+    chunks = np.array_split(wf, 12)
+    for c in chunks[:5]:
+        det.push(c)
+    # warmup must have closed at least one rolling window (so the filter's
+    # merge/cluster executables exist) and run several expiring steps
+    assert st.filter.windows_closed >= 1
+    step_traces = stream_step._cache_size()
+    merge_traces = align_mod.merge_channels._cache_size()
+    cluster_traces = align_mod.cluster_station._cache_size()
+    windows_before = st.filter.windows_closed
+    for c in chunks[5:]:
+        det.push(c)
+    assert st.filter.windows_closed > windows_before  # more closes ran
+    assert stream_step._cache_size() == step_traces
+    assert align_mod.merge_channels._cache_size() == merge_traces
+    assert align_mod.cluster_station._cache_size() == cluster_traces
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,200 @@
+"""Property-based tests for StreamingIndex / ingestion invariants.
+
+Each property lives in a ``check_*`` helper invoked two ways: through
+hypothesis (via the ``_hypothesis_compat`` shim — skipped cleanly when
+hypothesis is not installed) and through a deterministic seed sweep so the
+invariants are exercised in network-less environments too.
+
+Properties (ISSUE 2):
+  * insert→query roundtrip is split-invariant: pairs found when a batch is
+    inserted in arbitrary sub-batches equal the single-batch result;
+  * ring eviction never resurrects ids: a fresh query sees exactly the
+    ``cap`` newest same-signature residents;
+  * ``expire(min_id)`` leaves no reachable id < min_id;
+  * chunked ingestion is sample-exact for random chunk lengths.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import fingerprint as F
+from repro.core.lsh import INVALID, LSHConfig
+from repro.stream import StreamIndexConfig, WaveformRing
+from repro.stream import index as SI
+
+CFG = LSHConfig(n_tables=12, n_funcs=4, n_matches=1, bucket_cap=8,
+                min_dt=1, occurrence_frac=0.0)
+SET = settings(max_examples=15, deadline=None)
+
+
+def _sigs_with_dups(rng, n, n_dups, t=CFG.n_tables):
+    """Random signatures with ``n_dups`` rows copied from earlier rows."""
+    sigs = rng.integers(0, 2**32, (n, t), dtype=np.uint32)
+    for _ in range(n_dups):
+        src, dst = sorted(rng.integers(0, n, 2).tolist())
+        if src != dst:
+            sigs[dst] = sigs[src]
+    return jnp.asarray(sigs)
+
+
+def _pair_map(pairs):
+    v = np.asarray(pairs.valid)
+    return dict(zip(zip(np.asarray(pairs.idx1)[v].tolist(),
+                        np.asarray(pairs.idx2)[v].tolist()),
+                    np.asarray(pairs.sim)[v].tolist()))
+
+
+def _splits(rng, n, k):
+    """n items into ≤k random non-empty contiguous batches."""
+    cuts = np.unique(rng.integers(1, n, size=max(0, k - 1)))
+    return np.split(np.arange(n), cuts)
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+def check_split_invariance(seed: int, n_batches: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 40))
+    sigs = _sigs_with_dups(rng, n, n_dups=int(rng.integers(1, 5)))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    icfg = StreamIndexConfig(n_buckets=1024, bucket_cap=n)  # no eviction
+
+    one = SI.init_index(CFG, icfg)
+    one = SI.insert(one, sigs, ids, CFG)
+    expect = _pair_map(SI.query(one, sigs, ids, CFG))
+
+    split = SI.init_index(CFG, icfg)
+    got = {}
+    for idx in _splits(rng, n, n_batches):
+        b_sigs, b_ids = sigs[idx], ids[idx]
+        split = SI.insert(split, b_sigs, b_ids, CFG)
+        got.update(_pair_map(SI.query(split, b_sigs, b_ids, CFG)))
+    assert got == expect, (seed, n_batches, got, expect)
+
+
+def check_eviction_never_resurrects(seed: int, cap: int, n_ins: int):
+    rng = np.random.default_rng(seed)
+    cfg = LSHConfig(n_tables=4, n_funcs=4, n_matches=1, bucket_cap=8,
+                    min_dt=1, occurrence_frac=0.0)
+    state = SI.init_index(cfg, StreamIndexConfig(n_buckets=64,
+                                                 bucket_cap=cap))
+    sig = jnp.asarray(rng.integers(0, 2**32, (1, 4), dtype=np.uint32))
+    for idx in _splits(rng, n_ins, int(rng.integers(1, n_ins + 1))):
+        batch = jnp.tile(sig, (len(idx), 1))
+        state = SI.insert(state, batch,
+                          jnp.asarray(idx, jnp.int32), cfg)
+    pairs = SI.query(state, sig, jnp.asarray([n_ins], jnp.int32), cfg)
+    v = np.asarray(pairs.valid)
+    partners = set(np.asarray(pairs.idx1)[v].tolist())
+    newest = set(range(max(0, n_ins - cap), n_ins))
+    assert partners == newest, (seed, cap, n_ins, partners, newest)
+
+
+def check_expire_unreachable(seed: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    sigs = _sigs_with_dups(rng, n, n_dups=int(rng.integers(2, 8)))
+    state = SI.init_index(CFG, StreamIndexConfig(n_buckets=256,
+                                                 bucket_cap=8))
+    state = SI.insert(state, sigs, jnp.arange(n, dtype=jnp.int32), CFG)
+    min_id = int(rng.integers(0, n + 1))
+    state = SI.expire(state, min_id)
+    resident = np.asarray(state.ids)
+    resident = resident[resident != INVALID]
+    assert (resident >= min_id).all(), (seed, min_id, resident.min())
+    pairs = SI.query(state, sigs,
+                     1000 + jnp.arange(n, dtype=jnp.int32), CFG)
+    v = np.asarray(pairs.valid)
+    assert (np.asarray(pairs.idx1)[v] >= min_id).all(), (seed, min_id)
+
+
+def check_chunked_ingest_sample_exact(seed: int):
+    rng = np.random.default_rng(seed)
+    fcfg = F.FingerprintConfig(img_freq=8, img_time=16, img_hop=4, top_k=16,
+                               mad_sample_rate=1.0)
+    block_fp = int(rng.integers(2, 9))
+    ring = WaveformRing(fcfg, block_fingerprints=block_fp)
+    n_samples = int(rng.integers(4_000, 20_000))
+    wf = rng.standard_normal(n_samples).astype(np.float32)
+    # random chunk lengths, including tiny and empty-ish chunks
+    pos, blocks = 0, []
+    while pos < n_samples:
+        step = int(rng.integers(1, 3_000))
+        blocks.extend(ring.push(wf[pos: pos + step]))
+        pos += step
+    lag, bs = fcfg.lag_samples, fcfg.block_samples(block_fp)
+    for base, blk in blocks:
+        np.testing.assert_array_equal(blk, wf[base * lag: base * lag + bs])
+    tail = ring.flush_partial()
+    got = len(blocks) * block_fp
+    if tail is not None:
+        base, blk, n_valid = tail
+        # the tail block carries every remaining buffered sample, padded
+        extent = min(bs, n_samples - base * lag)
+        np.testing.assert_array_equal(
+            blk[:extent], wf[base * lag: base * lag + extent])
+        assert (blk[extent:] == 0).all()
+        # valid fingerprints must fit fully inside real samples
+        w = fcfg.window_samples
+        assert (n_valid - 1) * lag + w <= extent
+        got += n_valid
+    assert got == fcfg.n_fingerprints(n_samples), (seed, got)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (skip when hypothesis is missing)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@SET
+def test_split_invariance_hyp(seed, n_batches):
+    check_split_invariance(seed, n_batches)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(5, 12))
+@SET
+def test_eviction_hyp(seed, cap, n_ins):
+    check_eviction_never_resurrects(seed, cap, n_ins)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_expire_hyp(seed):
+    check_expire_unreachable(seed)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_chunked_ingest_hyp(seed):
+    check_chunked_ingest_sample_exact(seed)
+
+
+# ---------------------------------------------------------------------------
+# deterministic seed sweep (always runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_split_invariance(seed):
+    check_split_invariance(seed, n_batches=(seed % 5) + 1)
+
+
+@pytest.mark.parametrize("seed,cap,n_ins",
+                         [(0, 1, 5), (1, 2, 7), (2, 3, 12), (3, 4, 9)])
+def test_eviction_never_resurrects(seed, cap, n_ins):
+    check_eviction_never_resurrects(seed, cap, n_ins)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_expire_unreachable(seed):
+    check_expire_unreachable(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_chunked_ingest_sample_exact(seed):
+    check_chunked_ingest_sample_exact(seed)
