@@ -1,0 +1,20 @@
+# Convenience entry points. PYTHONPATH covers src (the package) and the
+# repo root (the benchmarks package).
+PY := PYTHONPATH=src:. python
+
+.PHONY: test test-all bench bench-smoke bench-e2e
+
+test:            ## tier-1 suite (what the driver verifies)
+	$(PY) -m pytest -x -q -m "not slow"
+
+test-all:        ## tier-1 + slow parity sweeps
+	$(PY) -m pytest -q
+
+bench:           ## full benchmark suite (BENCH_*.json + csv lines)
+	$(PY) -m benchmarks.run
+
+bench-e2e:       ## streaming hot-path benchmark only (BENCH_e2e.json)
+	$(PY) -m benchmarks.run --e2e
+
+bench-smoke:     ## tier-1-safe perf smoke: quick e2e run, one command
+	$(PY) -m benchmarks.run --e2e --quick

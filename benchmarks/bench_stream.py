@@ -26,26 +26,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (bench_lsh_config, csv_line,
-                               station_fingerprints, timed)
+                               station_fingerprints, stream_smoke_configs,
+                               stream_smoke_dataset, timed)
 from repro.core import fingerprint as F
 from repro.core import lsh as L
 from repro.core.detect import DetectConfig
 from repro.core.synth import SynthConfig, make_dataset
 from repro.stream import StreamingDetector, StreamConfig
 from repro.stream import index as SI
+from repro.stream.engine import ingest_chunks
 
 
 def memory_point(base_duration_s: float = 600.0) -> dict:
-    """Peak host memory of the rolling-filter path at 1× vs 3× stream."""
-    from repro.configs.fast_seismic import (smoke_config,
-                                            stream_bounded_smoke_config)
-    cfg, scfg = smoke_config(), stream_bounded_smoke_config()
+    """Peak host memory of the rolling-filter path at 1× vs 3× stream.
+
+    The detect/stream configs are built once (``stream_smoke_configs``);
+    only the synthetic trace differs between the 1× and 3× runs.
+    """
+    cfg, scfg = stream_smoke_configs(bounded=True)
     out = {}
     for mult in (1, 3):
-        ds = make_dataset(SynthConfig(duration_s=base_duration_s * mult,
-                                      n_stations=1, n_sources=2,
-                                      events_per_source=4 * mult,
-                                      event_snr=3.0, seed=7))
+        ds = stream_smoke_dataset(duration_s=base_duration_s * mult,
+                                  events_per_source=4 * mult)
         wf = ds.waveforms[0]
         det = StreamingDetector(cfg, scfg, n_stations=1)
         chunks = [wf[s: s + 6000] for s in range(0, wf.size, 6000)]
@@ -128,20 +130,13 @@ def main(argv=None):
                                                      bucket_cap=8),
                           stats_warmup_blocks=2),
         n_stations=1)
-    wf = ds.waveforms[1]
-    chunks = np.array_split(wf, 16)
-    for c in chunks[:4]:          # warm up traces + freeze stats
-        det.push(c)
-    t0 = __import__("time").perf_counter
-    start = t0()
-    for c in chunks[4:]:
-        det.push(c)
-    wall = t0() - start
+    # shared ingest loop (same code path as serve_detect / bench_e2e)
+    res = ingest_chunks(det, ds.waveforms[1], n_chunks=16, warmup_chunks=4)
+    wall, n_done = res["wall_s"], res["timed_chunks"]
     ing = det.stations[0].stats.summary()
-    n_done = len(chunks) - 4
     csv_line("stream.detector_chunk", wall / n_done * 1e6,
              f"chunks_per_s={n_done / max(wall, 1e-9):.1f} "
-             f"samples_per_s={sum(c.size for c in chunks[4:]) / max(wall, 1e-9):.0f}")
+             f"samples_per_s={res['samples'] / max(wall, 1e-9):.0f}")
 
     point = {
         "n_fingerprints": int(n),
@@ -151,7 +146,7 @@ def main(argv=None):
         "amortized_speedup": round(t_search / max(t_iq, 1e-12), 2),
         "detector_chunks_per_s": round(n_done / max(wall, 1e-9), 2),
         "detector_samples_per_s": round(
-            sum(c.size for c in chunks[4:]) / max(wall, 1e-9), 1),
+            res["samples"] / max(wall, 1e-9), 1),
         "ingest": ing,
     }
     if args.memory:

@@ -68,3 +68,36 @@ def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line)
     return line
+
+
+# ---------------------------------------------------------------------------
+# streaming-bench substrate (shared by bench_stream / bench_e2e; the chunk
+# ingest loop itself is repro.stream.engine.ingest_chunks, also used by
+# launch/serve_detect)
+# ---------------------------------------------------------------------------
+
+
+def stream_smoke_configs(bounded: bool = False):
+    """(DetectConfig, StreamConfig) for streaming benchmarks — built once,
+    not re-imported per bench mode / stream multiplier."""
+    from repro.configs.fast_seismic import (smoke_config,
+                                            stream_bounded_smoke_config,
+                                            stream_smoke_config)
+    scfg = stream_bounded_smoke_config() if bounded else stream_smoke_config()
+    return smoke_config(), scfg
+
+
+def stream_smoke_dataset(duration_s: float = 600.0, n_stations: int = 1, *,
+                         seed: int = 7, events_per_source: int = 4):
+    return make_dataset(SynthConfig(
+        duration_s=duration_s, n_stations=n_stations, n_sources=2,
+        events_per_source=events_per_source, event_snr=3.0, seed=seed))
+
+
+def frozen_smoke_stats(cfg, waveform) -> tuple[np.ndarray, np.ndarray]:
+    """Offline §5.2 median/MAD for a trace (pre-frozen detector stats, so
+    benches measure the steady state rather than the warmup path)."""
+    med, mad = F.mad_stats(
+        F.coeffs_from_waveform(jnp.asarray(waveform), cfg.fingerprint),
+        1.0, jax.random.PRNGKey(0))
+    return np.asarray(med), np.asarray(mad)

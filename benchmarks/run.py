@@ -2,31 +2,54 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.csv_line).
 Roofline reporting (from dry-run artifacts) appended when artifacts exist.
+
+``--e2e`` runs only the streaming hot-path benchmark (BENCH_e2e.json);
+``--quick`` shrinks it to the tier-1-safe smoke invocation
+(``make bench-smoke``).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--e2e", action="store_true",
+                    help="run only the end-to-end hot-path benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-size the e2e benchmark")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
-    from benchmarks import (bench_alternatives, bench_bandpass,
+    if args.e2e:
+        from benchmarks import bench_e2e
+        bench_e2e.main(["--quick"] if args.quick else [])
+        print(f"# total bench time {time.time()-t0:.0f}s")
+        return
+
+    from benchmarks import (bench_alternatives, bench_bandpass, bench_e2e,
                             bench_factor_analysis, bench_lsh_params,
                             bench_mad_sampling, bench_occurrence_filter,
                             bench_partitions, bench_scaling, bench_stream)
+    # bench_stream / bench_e2e parse argv — hand them an explicit list so
+    # the runner's own flags (--quick) never leak in via sys.argv; the
+    # remaining mains take no arguments
     suites = [
-        ("factor_analysis(Fig10/Tab5)", bench_factor_analysis.main),
-        ("occurrence_filter(Tab1)", bench_occurrence_filter.main),
-        ("bandpass(Fig11)", bench_bandpass.main),
-        ("lsh_params(Fig12/Fig6)", bench_lsh_params.main),
-        ("partitions(Fig13)", bench_partitions.main),
-        ("scaling(Fig14)", bench_scaling.main),
-        ("mad_sampling(Tab6)", bench_mad_sampling.main),
-        ("alternatives(Tab2)", bench_alternatives.main),
-        ("stream(incremental_index)", bench_stream.main),
+        ("factor_analysis(Fig10/Tab5)", lambda: bench_factor_analysis.main()),
+        ("occurrence_filter(Tab1)", lambda: bench_occurrence_filter.main()),
+        ("bandpass(Fig11)", lambda: bench_bandpass.main()),
+        ("lsh_params(Fig12/Fig6)", lambda: bench_lsh_params.main()),
+        ("partitions(Fig13)", lambda: bench_partitions.main()),
+        ("scaling(Fig14)", lambda: bench_scaling.main()),
+        ("mad_sampling(Tab6)", lambda: bench_mad_sampling.main()),
+        ("alternatives(Tab2)", lambda: bench_alternatives.main()),
+        ("stream(incremental_index)", lambda: bench_stream.main([])),
+        ("stream_e2e(hot_path)",
+         lambda: bench_e2e.main(["--quick"] if args.quick else [])),
     ]
     failures = 0
     for name, fn in suites:

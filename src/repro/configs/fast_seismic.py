@@ -57,6 +57,8 @@ def stream_config() -> StreamConfig:
     device and host state stay flat over an unbounded stream.
     """
     day = 43_200  # fingerprints per day at the 2 s lag (86400 s / 2 s)
+    # fused/pooled default True: one donated dispatch per block, and one
+    # vmapped executable for all stations of a monitoring network
     return StreamConfig(block_fingerprints=256,
                         index=StreamIndexConfig(n_buckets=16384,
                                                 bucket_cap=8),
@@ -77,6 +79,24 @@ def stream_smoke_config() -> StreamConfig:
                         stats_warmup_blocks=2, reservoir_rows=1024)
 
 
+def stream_deferred_smoke_config() -> StreamConfig:
+    """Smoke streaming with the re-binarize-after-freeze warmup hook.
+
+    ``stats_warmup_blocks=0`` defers the MAD freeze to ``flush()``: every
+    block stays buffered while the reservoir absorbs the whole trace, and
+    the freeze then binarizes the buffered warmup fingerprints with the
+    matured statistics. On the smoke trace (reservoir ≥ total rows) the
+    self-computed statistics equal the offline two-pass statistics
+    exactly, closing the ~88% self-stats pair-recall gap to 100% (pinned
+    by the golden test). Host memory is O(trace) — a finite-trace /
+    backfill configuration, not an unbounded-stream one.
+    """
+    return StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=2048,
+                                                bucket_cap=8),
+                        stats_warmup_blocks=0, reservoir_rows=1024)
+
+
 def stream_bounded_smoke_config() -> StreamConfig:
     """CPU-scale *bounded* streaming: sliding window + rolling filter.
 
@@ -90,6 +110,34 @@ def stream_bounded_smoke_config() -> StreamConfig:
                         stats_warmup_blocks=2, reservoir_rows=1024,
                         window_fingerprints=128,
                         filter_window_fingerprints=64)
+
+
+def latency_config() -> DetectConfig:
+    """Real-time alerting detection config (the e2e hot-path benchmark).
+
+    Small spectral images (8×8) at a 1 s fingerprint lag: per-block
+    compute shrinks until the *dispatch pipeline* — not FLOPs — bounds
+    end-to-end throughput, which is exactly the regime the fused
+    single-dispatch step and the vmapped station pool exist for (a
+    monitoring network pushing short blocks for low alert latency cannot
+    amortize per-stage dispatch overhead the way a batch backfill can).
+    """
+    fp = FingerprintConfig(stft_len=100, stft_hop=25, img_freq=8, img_time=8,
+                           img_hop=4, top_k=16, mad_sample_rate=1.0)
+    return DetectConfig(
+        fingerprint=fp,
+        lsh=LSHConfig(n_tables=8, n_funcs=4, n_matches=2, bucket_cap=4,
+                      min_dt=fp.overlap_fingerprints, occurrence_frac=0.0),
+        align=AlignConfig(min_cluster_size=1, min_cluster_sim=4),
+    )
+
+
+def stream_latency_smoke_config() -> StreamConfig:
+    """Streaming block for ``latency_config``: 4 fingerprints per step =
+    4 s alert latency at the 1 s lag."""
+    return StreamConfig(block_fingerprints=4,
+                        index=StreamIndexConfig(n_buckets=256, bucket_cap=4),
+                        stats_warmup_blocks=4, reservoir_rows=512)
 
 
 # Dry-run shapes: (n_chunks, samples_per_chunk). ``station_year`` ≈ one

@@ -102,11 +102,7 @@ def signatures(fp: jax.Array, mappings: jax.Array, cfg: LSHConfig,
         per_fn = mins
     sig = fold_hashes(per_fn, axis=-1)  # (N, t)
     if valid is not None:
-        # Unique-ish signatures for invalid rows so they never collide.
-        row = hash_u32(jnp.arange(n, dtype=jnp.uint32), cfg.seed ^ 0x5EED)
-        tbl = hash_u32(jnp.arange(t, dtype=jnp.uint32), cfg.seed ^ 0x7AB1)
-        filler = hash_combine(row[:, None], tbl[None, :])
-        sig = jnp.where(valid[:, None], sig, filler)
+        sig = jnp.where(valid[:, None], sig, _filler_signatures(n, t, cfg))
     return sig
 
 
@@ -115,6 +111,60 @@ def minhash_signatures_baseline(fp: jax.Array, cfg: LSHConfig) -> jax.Array:
     base = dataclasses.replace(cfg, use_minmax=False)
     mp = hash_mappings(fp.shape[1], base)
     return signatures(fp, mp, base)
+
+
+# ---------------------------------------------------------------------------
+# bucket addressing (shared by the streaming index and the fused kernel)
+# ---------------------------------------------------------------------------
+
+
+def bucket_salts(n_tables: int, seed: int) -> jax.Array:
+    """(t,) uint32 per-table salts for bucket addressing."""
+    return hash_u32(jnp.arange(n_tables, dtype=jnp.uint32), seed ^ 0xB0C4E7)
+
+
+def bucket_ids(sigs: jax.Array, n_buckets: int, seed: int) -> jax.Array:
+    """(N, t) signatures → (N, t) bucket indices, salted per table."""
+    salts = bucket_salts(sigs.shape[1], seed)
+    h = hash_combine(sigs.astype(jnp.uint32), salts[None, :])
+    return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+
+
+def _filler_signatures(n: int, t: int, cfg: LSHConfig) -> jax.Array:
+    """Unique-ish (N, t) signatures for invalid rows so they never collide."""
+    row = hash_u32(jnp.arange(n, dtype=jnp.uint32), cfg.seed ^ 0x5EED)
+    tbl = hash_u32(jnp.arange(t, dtype=jnp.uint32), cfg.seed ^ 0x7AB1)
+    return hash_combine(row[:, None], tbl[None, :])
+
+
+def signatures_and_buckets(
+    fp: jax.Array, mappings: jax.Array, cfg: LSHConfig, n_buckets: int,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fingerprints (N, D) → (signatures (N, t), bucket ids (N, t)).
+
+    The streaming hot path needs both the per-table signature and its
+    bucket address; computing them together means the signature fold and
+    the bucket hash run once per step instead of once in ``insert`` and
+    again in ``query``. With ``use_pallas`` the fold + addressing are fused
+    into the Min-Max kernel epilogue (``ops.minmax_sig_buckets``); the jnp
+    composition below is the bit-exact oracle.
+    """
+    n = fp.shape[0]
+    t = cfg.n_tables
+    if cfg.use_pallas:
+        sig, bkt = ops.minmax_sig_buckets(
+            fp, mappings, bucket_salts(t, cfg.seed),
+            use_minmax=cfg.use_minmax, n_buckets=n_buckets)
+    else:
+        sig = signatures(fp, mappings, cfg)
+        bkt = bucket_ids(sig, n_buckets, cfg.seed)
+    if valid is not None:
+        filler = _filler_signatures(n, t, cfg)
+        sig = jnp.where(valid[:, None], sig, filler)
+        bkt = jnp.where(valid[:, None], bkt,
+                        bucket_ids(filler, n_buckets, cfg.seed))
+    return sig, bkt
 
 
 # ---------------------------------------------------------------------------

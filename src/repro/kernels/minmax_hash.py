@@ -9,6 +9,14 @@ min/max-accumulated over the D grid axis — dimensions are again the reduction
 (outer) loop, hash-mapping rows are again the reused operand.
 
 Grid: (N/bn, H/bh, D/bd) with D innermost (sequential reduction).
+
+``minmax_sig_buckets`` extends the kernel with a fused epilogue (ISSUE 3):
+on the last D step it folds the per-function min/max hashes into the
+per-table signature and derives the salted bucket address in-register —
+the signature fold + bucket addressing that previously ran as separate jnp
+ops after the kernel returned. One pass over VMEM instead of three HBM
+round-trips; the jnp composition in ``core/lsh.signatures_and_buckets``
+stays the bit-exact oracle.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.utils import hash_combine, hash_u32
 
 BIG = np.int32(2**31 - 1)
 
@@ -73,3 +83,92 @@ def minmax_hash(fp: jax.Array, mappings: jax.Array, *, bn: int = 16,
         interpret=interpret,
     )(fp, mappings)
     return mins, maxs
+
+
+# ---------------------------------------------------------------------------
+# fused signature fold + bucket addressing epilogue (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+
+def _sig_kernel(fp_ref, map_ref, salt_ref, min_ref, max_ref, sig_ref,
+                bkt_ref, *, f: int, use_minmax: bool, n_buckets: int):
+    kd = pl.program_id(2)
+
+    @pl.when(kd == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, BIG)
+        max_ref[...] = jnp.zeros_like(max_ref)
+
+    fp = fp_ref[...]                     # (bn, bt*f) int8 {0,1}
+    hm = map_ref[...]                    # (bd, bt*f) int32
+    mask = (fp > 0)[:, :, None]
+    mvals = hm[None, :, :]
+    min_ref[...] = jnp.minimum(min_ref[...],
+                               jnp.where(mask, mvals, BIG).min(axis=1))
+    max_ref[...] = jnp.maximum(max_ref[...],
+                               jnp.where(mask, mvals, jnp.int32(0)).max(axis=1))
+
+    # Epilogue on the final reduction step: fold the f per-function hashes
+    # of each table into its signature, then the salted bucket address —
+    # still in VMEM, no extra HBM pass over the (N, H) min/max planes.
+    @pl.when(kd == pl.num_programs(2) - 1)
+    def _fold():
+        bn, bh = min_ref.shape
+        mins = min_ref[...].astype(jnp.uint32)
+        if use_minmax:
+            per_fn = hash_combine(mins, max_ref[...].astype(jnp.uint32))
+        else:
+            per_fn = mins
+        per_fn = per_fn.reshape(bn, bh // f, f)
+        sig = jnp.zeros((bn, bh // f), jnp.uint32)
+        for q in range(f):               # static fold, matches fold_hashes
+            sig = hash_combine(sig, per_fn[:, :, q])
+        sig_ref[...] = sig
+        bkt = hash_combine(sig, salt_ref[...])
+        bkt_ref[...] = (bkt & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "f", "use_minmax", "n_buckets", "bn", "bd", "bt", "interpret"))
+def minmax_sig_buckets(fp: jax.Array, mappings: jax.Array, salts: jax.Array,
+                       *, f: int, use_minmax: bool, n_buckets: int,
+                       bn: int = 16, bd: int = 256, bt: int = 32,
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array]:
+    """fp (N, D) × mappings (D, T*f) → (signatures (N, T) uint32,
+    bucket ids (N, T) int32), T*f laid out func-fastest like
+    ``lsh.hash_mappings``. ``salts`` is the (1, T) per-table bucket salt
+    (``lsh.bucket_salts``). N % bn == 0, D % bd == 0, T % bt == 0.
+    """
+    n, d = fp.shape
+    h = mappings.shape[1]
+    t = h // f
+    assert h == t * f and salts.shape == (1, t), (mappings.shape, salts.shape)
+    assert n % bn == 0 and d % bd == 0 and t % bt == 0, (n, d, t, bn, bd, bt)
+    fp = fp.astype(jnp.int8)
+    grid = (n // bn, t // bt, d // bd)
+    bh = bt * f
+    _, _, sig, bkt = pl.pallas_call(
+        functools.partial(_sig_kernel, f=f, use_minmax=use_minmax,
+                          n_buckets=n_buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bh), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bt), lambda i, j, k: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bh), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bt), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bt), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, h), jnp.int32),
+            jax.ShapeDtypeStruct((n, h), jnp.int32),
+            jax.ShapeDtypeStruct((n, t), jnp.uint32),
+            jax.ShapeDtypeStruct((n, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(fp, mappings, salts)
+    return sig, bkt

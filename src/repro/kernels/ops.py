@@ -59,6 +59,34 @@ def minmax_hash(fp: jax.Array, mappings: jax.Array, *, use_pallas: bool = True,
     return mins[:n, :h], maxs[:n, :h]
 
 
+def minmax_sig_buckets(fp: jax.Array, mappings: jax.Array, salts: jax.Array,
+                       *, use_minmax: bool, n_buckets: int, bn: int = 16,
+                       bd: int = 256, bt: int = 32):
+    """(N, D) fingerprints × (D, T*f) mappings → per-table (signatures,
+    bucket ids), each (N, T) — the Min-Max kernel with the signature fold
+    + bucket addressing fused into its epilogue.
+
+    Pallas-only entry: the bit-exact jnp oracle lives in
+    ``core/lsh.signatures_and_buckets`` (which is also the only caller
+    that decides between the two).
+    """
+    n, d = fp.shape
+    t = salts.shape[0]
+    f = mappings.shape[1] // t
+    bn = min(bn, round_up(n, 8))
+    bd = min(bd, round_up(d, 128))
+    bt = min(bt, round_up(t, 8))
+    fp_p = _pad_axis(_pad_axis(fp.astype(jnp.int8), 0, bn), 1, bd)
+    # padding H to a multiple of bt*f pads whole tables (func-fastest
+    # layout), which the final [:t] slice drops again
+    mp_p = _pad_axis(_pad_axis(mappings, 0, bd), 1, bt * f, value=0)
+    salt_p = _pad_axis(salts.reshape(1, -1).astype(jnp.uint32), 1, bt)
+    sig, bkt = _mm.minmax_sig_buckets(
+        fp_p, mp_p, salt_p, f=f, use_minmax=use_minmax, n_buckets=n_buckets,
+        bn=bn, bd=bd, bt=bt, interpret=_interpret())
+    return sig[:n, :t], bkt[:n, :t]
+
+
 def haar2d(imgs: jax.Array, *, use_pallas: bool = True, bn: int = 128):
     """Standard-decomposition 2-D Haar transform of (N, H, W) images."""
     if not use_pallas:

@@ -1,24 +1,30 @@
-"""Batched similarity-serving over a shared streaming LSH index.
+"""Batched similarity-serving over a streaming LSH index pool.
 
 The detection-side sibling of ``launch/serve.py``: a ``ServeEngine``-shaped
 slot/refill loop where requests are *query windows* of raw waveform
-("when did something like this happen?") answered against a shared
-``StreamingIndex`` built by continuous ingestion. Each request's window is
-split into fingerprint blocks; every tick runs one jitted batched step
-that fingerprints + queries one block per active slot (read-only — serving
-never mutates the index), so concurrent requests share device dispatches
-exactly like decode slots share a decode step.
+("when did something like this happen?") answered against the per-station
+``StreamingIndex`` pool built by continuous ingestion. Each request's
+window is split into fingerprint blocks; every tick runs **one** jitted
+batched step that fingerprints each active slot once and queries it
+against *every* station's index (read-only — serving never mutates the
+pool), so concurrent requests share device dispatches exactly like decode
+slots share a decode step, and S stations cost one vmapped dispatch
+rather than S sequential queries (the ISSUE-3 index pool closing the
+ROADMAP "serving shares one station's index" gap). Matches come back as
+(station, corpus fingerprint id, collision count) triples.
 
 Restartable service flags:
 
-  ``--snapshot-every N``  checkpoint the ingesting detector (index pytree,
-                          waveform ring, MAD reservoir) every N chunks via
-                          ``train/checkpoint.py`` into ``--snapshot-dir``.
+  ``--stations N``        stations ingested and served (the pool's S axis).
+  ``--snapshot-every N``  checkpoint the ingesting detector (index pool,
+                          waveform rings, MAD reservoirs) every N chunks
+                          via ``train/checkpoint.py`` into
+                          ``--snapshot-dir``.
   ``--restore``           instead of re-streaming the corpus from scratch,
                           restore the latest snapshot from
                           ``--snapshot-dir`` and ingest only the samples
                           that arrived after it — a killed service resumes
-                          where it left off and serves the same index.
+                          where it left off and serves the same pool.
   ``--window-fp N``       sliding detection window: the jitted step expires
                           index entries more than N fingerprints behind the
                           newest id, bounding what queries can match.
@@ -53,7 +59,7 @@ from repro.core.fingerprint import FingerprintConfig
 from repro.core.lsh import INVALID, LSHConfig
 from repro.core.synth import SynthConfig, make_dataset
 from repro.stream import index as index_mod
-from repro.stream.engine import StreamingDetector, block_coeffs
+from repro.stream.engine import StreamingDetector, ingest_chunks
 from repro.stream.index import IndexState
 from repro.stream.ingest import StreamConfig
 
@@ -62,7 +68,7 @@ from repro.stream.ingest import StreamConfig
 class QueryRequest:
     rid: int
     window: np.ndarray            # raw waveform samples
-    matches: list = field(default_factory=list)  # (corpus_fp_id, sim)
+    matches: list = field(default_factory=list)  # (station, fp_id, sim)
     ticks: int = 0
     done: bool = False
     t_submit: float = 0.0
@@ -77,32 +83,40 @@ class QueryRequest:
 def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, slot_valid: jax.Array,
                 fcfg: FingerprintConfig, lcfg: LSHConfig, top_k: int = 32):
-    """(S, block_samples) slot blocks → per-slot (ids, sims) match tables.
+    """(n_slots, block_samples) slot blocks × (S,)-pooled index state →
+    per-(station, slot) (ids, sims) match tables, each (S, n_slots, top_k).
 
-    Query fingerprints get ids beyond any corpus id, so the index's
+    The raw-coefficient half of the fingerprint chain runs once per slot
+    and is shared across stations; only binarization (per-station §5.2
+    statistics), signatures, and the index gather run under the station
+    vmap. Query fingerprints get ids above any corpus id, so the index's
     id-ordered emission returns every stored partner; invalid slots get
-    filler signatures and match nothing. Each slot returns at most
-    ``top_k`` matches per tick (highest collision counts first).
+    filler signatures and match nothing.
     """
-    def one_slot(block, valid):
-        coeffs = fp_mod.coeffs_from_waveform(block, fcfg)
-        bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
-        n = bits.shape[0]
-        sigs = lsh_mod.signatures(bits, mappings, lcfg, valid=valid)
-        # distinct ids above every corpus id → each window fingerprint
-        # pairs with all of its stored partners
-        qids = jnp.int32(INVALID - 1 - n) + jnp.arange(n, dtype=jnp.int32)
-        pairs = index_mod.query(state, sigs, qids, lcfg)
-        # partner ids + collision counts, densified to a fixed top-k
-        sims = jnp.where(pairs.valid, pairs.sim, 0)
-        top = jax.lax.top_k(sims, k=min(top_k, sims.shape[0]))[1]
-        return pairs.idx1[top], sims[top]
+    coeffs = jax.vmap(lambda b: fp_mod.coeffs_from_waveform(b, fcfg))(blocks)
 
-    return jax.vmap(one_slot)(blocks, slot_valid)
+    def per_station(st_state, st_med, st_mad):
+        def one_slot(c, valid):
+            bits, _ = fp_mod.binarize_coeffs(c, fcfg, (st_med, st_mad))
+            n = bits.shape[0]
+            sigs = lsh_mod.signatures(bits, mappings, lcfg, valid=valid)
+            # distinct ids above every corpus id → each window fingerprint
+            # pairs with all of its stored partners
+            qids = jnp.int32(INVALID - 1 - n) + jnp.arange(n, dtype=jnp.int32)
+            pairs = index_mod.query(st_state, sigs, qids, lcfg)
+            sims = jnp.where(pairs.valid, pairs.sim, 0)
+            top = jax.lax.top_k(sims, k=min(top_k, sims.shape[0]))[1]
+            return pairs.idx1[top], sims[top]
+
+        return jax.vmap(one_slot)(coeffs, slot_valid)
+
+    return jax.vmap(per_station)(state, med, mad)
 
 
 class ServeDetectEngine:
-    """Static-slot continuous serving against a shared streaming index."""
+    """Static-slot continuous serving against a shared streaming index
+    pool: ``state``/``med``/``mad`` carry a leading station axis
+    (``StreamingDetector.pool_serving_state``)."""
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig,
                  state: IndexState, med_mad, n_slots: int = 4,
@@ -112,6 +126,9 @@ class ServeDetectEngine:
         self.state = state
         self.med = jnp.asarray(med_mad[0])
         self.mad = jnp.asarray(med_mad[1])
+        assert self.med.ndim == 2 and state.sig.ndim == 4, \
+            "serving state must be pooled (leading station axis)"
+        self.n_stations = self.med.shape[0]
         self.mappings = lsh_mod.hash_mappings(cfg.fingerprint.fp_dim,
                                               cfg.lsh)
         self.n_slots = n_slots
@@ -171,14 +188,17 @@ class ServeDetectEngine:
                 self.mappings, slot_valid, self.cfg.fingerprint,
                 self.cfg.lsh, self.top_k)
             self.ticks += 1
-            ids_h, sims_h = np.asarray(ids), np.asarray(sims)
+            ids_h, sims_h = np.asarray(ids), np.asarray(sims)  # (S, slots, k)
             for slot in range(self.n_slots):
                 req = self.slot_req[slot]
                 if req is None:
                     continue
-                keep = sims_h[slot] > 0
-                req.matches.extend(zip(ids_h[slot][keep].tolist(),
-                                       sims_h[slot][keep].tolist()))
+                for station in range(self.n_stations):
+                    keep = sims_h[station, slot] > 0
+                    req.matches.extend(
+                        (station, int(i), int(s))
+                        for i, s in zip(ids_h[station, slot][keep],
+                                        sims_h[station, slot][keep]))
                 req.ticks += 1
                 self.slot_blocks[slot].pop(0)
                 if not self.slot_blocks[slot]:
@@ -189,6 +209,7 @@ class ServeDetectEngine:
         lats = [r.latency_s for r in requests]
         return {
             "requests": len(requests),
+            "stations": self.n_stations,
             "ticks": self.ticks,
             "wall_s": round(wall, 3),
             "requests_per_s": round(len(requests) / max(wall, 1e-9), 1),
@@ -202,6 +223,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stations", type=int, default=2,
+                    help="stations ingested + served (index pool S axis)")
     ap.add_argument("--duration-s", type=float, default=600.0)
     ap.add_argument("--window-s", type=float, default=20.0)
     ap.add_argument("--snapshot-every", type=int, default=0,
@@ -221,36 +244,31 @@ def main(argv=None):
         scfg = dataclasses.replace(
             scfg, window_fingerprints=args.window_fp,
             filter_window_fingerprints=args.filter_window_fp)
-    ds = make_dataset(SynthConfig(duration_s=args.duration_s, n_stations=1,
+    ds = make_dataset(SynthConfig(duration_s=args.duration_s,
+                                  n_stations=args.stations,
                                   n_sources=2, events_per_source=5,
                                   event_snr=3.0, seed=3))
-    wf = ds.waveforms[0]
 
-    # build the corpus index by streaming the station in (resuming from the
-    # latest snapshot when asked — only post-snapshot samples re-ingest)
+    # build the corpus index pool by streaming the stations in (resuming
+    # from the latest snapshot when asked — only post-snapshot samples
+    # re-ingest); the ingest loop is shared with the benchmarks
     skip = 0
     if args.restore:
         det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg)
         skip = det.stations[0].ring.samples_in
         print(f"# restored step {step}: {skip} samples already ingested")
     else:
-        det = StreamingDetector(cfg, scfg, n_stations=1)
-    chunks = np.array_split(wf, 16)
-    seen = 0
-    for ci, chunk in enumerate(chunks):
-        seen += chunk.size
-        if seen <= skip:
-            continue
-        det.push(chunk if seen - chunk.size >= skip
-                 else chunk[chunk.size - (seen - skip):])
-        if args.snapshot_every and (ci + 1) % args.snapshot_every == 0:
-            det.snapshot(args.snapshot_dir, step=ci + 1)
-    st = det.stations[0]
-    st.flush()
-    assert st.stats_frozen, "ingest too short to freeze MAD statistics"
-    med_mad = (np.asarray(st.med_mad[0]), np.asarray(st.med_mad[1]))
+        det = StreamingDetector(cfg, scfg, n_stations=args.stations)
+    ingest_chunks(det, ds.waveforms, n_chunks=16, skip=skip,
+                  snapshot_every=args.snapshot_every,
+                  snapshot_dir=args.snapshot_dir)
+    det.flush()
+    assert all(st.stats_frozen for st in det.stations), \
+        "ingest too short to freeze MAD statistics"
+    state, med, mad = det.pool_serving_state()
 
     # query windows centered on known event arrivals (+ random controls)
+    wf = ds.waveforms[0]
     rng = np.random.default_rng(0)
     win = int(args.window_s * cfg.fingerprint.fs)
     reqs = []
@@ -262,7 +280,7 @@ def main(argv=None):
         lo = max(0, min(t0, wf.size - win))
         reqs.append(QueryRequest(rid=i, window=wf[lo: lo + win]))
 
-    eng = ServeDetectEngine(cfg, scfg, st.state, med_mad,
+    eng = ServeDetectEngine(cfg, scfg, state, (med, mad),
                             n_slots=args.slots)
     stats = eng.run(reqs)
     assert all(r.done for r in reqs)

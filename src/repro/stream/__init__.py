@@ -23,6 +23,42 @@ an unbounded stream:
              the offline alignment stack, per station, with per-chunk
              latency/throughput stats.
 
+``fused``    the single-dispatch hot path (ISSUE 3): the whole per-block
+             chain above as **one** jitted step over a donated
+             ``FusedState`` pytree, plus the vmapped station pool.
+
+Hot path anatomy — the one-dispatch invariant
+---------------------------------------------
+
+Steady state (statistics frozen, no flush pending) must stay a *single*
+device dispatch per block, per detector. The traced program is::
+
+  step_advance(FusedState{index, halo, med, mad}, new_samples)
+    wave   = concat(halo, new_samples)          # WaveformRing advance
+    coeffs = haar2d(spectral_images(stft(wave)))  # fingerprint chain
+    bits   = topk_binarize((coeffs - med) / mad)  # §5.2 binarization
+    sig,bk = signatures_and_buckets(bits)       # Min-Max fold + addressing
+    index  = insert(expire(index), sig, bk)     # sliding-window index
+    pairs  = query(index, sig, bk)              # id-ordered emission
+    return FusedState{index', wave[-halo:], med, mad}, pairs
+
+Every ``FusedState`` leaf is **donated**: chunk N+1 overwrites chunk N's
+buffers in place (zero steady-state HBM allocation), and the halo — the
+STFT overlap between consecutive blocks — never leaves the device. Multi-
+station detectors stack the state on a leading S axis and run the same
+program under ``vmap`` (``pool_step_advance``): S stations, one dispatch.
+Signature fold + bucket addressing are computed once and shared by insert
+and query (and fuse into the Pallas Min-Max kernel epilogue on TPU).
+
+Future PRs must not re-split this step: anything added to the per-block
+path (new filters, extra statistics) belongs *inside* the traced program
+or strictly on the host side of the pair stream. The retracing guard
+(≤1 trace across same-shape chunks), the donation guard (flat
+``jax.live_arrays`` across steady-state chunks), and the fused-vs-unfused
+parity test in ``tests/test_stream.py`` enforce the invariant; the
+unfused chain (``block_coeffs`` + ``stream_step``, ``fused=False``) stays
+as the bit-exact reference.
+
 ``launch/serve_detect.py`` wraps a shared index in a slot/refill request
 loop (the ``ServeEngine`` idiom) for concurrent query-window serving, with
 periodic snapshots (``--snapshot-every``) and restart (``--restore``).
@@ -41,11 +77,15 @@ the offline ``lsh.search`` pair set on synthetic traces; a golden test
 """
 from repro.stream.engine import (RollingPairFilter,  # noqa: F401
                                  StationStream, StreamingDetector,
-                                 StreamStats, block_coeffs,
+                                 StreamStats, block_coeffs, ingest_chunks,
                                  events_from_rows, events_to_rows,
-                                 pairs_from_triplets, stream_step)
+                                 merge_boundary_rows, pairs_from_triplets,
+                                 pool_block_coeffs, stream_step)
+from repro.stream.fused import (FusedState, init_pool_state,  # noqa: F401
+                                init_state, pool_step_advance,
+                                pool_step_block, step_advance, step_block)
 from repro.stream.index import (IndexState, StreamIndexConfig,  # noqa: F401
-                                expire, index_stats, init_index, insert,
-                                query)
+                                expire, index_stats, init_index, init_pool,
+                                insert, query, slice_state, stack_states)
 from repro.stream.ingest import (StreamConfig, StreamingMAD,  # noqa: F401
                                  WaveformRing)

@@ -1,15 +1,28 @@
 """Streaming detector: ring → fingerprints → index → pairs → events.
 
 ``StationStream`` owns one station's ingestion state: a ``WaveformRing``
-(chunk framing + halo), a ``StreamingMAD`` (running §5.2 statistics), and a
-``StreamingIndex`` state. Each ready block runs one jitted fixed-shape
-step — fingerprint, sign, expire, insert, query — and the emitted pairs
-either accumulate host-side (parity mode) or flow through a
+(chunk framing + halo), a ``StreamingMAD`` (running §5.2 statistics), and
+the device-resident detection state. Each ready block runs one jitted
+fixed-shape step — fingerprint, sign, expire, insert, query — and the
+emitted pairs either accumulate host-side (parity mode) or flow through a
 ``RollingPairFilter`` (bounded mode). ``StreamingDetector`` composes
 stations and finishes with the *same* alignment stack as the offline path
 (occurrence filter → channel merge → ``cluster_station`` → network
 association), so a streamed trace yields the same detections as a batch
 re-run, at O(chunk) cost per arrival instead of O(history).
+
+Hot path anatomy (the one-dispatch invariant, ISSUE 3): with
+``StreamConfig.fused`` (the default) the steady-state per-block work is a
+**single** ``jax.jit`` dispatch — ``fused.step_advance`` — whose input is
+only the block's *new* samples and whose entire state (index tables, ring
+halo, MAD statistics) is a donated ``FusedState`` pytree reused in place
+chunk after chunk. Multi-station detectors additionally run **pooled**:
+all S stations' states are stacked on a leading axis and stepped through
+one vmapped executable (``fused.pool_step_advance``), so S stations cost
+one dispatch, not S. See ``stream/fused.py`` for the full anatomy and
+``tests/test_stream.py`` for the parity / retracing / donation guards
+that pin it. ``fused=False`` keeps the PR-1/2 multi-call chain
+(``block_coeffs`` + ``stream_step``) as the bit-exact parity reference.
 
 Two memory regimes, selected by ``StreamConfig``:
 
@@ -21,9 +34,11 @@ Two memory regimes, selected by ``StreamConfig``:
   window, and triplets are retired window-by-window through the rolling
   occurrence filter into compact event rows — O(window) host state for an
   unbounded stream (the paper's §5.3/§6.5 partition-bounded post-processing
-  made continuous). With ≥2 stations, ``poll_detections`` additionally
-  associates closed-window events across stations after every push, so
-  network detections surface near-real-time instead of only at finalize.
+  made continuous). Clusters split at a filter-window boundary are
+  re-merged by ``merge_boundary_rows`` before any consumer sees them.
+  With ≥2 stations, ``poll_detections`` additionally associates
+  closed-window events across stations after every push, so network
+  detections surface near-real-time instead of only at finalize.
 
 ``snapshot``/``restore`` checkpoint the whole detector (index pytree, ring,
 reservoir, pending blocks, rolling-filter state) through
@@ -47,6 +62,7 @@ from repro.core.align import AlignConfig, Events
 from repro.core.detect import DetectConfig
 from repro.core.fingerprint import FingerprintConfig
 from repro.core.lsh import INVALID, LSHConfig, Pairs
+from repro.stream import fused as fused_mod
 from repro.stream import index as index_mod
 from repro.stream.index import IndexState
 from repro.stream.ingest import StreamConfig, StreamingMAD, WaveformRing
@@ -59,6 +75,14 @@ def block_coeffs(block: jax.Array, fcfg: FingerprintConfig) -> jax.Array:
     return fp_mod.coeffs_from_waveform(block, fcfg)
 
 
+@functools.partial(jax.jit, static_argnames=("fcfg",))
+def pool_block_coeffs(blocks: jax.Array,
+                      fcfg: FingerprintConfig) -> jax.Array:
+    """(S, block_samples) → (S, block_fp, n_coeff) coefficients (one
+    dispatch for the whole station pool's warmup)."""
+    return jax.vmap(lambda b: fp_mod.coeffs_from_waveform(b, fcfg))(blocks)
+
+
 @functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
@@ -66,7 +90,8 @@ def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
                 window: int = 0) -> tuple[IndexState, Pairs]:
     """One fixed-shape streaming step: binarize → sign → expire → insert →
-    query.
+    query. (The *unfused* half of the PR-1/2 chain — kept as the parity
+    reference and benchmark baseline for the fused step.)
 
     Same-shape blocks reuse one executable (base_id and the valid mask are
     traced, configs and the window length are static); insert-then-query
@@ -138,6 +163,42 @@ def events_from_rows(rows: np.ndarray, pad_to: int = 256) -> Events:
         valid=jnp.asarray(val))
 
 
+def merge_boundary_rows(rows: np.ndarray, acfg: AlignConfig) -> np.ndarray:
+    """Re-merge event rows split at rolling-filter window boundaries.
+
+    Bounded-mode clustering closes per filter window, so a diagonal
+    cluster straddling a boundary surfaces as two rows: (nearly) the same
+    dt, abutting idx ranges. This pass re-joins rows whose dt differ by at
+    most ``dt_merge_tol`` and whose [onset, onset + extent] spans are
+    within ``gap`` of each other — the same criteria ``cluster_station``
+    uses for its in-window merge, applied across windows. Host-side and
+    O(k log k) in the (small) number of event rows; runs before any
+    consumer (association feed, finalize) sees the rows.
+    """
+    rows = np.asarray(rows, np.int64).reshape(-1, 5)
+    if rows.shape[0] <= 1:
+        return rows
+    order = np.lexsort((rows[:, 0], rows[:, 1]))  # by (onset, dt)
+    out: list[np.ndarray] = []
+    for r in rows[order]:
+        r = r.copy()
+        for c in out:
+            near_diag = abs(int(r[0]) - int(c[0])) <= acfg.dt_merge_tol
+            # gap-expanded interval overlap of [onset, onset + extent]
+            apart = int(r[1]) - (int(c[1]) + int(c[2]))
+            if near_diag and apart <= acfg.gap:
+                end = max(int(c[1]) + int(c[2]), int(r[1]) + int(r[2]))
+                if r[4] > c[4]:         # representative dt: higher score
+                    c[0] = r[0]
+                c[2] = end - int(c[1])  # onset-sorted: c's onset is lower
+                c[3] += r[3]
+                c[4] += r[4]
+                break
+        else:
+            out.append(r)
+    return np.stack(out, axis=0)
+
+
 class RollingPairFilter:
     """Rolling per-window §6.5 occurrence filter + clustering.
 
@@ -150,7 +211,10 @@ class RollingPairFilter:
     are channel-merged and diagonal-clustered exactly like finalize, and
     only the resulting compact event rows are retained. Buffered host pair
     state is therefore O(window) for an unbounded stream — the streaming
-    analogue of the paper's partition-bounded post-processing.
+    analogue of the paper's partition-bounded post-processing. Rows handed
+    out (``rows_tail``/``all_rows``) pass the cross-window
+    ``merge_boundary_rows`` pass first, so clusters split at a window
+    close re-merge before association.
     """
 
     def __init__(self, cfg: DetectConfig, window: int, lookback: int,
@@ -195,11 +259,20 @@ class RollingPairFilter:
             self._close(self.w_start + self.window)
 
     def rows_tail(self, min_onset: int) -> np.ndarray:
-        """Active event rows with onset ≥ ``min_onset`` (association feed)."""
+        """Active event rows reaching ``min_onset`` or later (association
+        feed), boundary-merged.
+
+        The floor is applied to the *end* of each merged span
+        (onset + extent), not the onset: a fresh boundary row merged into
+        an older cluster inherits the older onset, and filtering on onset
+        would drop the merged row — and with it the fresh contribution —
+        from this poll's association.
+        """
         if not self.event_rows:
             return np.zeros((0, 5), np.int64)
-        rows = np.concatenate(self.event_rows, axis=0)
-        return rows[rows[:, 1] >= min_onset]
+        rows = merge_boundary_rows(np.concatenate(self.event_rows, axis=0),
+                                   self.cfg.align)
+        return rows[rows[:, 1] + rows[:, 2] >= min_onset]
 
     def retire_below(self, min_onset: int) -> None:
         """Move rows the association floor has passed into the archive.
@@ -223,7 +296,8 @@ class RollingPairFilter:
         rows = self.archive_rows + self.event_rows
         if not rows:
             return np.zeros((0, 5), np.int64)
-        return np.concatenate(rows, axis=0)
+        return merge_boundary_rows(np.concatenate(rows, axis=0),
+                                   self.cfg.align)
 
     def _close(self, w_end: int) -> None:
         tri = (np.concatenate(self.buf, axis=0) if self.buf
@@ -267,7 +341,10 @@ class RollingPairFilter:
     def snapshot(self) -> tuple[dict, dict]:
         buf = (np.concatenate(self.buf, axis=0).astype(np.int64)
                if self.buf else np.zeros((0, 3), np.int64))
-        return ({"buf": buf, "events": self.all_rows()},
+        rows = self.archive_rows + self.event_rows
+        raw = (np.concatenate(rows, axis=0) if rows
+               else np.zeros((0, 5), np.int64))
+        return ({"buf": buf, "events": raw},
                 {"w_start": self.w_start, "windows_closed":
                  self.windows_closed, "pairs_seen": self.pairs_seen,
                  "pairs_kept": self.pairs_kept, "peak_rows": self.peak_rows})
@@ -277,6 +354,7 @@ class RollingPairFilter:
         self.buf = [buf] if buf.shape[0] else []
         self.buf_rows = int(buf.shape[0])
         rows = np.asarray(arrays["events"], np.int64).reshape(-1, 5)
+        self.archive_rows = []
         self.event_rows = [rows] if rows.shape[0] else []
         self.w_start = int(scalars["w_start"])
         self.windows_closed = int(scalars["windows_closed"])
@@ -312,22 +390,36 @@ class StreamStats:
 
 
 class StationStream:
-    """Incremental detection state for a single station."""
+    """Incremental detection state for a single station.
+
+    ``external=True`` (set by a pooled ``StreamingDetector``) keeps only
+    host-side state here — ring framing, reservoir, rolling filter,
+    stats — while the owner steps the device state through the vmapped
+    station pool and feeds this station's slice back via ``_consume``.
+    """
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig,
-                 med_mad: tuple[np.ndarray, np.ndarray] | None = None):
+                 med_mad: tuple[np.ndarray, np.ndarray] | None = None,
+                 external: bool = False):
         self.cfg = cfg
         self.scfg = scfg
         fcfg, lcfg = cfg.fingerprint, cfg.lsh
+        self.external = external
+        self.fused = scfg.fused
         self.ring = WaveformRing(fcfg, scfg.block_fingerprints)
         self.mad = StreamingMAD(scfg.reservoir_rows, fcfg.n_coeff,
                                 seed=scfg.seed)
-        self.state = index_mod.init_index(lcfg, scfg.index)
+        self._state: IndexState | None = index_mod.init_index(lcfg,
+                                                              scfg.index)
         self.mappings = lsh_mod.hash_mappings(fcfg.fp_dim, lcfg)
-        self.med_mad = None
+        self.fstate: fused_mod.FusedState | None = None
+        self._halo_ok = False
+        self._med_mad: tuple[jax.Array, jax.Array] | None = None
+        self._owner = None          # pooled detector backref (+ index)
+        self._pool_idx = 0
         if med_mad is not None:
-            self.med_mad = (jnp.asarray(med_mad[0]), jnp.asarray(med_mad[1]))
-        self.pending: list[tuple[int, jax.Array]] = []  # pre-freeze blocks
+            self._set_frozen(med_mad[0], med_mad[1])
+        self.pending: list[tuple[int, np.ndarray, jax.Array]] = []
         self.triplets: list[np.ndarray] = []            # (m, 3) idx1,idx2,sim
         self.rolling = scfg.filter_window_fingerprints > 0
         self.filter = (RollingPairFilter(cfg, scfg.filter_window_fingerprints,
@@ -338,64 +430,130 @@ class StationStream:
         self.peak_tri_rows = 0
         self.stats = StreamStats()
 
+    # -- device-state views --------------------------------------------------
+
+    @property
+    def state(self) -> IndexState:
+        """This station's index state, wherever it currently lives."""
+        if self.fstate is not None:
+            return self.fstate.index
+        if self._owner is not None and self._owner.pstate is not None:
+            return index_mod.slice_state(self._owner.pstate.index,
+                                         self._pool_idx)
+        assert self._state is not None, "station has no device state"
+        return self._state
+
+    @property
+    def med_mad(self) -> tuple[jax.Array, jax.Array] | None:
+        return self._med_mad
+
     @property
     def stats_frozen(self) -> bool:
-        return self.med_mad is not None
+        return self._med_mad is not None
+
+    def _set_frozen(self, med, mad) -> None:
+        self._med_mad = (jnp.asarray(med), jnp.asarray(mad))
+        if self.fused and not self.external:
+            self.fstate = fused_mod.init_state(
+                self._state, self.cfg.fingerprint.halo_samples, med, mad)
+            self._state = None      # the fused state owns the buffers now
+            self._halo_ok = False
 
     def host_state_rows(self) -> int:
         """Candidate triplet rows currently buffered host-side — the
         quantity the rolling filter bounds."""
         return self.filter.buf_rows if self.rolling else self._tri_rows
 
+    # -- ingestion -----------------------------------------------------------
+
     def push(self, chunk: np.ndarray) -> int:
         """Ingest one chunk; returns pairs emitted by its ready blocks."""
+        assert not self.external, \
+            "pooled stations are pushed through their StreamingDetector"
         t0 = time.perf_counter()
         emitted = 0
         for base_id, block in self.ring.push(chunk):
-            coeffs = block_coeffs(jnp.asarray(block), self.cfg.fingerprint)
-            if not self.stats_frozen:
-                self.mad.update(np.asarray(coeffs))
-                self.pending.append((base_id, coeffs))
-                if len(self.pending) >= self.scfg.stats_warmup_blocks:
-                    self._freeze_stats()
-                    emitted += self._drain_pending()
-            else:
-                emitted += self._process(base_id, coeffs)
+            emitted += self._ingest_block(base_id, block)
         self.stats.chunks += 1
         self.stats.samples += int(np.asarray(chunk).size)
         self.stats.chunk_wall_s.append(time.perf_counter() - t0)
         return emitted
 
+    def _ingest_block(self, base_id: int, block: np.ndarray) -> int:
+        if not self.stats_frozen:
+            coeffs = block_coeffs(jnp.asarray(block), self.cfg.fingerprint)
+            self.mad.update(np.asarray(coeffs))
+            # the fused drain recomputes coefficients inside its single
+            # dispatch — retaining them here (O(warmup), O(trace) in the
+            # deferred-freeze mode) would be dead weight; the unfused
+            # drain replays the exact buffered coefficients
+            self.pending.append((base_id, np.asarray(block, np.float32),
+                                 None if self.fused else coeffs))
+            warm = self.scfg.stats_warmup_blocks
+            if warm > 0 and len(self.pending) >= warm:
+                self._freeze_stats()
+                return self._drain_pending()
+            return 0
+        return self._process(base_id, block=block)
+
     def _freeze_stats(self) -> None:
         med, mad = self.mad.stats()
-        self.med_mad = (jnp.asarray(med), jnp.asarray(mad))
+        self._set_frozen(med, mad)
 
     def _drain_pending(self) -> int:
         emitted = 0
-        for base_id, coeffs in self.pending:
-            emitted += self._process(base_id, coeffs)
+        for base_id, block, coeffs in self.pending:
+            emitted += self._process(base_id, block=block, coeffs=coeffs)
         self.pending = []
         return emitted
 
-    def _process(self, base_id: int, coeffs: jax.Array,
+    def _process(self, base_id: int, *, block: np.ndarray | None = None,
+                 coeffs: jax.Array | None = None,
                  valid: np.ndarray | None = None) -> int:
-        med, mad = self.med_mad
-        n = int(coeffs.shape[0])
+        """One block through the device step (fused or legacy chain)."""
+        fcfg, lcfg = self.cfg.fingerprint, self.cfg.lsh
+        window = self.scfg.window_fingerprints
+        n = self.scfg.block_fingerprints
         vmask = (np.ones(n, bool) if valid is None
                  else np.asarray(valid, bool))
-        self.state, pairs = stream_step(
-            self.state, coeffs, med, mad, self.mappings,
-            jnp.int32(base_id), jnp.asarray(vmask),
-            self.cfg.fingerprint, self.cfg.lsh,
-            self.scfg.window_fingerprints)
-        pv = np.asarray(pairs.valid)
+        if self.fused:
+            if valid is None and self._halo_ok:
+                adv = np.asarray(block, np.float32)[-self.ring.advance:]
+                self.fstate, pairs = fused_mod.step_advance(
+                    self.fstate, jnp.asarray(adv), self.mappings,
+                    jnp.int32(base_id), fcfg, lcfg, window)
+            else:
+                self.fstate, pairs = fused_mod.step_block(
+                    self.fstate, jnp.asarray(block), self.mappings,
+                    jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
+                    window)
+                # a zero-padded tail leaves the device halo dirty; the next
+                # block must re-seed through step_block
+                self._halo_ok = valid is None
+        else:
+            if coeffs is None:
+                coeffs = block_coeffs(jnp.asarray(block), fcfg)
+            med, mad = self._med_mad
+            self._state, pairs = stream_step(
+                self._state, coeffs, med, mad, self.mappings,
+                jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg, window)
+        return self._consume(
+            base_id, int(vmask.sum()),
+            (np.asarray(pairs.idx1), np.asarray(pairs.idx2),
+             np.asarray(pairs.sim), np.asarray(pairs.valid)))
+
+    def _consume(self, base_id: int, n_valid: int,
+                 pairs_np: tuple[np.ndarray, ...]) -> int:
+        """Host-side tail of a step: triplet accounting + rolling filter.
+
+        Shared by the solo path and the pooled detector (which hands each
+        station its slice of the vmapped step output).
+        """
+        i1, i2, sim, pv = pairs_np
         m = int(pv.sum())
-        self.processed_fp = base_id + int(vmask.sum())
+        self.processed_fp = base_id + n_valid
         if m:
-            tri = np.stack([
-                np.asarray(pairs.idx1)[pv],
-                np.asarray(pairs.idx2)[pv],
-                np.asarray(pairs.sim)[pv]], axis=1).astype(np.int64)
+            tri = np.stack([i1[pv], i2[pv], sim[pv]], axis=1).astype(np.int64)
             if self.rolling:
                 self.filter.add(tri)
             else:
@@ -408,20 +566,29 @@ class StationStream:
         else:
             self.peak_tri_rows = max(self.peak_tri_rows, self._tri_rows)
         self.stats.blocks += 1
-        self.stats.fingerprints += int(vmask.sum())
+        self.stats.fingerprints += n_valid
         self.stats.pairs += m
         return m
 
     def flush(self) -> int:
         """Process the buffered tail: freeze stats if still warming up,
-        drain pending blocks, and run the partial last block (masked)."""
+        drain pending blocks, and run the partial last block (masked).
+
+        With ``stats_warmup_blocks == 0`` this is where the freeze always
+        happens: the reservoir has absorbed the whole stream, so the
+        buffered warmup fingerprints are binarized with the matured
+        statistics (the re-binarize-after-freeze hook).
+        """
+        if self.external:
+            return 0                # the owning detector flushes the pool
         emitted = 0
         part = self.ring.flush_partial()
         part_coeffs = None
         if part is not None:
             base_id, block, n_valid = part
-            part_coeffs = block_coeffs(jnp.asarray(block),
-                                       self.cfg.fingerprint)
+            if not self.stats_frozen or not self.fused:
+                part_coeffs = block_coeffs(jnp.asarray(block),
+                                           self.cfg.fingerprint)
             if not self.stats_frozen:
                 self.mad.update(np.asarray(part_coeffs)[:n_valid])
         if not self.stats_frozen:
@@ -431,8 +598,9 @@ class StationStream:
             emitted += self._drain_pending()
         if part is not None:
             base_id, block, n_valid = part
-            vmask = np.arange(part_coeffs.shape[0]) < n_valid
-            emitted += self._process(base_id, part_coeffs, valid=vmask)
+            vmask = np.arange(self.scfg.block_fingerprints) < n_valid
+            emitted += self._process(base_id, block=block,
+                                     coeffs=part_coeffs, valid=vmask)
         return emitted
 
     def accumulated_pairs(self, pad_to: int = 1024) -> Pairs:
@@ -446,8 +614,9 @@ class StationStream:
 
         Parity mode runs the offline reduction over the full accumulated
         pair set. Bounded mode closes the open rolling window and returns
-        the concatenation of per-window events; raw pairs were already
-        retired window-by-window, so the returned ``Pairs`` is empty.
+        the concatenation of per-window events (boundary-merged); raw
+        pairs were already retired window-by-window, so the returned
+        ``Pairs`` is empty.
         """
         self.flush()
         lcfg, acfg = self.cfg.lsh, self.cfg.align
@@ -482,12 +651,12 @@ class StationStream:
 
     def snapshot_state(self) -> tuple[dict, dict]:
         """(flat arrays, json-able extra) capturing this station exactly."""
+        state = self.state
         arrays = {
-            "index/sig": np.asarray(jax.device_get(self.state.sig)),
-            "index/ids": np.asarray(jax.device_get(self.state.ids)),
-            "index/cursor": np.asarray(jax.device_get(self.state.cursor)),
-            "index/inserted": np.asarray(jax.device_get(
-                self.state.inserted)),
+            "index/sig": np.asarray(jax.device_get(state.sig)),
+            "index/ids": np.asarray(jax.device_get(state.ids)),
+            "index/cursor": np.asarray(jax.device_get(state.cursor)),
+            "index/inserted": np.asarray(jax.device_get(state.inserted)),
         }
         ring_a, ring_s = self.ring.snapshot()
         arrays["ring/buf"] = ring_a["buf"]
@@ -507,13 +676,17 @@ class StationStream:
                       "pairs": self.stats.pairs},
         }
         if self.stats_frozen:
-            arrays["med"] = np.asarray(self.med_mad[0])
-            arrays["mad_stat"] = np.asarray(self.med_mad[1])
+            arrays["med"] = np.asarray(self._med_mad[0])
+            arrays["mad_stat"] = np.asarray(self._med_mad[1])
         if self.pending:
             arrays["pending/base"] = np.asarray(
-                [b for b, _ in self.pending], np.int64)
-            arrays["pending/coeffs"] = np.stack(
-                [np.asarray(c) for _, c in self.pending]).astype(np.float32)
+                [b for b, _, _ in self.pending], np.int64)
+            arrays["pending/blocks"] = np.stack(
+                [b for _, b, _ in self.pending]).astype(np.float32)
+            if not self.fused:      # unfused drains replay exact coeffs
+                arrays["pending/coeffs"] = np.stack(
+                    [np.asarray(c) for _, _, c in self.pending]) \
+                    .astype(np.float32)
         if self.rolling:
             f_a, f_s = self.filter.snapshot()
             arrays["filter/buf"] = f_a["buf"]
@@ -526,26 +699,31 @@ class StationStream:
         return arrays, extra
 
     def restore_state(self, arrays: dict, extra: dict) -> None:
-        t, b, c = self.state.shape
-        self.state = IndexState(
+        restored = IndexState(
             sig=jnp.asarray(arrays["index/sig"], jnp.uint32),
             ids=jnp.asarray(arrays["index/ids"], jnp.int32),
             cursor=jnp.asarray(arrays["index/cursor"], jnp.int32),
             inserted=jnp.asarray(arrays["index/inserted"], jnp.int32))
-        assert self.state.shape == (t, b, c), \
-            (self.state.shape, (t, b, c))
+        t, b, c = index_mod.init_index(self.cfg.lsh, self.scfg.index).shape
+        assert restored.shape == (t, b, c), (restored.shape, (t, b, c))
+        self._state = restored
+        self.fstate = None
+        self._halo_ok = False
         self.ring.restore({"buf": arrays["ring/buf"]}, extra["ring"])
         self.mad.restore({"rows": arrays["mad/rows"]}, extra["mad"])
-        self.med_mad = None
+        self._med_mad = None
         if extra["frozen"]:
-            self.med_mad = (jnp.asarray(arrays["med"]),
-                            jnp.asarray(arrays["mad_stat"]))
+            self._set_frozen(arrays["med"], arrays["mad_stat"])
         self.pending = []
         if "pending/base" in arrays:
             bases = np.asarray(arrays["pending/base"], np.int64)
-            coeffs = np.asarray(arrays["pending/coeffs"], np.float32)
-            self.pending = [(int(bases[i]), jnp.asarray(coeffs[i]))
-                            for i in range(bases.shape[0])]
+            blocks = np.asarray(arrays["pending/blocks"], np.float32)
+            coeffs = (np.asarray(arrays["pending/coeffs"], np.float32)
+                      if "pending/coeffs" in arrays else None)
+            self.pending = [
+                (int(bases[i]), blocks[i],
+                 None if coeffs is None else jnp.asarray(coeffs[i]))
+                for i in range(bases.shape[0])]
         if self.rolling:
             self.filter.restore(
                 {"buf": arrays["filter/buf"],
@@ -576,6 +754,12 @@ class StreamingDetector:
     association, mirroring ``detect_events``. In bounded mode each push
     also polls the incremental association: newly final multi-station
     detections land in ``alerts`` as they close, not only at finalize.
+
+    With ``StreamConfig.pooled`` (the default) and ≥2 stations, the
+    per-station device states are stacked into one pool and every ready
+    block steps all stations through a single vmapped fused dispatch —
+    the per-station ``StationStream`` objects keep only host-side state
+    (ring framing, reservoir, rolling filter, stats).
     """
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig | None = None,
@@ -583,8 +767,18 @@ class StreamingDetector:
                  med_mad: tuple[np.ndarray, np.ndarray] | None = None):
         self.cfg = cfg
         self.scfg = scfg or StreamConfig()
-        self.stations = [StationStream(cfg, self.scfg, med_mad=med_mad)
+        self.pooled = (self.scfg.fused and self.scfg.pooled
+                       and n_stations >= 2)
+        self.stations = [StationStream(cfg, self.scfg, med_mad=med_mad,
+                                       external=self.pooled)
                          for _ in range(n_stations)]
+        self.pstate: fused_mod.FusedState | None = None
+        self._halo_ok = False
+        self.mappings = self.stations[0].mappings
+        for i, st in enumerate(self.stations):
+            st._owner, st._pool_idx = self, i
+        if self.pooled and med_mad is not None:
+            self._build_pool()
         self.rolling = self.scfg.filter_window_fingerprints > 0
         self.alerts: list[np.ndarray] = []   # (k, 4) dt, onset, n_st, score
         self._emitted = np.zeros((0, 2), np.int64)  # alerted (dt, onset)
@@ -597,13 +791,155 @@ class StreamingDetector:
             chunk = chunk[None, :]
         assert chunk.shape[0] == len(self.stations), \
             (chunk.shape, len(self.stations))
-        emitted = sum(st.push(chunk[i])
-                      for i, st in enumerate(self.stations))
+        if self.pooled:
+            emitted = self._pool_push(chunk)
+        else:
+            emitted = sum(st.push(chunk[i])
+                          for i, st in enumerate(self.stations))
         if self.rolling and len(self.stations) >= 2:
             new = self.poll_detections()
             if new.shape[0]:
                 self.alerts.append(new)
         return emitted
+
+    # -- pooled stepping ----------------------------------------------------
+
+    def _build_pool(self) -> None:
+        """Stack the stations' device state into one vmappable pool."""
+        self.pstate = fused_mod.init_pool_state(
+            [st._state for st in self.stations],
+            self.cfg.fingerprint.halo_samples,
+            [st._med_mad[0] for st in self.stations],
+            [st._med_mad[1] for st in self.stations])
+        for st in self.stations:
+            st._state = None        # the pool owns the buffers now
+        self._halo_ok = False
+
+    def _pool_push(self, chunk: np.ndarray) -> int:
+        t0 = time.perf_counter()
+        per_st = [st.ring.push(chunk[i])
+                  for i, st in enumerate(self.stations)]
+        emitted = 0
+        for k in range(len(per_st[0])):   # rings advance in lockstep
+            base_id = per_st[0][k][0]
+            blocks = np.stack([per_st[i][k][1]
+                               for i in range(len(self.stations))])
+            emitted += self._pool_ingest_block(base_id, blocks)
+        wall = time.perf_counter() - t0
+        for i, st in enumerate(self.stations):
+            st.stats.chunks += 1
+            st.stats.samples += int(chunk[i].size)
+            st.stats.chunk_wall_s.append(wall)  # stations share the dispatch
+        return emitted
+
+    def _pool_ingest_block(self, base_id: int, blocks: np.ndarray) -> int:
+        if self.pstate is None:
+            coeffs = np.asarray(pool_block_coeffs(jnp.asarray(blocks),
+                                                  self.cfg.fingerprint))
+            for i, st in enumerate(self.stations):
+                st.mad.update(coeffs[i])
+                st.pending.append((base_id, blocks[i], None))
+            warm = self.scfg.stats_warmup_blocks
+            if warm > 0 and len(self.stations[0].pending) >= warm:
+                self._freeze_pool()
+                return self._drain_pool()
+            return 0
+        return self._pool_process(base_id, blocks)
+
+    def _freeze_pool(self) -> None:
+        for st in self.stations:
+            if not st.stats_frozen:
+                st._freeze_stats()  # external: records stats only
+        self._build_pool()
+
+    def _drain_pool(self) -> int:
+        emitted = 0
+        pend = [st.pending for st in self.stations]
+        for k in range(len(pend[0])):
+            base_id = pend[0][k][0]
+            blocks = np.stack([pend[i][k][1]
+                               for i in range(len(self.stations))])
+            emitted += self._pool_process(base_id, blocks)
+        for st in self.stations:
+            st.pending = []
+        return emitted
+
+    def _pool_process(self, base_id: int, blocks: np.ndarray,
+                      valid: np.ndarray | None = None) -> int:
+        fcfg, lcfg = self.cfg.fingerprint, self.cfg.lsh
+        window = self.scfg.window_fingerprints
+        n = self.scfg.block_fingerprints
+        vmask = (np.ones(n, bool) if valid is None
+                 else np.asarray(valid, bool))
+        if valid is None and self._halo_ok:
+            adv = blocks[:, -self.stations[0].ring.advance:]
+            self.pstate, pairs = fused_mod.pool_step_advance(
+                self.pstate, jnp.asarray(adv), self.mappings,
+                jnp.int32(base_id), fcfg, lcfg, window)
+        else:
+            vm = np.broadcast_to(vmask, (len(self.stations), n))
+            self.pstate, pairs = fused_mod.pool_step_block(
+                self.pstate, jnp.asarray(blocks), self.mappings,
+                jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window)
+            self._halo_ok = valid is None
+        i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
+        sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
+        n_valid = int(vmask.sum())
+        return sum(
+            st._consume(base_id, n_valid, (i1[i], i2[i], sim[i], pv[i]))
+            for i, st in enumerate(self.stations))
+
+    def _pool_flush(self) -> int:
+        """Pool counterpart of ``StationStream.flush`` (lockstep rings ⇒
+        every station tails at the same base id / valid count)."""
+        emitted = 0
+        parts = [st.ring.flush_partial() for st in self.stations]
+        part = parts[0]
+        blocks = (np.stack([p[1] for p in parts])
+                  if part is not None else None)
+        if self.pstate is None:
+            if part is not None:
+                n_valid = part[2]
+                coeffs = np.asarray(pool_block_coeffs(
+                    jnp.asarray(blocks), self.cfg.fingerprint))
+                for i, st in enumerate(self.stations):
+                    st.mad.update(coeffs[i][:n_valid])
+            if any(st.mad.filled < 2 for st in self.stations):
+                return 0
+            self._freeze_pool()
+            emitted += self._drain_pool()
+        if part is not None:
+            base_id, _, n_valid = part
+            vmask = np.arange(self.scfg.block_fingerprints) < n_valid
+            emitted += self._pool_process(base_id, blocks, valid=vmask)
+        return emitted
+
+    def flush(self) -> int:
+        """Process buffered tails on every station (pool-aware)."""
+        if self.pooled:
+            return self._pool_flush()
+        return sum(st.flush() for st in self.stations)
+
+    def pool_serving_state(self) -> tuple[IndexState, jax.Array, jax.Array]:
+        """(stacked index, med (S, C), mad (S, C)) for the serving loop —
+        uniform whether the detector ran pooled or solo.
+
+        Returns **copies**: the detector's own pool buffers are donated on
+        every subsequent step, so handing out live references would let
+        one more ``push`` delete the arrays a ``ServeDetectEngine`` is
+        querying. The copy makes the serving state a stable read-only
+        snapshot of the index at call time.
+        """
+        assert all(st.stats_frozen for st in self.stations)
+        if self.pstate is not None:
+            return jax.tree.map(jnp.array, (self.pstate.index,
+                                            self.pstate.med,
+                                            self.pstate.mad))
+        return (index_mod.stack_states([st.state for st in self.stations]),
+                jnp.stack([st.med_mad[0] for st in self.stations]),
+                jnp.stack([st.med_mad[1] for st in self.stations]))
+
+    # -- association / finalize ---------------------------------------------
 
     def poll_detections(self) -> np.ndarray:
         """Incremental network association over closed-window events.
@@ -657,6 +993,8 @@ class StreamingDetector:
         return rows
 
     def finalize(self) -> tuple[dict | None, list[Events], dict]:
+        if self.pooled:
+            self._pool_flush()
         station_events, stats = [], {}
         for i, st in enumerate(self.stations):
             events, _, fstats = st.finalize()
@@ -682,7 +1020,9 @@ class StreamingDetector:
         One ``step_<N>`` directory holds every station's index pytree, ring
         buffer, MAD reservoir, pending blocks, and (bounded mode) rolling
         filter state, plus the detector's alert dedup keys — everything
-        needed for ``restore`` to continue the stream bit-exactly.
+        needed for ``restore`` to continue the stream bit-exactly. Pooled
+        detectors snapshot per-station slices, so the on-disk layout is
+        identical either way.
         """
         arrays: dict[str, np.ndarray] = {}
         st_extra = []
@@ -736,6 +1076,8 @@ class StreamingDetector:
             sub = {k[len(prefix):]: v for k, v in arrays.items()
                    if k.startswith(prefix)}
             st.restore_state(sub, extra["stations"][i])
+        if det.pooled and all(st.stats_frozen for st in det.stations):
+            det._build_pool()
         det._emitted = np.asarray(arrays["detector/emitted"],
                                   np.int64).reshape(-1, 2)
         alerts = np.asarray(arrays["detector/alerts"],
@@ -746,3 +1088,47 @@ class StreamingDetector:
             det._polled_windows = sum(st.filter.windows_closed
                                       for st in det.stations)
         return det, step
+
+
+def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
+                  n_chunks: int = 16, *, skip: int = 0,
+                  warmup_chunks: int = 0, snapshot_every: int = 0,
+                  snapshot_dir: str | None = None) -> dict:
+    """Push a trace through a detector in equal chunks — the one shared
+    ingest loop behind serving, benchmarks, and examples.
+
+    ``waveforms``: (T,) or (n_stations, T). ``skip`` resumes mid-stream
+    (samples already ingested before a snapshot restore are not re-pushed;
+    a partially-covered chunk is trimmed). ``warmup_chunks`` excludes the
+    first chunks (trace compilation + stats freeze) from the timed span.
+    Returns {"chunks", "timed_chunks", "wall_s", "warmup_wall_s",
+    "samples"}.
+    """
+    waveforms = np.atleast_2d(np.asarray(waveforms, np.float32))
+    chunks = np.array_split(waveforms, n_chunks, axis=1)
+    seen = 0
+    pushed = timed = 0
+    samples = 0
+    t_start = time.perf_counter()
+    t_timed = None
+    for ci, chunk in enumerate(chunks):
+        seen += chunk.shape[1]
+        if seen <= skip:
+            continue
+        if seen - chunk.shape[1] < skip:
+            chunk = chunk[:, chunk.shape[1] - (seen - skip):]
+        if pushed == warmup_chunks and t_timed is None:
+            t_timed = time.perf_counter()
+        det.push(chunk)
+        pushed += 1
+        if pushed > warmup_chunks:
+            timed += 1
+            samples += int(chunk.size)
+        if snapshot_every and (ci + 1) % snapshot_every == 0:
+            det.snapshot(snapshot_dir, step=ci + 1)
+    t_end = time.perf_counter()
+    if t_timed is None:
+        t_timed = t_end
+    return {"chunks": pushed, "timed_chunks": timed,
+            "wall_s": t_end - t_timed,
+            "warmup_wall_s": t_timed - t_start, "samples": samples}

@@ -1,0 +1,184 @@
+"""Single-dispatch streaming hot path: fused chunk step + station pool.
+
+The PR-1/2 hot path ran each per-block stage as its own jitted call —
+``block_coeffs`` (STFT → band cut → Haar), then ``stream_step`` (binarize →
+sign → expire → insert → query) — with the ring advance and all staging on
+the host in between. Here the whole chain is **one** ``jax.jit`` entry with
+``donate_argnums`` on the full device state:
+
+  ``FusedState`` = index tables + ring halo + frozen MAD statistics.
+
+``step_advance`` is the steady-state entry: its input is only the *new*
+samples of the next block (``block_fingerprints * lag_samples`` of them);
+the overlapping head — the STFT halo — is the ``halo`` buffer retained on
+device from the previous step, so the WaveformRing advance is part of the
+traced program, not a host copy. ``step_block`` is the re-seeding entry
+(first block after a freeze, restore, or masked flush tail): it takes a
+whole framed block plus a fingerprint-valid mask and leaves the halo
+primed for subsequent advance steps.
+
+Because every buffer of ``FusedState`` is donated, chunk N+1 writes into
+chunk N's memory: steady state runs with zero per-chunk HBM allocation and
+exactly one dispatch (the retracing/donation guards in
+``tests/test_stream.py`` pin both properties).
+
+``pool_step_advance`` / ``pool_step_block`` are the same two entries with
+every state leaf carrying a leading station axis, stepped via ``vmap``:
+one executable serves S stations (the ISSUE-3 index pool) instead of S
+sequential single-station engines each paying their own dispatch. When a
+fingerprint-sharded mesh is available the pool axis is the natural
+candidate for ``shard_map``; on a single device the vmap alone already
+amortizes dispatch + pipeline overheads across stations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fingerprint as fp_mod
+from repro.core import lsh as lsh_mod
+from repro.core.fingerprint import FingerprintConfig
+from repro.core.lsh import LSHConfig, Pairs
+from repro.stream import index as index_mod
+from repro.stream.index import IndexState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FusedState:
+    """Everything the fused step owns on device (all donated).
+
+    Solo form: ``index`` (t, B, C), ``halo`` (halo_samples,), ``med``/
+    ``mad`` (n_coeff,). Pool form: the same leaves with a leading (S,)
+    station axis (see ``init_pool_state``).
+    """
+
+    index: IndexState
+    halo: jax.Array
+    med: jax.Array
+    mad: jax.Array
+
+
+def init_state(index: IndexState, halo_samples: int, med, mad) -> FusedState:
+    # jnp.array (not asarray): the state is donated on every step, so it
+    # must own its buffers — aliasing a caller's med/mad array would
+    # delete the caller's copy on the first dispatch
+    return FusedState(index=index,
+                      halo=jnp.zeros((halo_samples,), jnp.float32),
+                      med=jnp.array(med), mad=jnp.array(mad))
+
+
+def init_pool_state(indexes: list[IndexState], halo_samples: int,
+                    meds, mads) -> FusedState:
+    """Stack per-station pieces into one pool state (leading S axis)."""
+    n = len(indexes)
+    return FusedState(
+        index=index_mod.stack_states(indexes),
+        halo=jnp.zeros((n, halo_samples), jnp.float32),
+        med=jnp.stack([jnp.asarray(m) for m in meds]),
+        mad=jnp.stack([jnp.asarray(m) for m in mads]))
+
+
+def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
+                wave: jax.Array, mappings: jax.Array, base_id: jax.Array,
+                valid: jax.Array | None, fcfg: FingerprintConfig,
+                lcfg: LSHConfig, window: int) -> tuple[IndexState, Pairs]:
+    """One station's block: fingerprint → hash → expire → insert → query.
+
+    Shared by the solo and the vmapped pool entries; bit-identical to the
+    unfused ``block_coeffs`` + ``stream_step`` chain (the parity test's
+    contract). Signatures and bucket addresses are computed together once
+    (``signatures_and_buckets``) instead of once in insert and again in
+    query.
+    """
+    coeffs = fp_mod.coeffs_from_waveform(wave, fcfg)
+    bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
+    n = bits.shape[0]
+    sigs, buckets = lsh_mod.signatures_and_buckets(
+        bits, mappings, lcfg, index.shape[1], valid=valid)
+    ids = base_id + jnp.arange(n, dtype=jnp.int32)
+    n_valid = (jnp.int32(n) if valid is None
+               else valid.sum(dtype=jnp.int32))
+    if window > 0:
+        newest = base_id + n_valid
+        index = index_mod.expire(index, newest - jnp.int32(window))
+    index = index_mod.insert(index, sigs, ids, lcfg, valid=valid,
+                             buckets=buckets)
+    pairs = index_mod.query(index, sigs, ids, lcfg, buckets=buckets)
+    return index, pairs
+
+
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+                   donate_argnums=(0,))
+def step_advance(state: FusedState, new_samples: jax.Array,
+                 mappings: jax.Array, base_id: jax.Array,
+                 fcfg: FingerprintConfig, lcfg: LSHConfig,
+                 window: int = 0) -> tuple[FusedState, Pairs]:
+    """Steady-state fused step: device halo + new samples → pairs.
+
+    ``new_samples`` is (advance,) = block_fingerprints * lag_samples; the
+    block is reassembled on device from the donated halo, and the new halo
+    (the block tail) is written back in place.
+    """
+    wave = jnp.concatenate([state.halo, new_samples])
+    index, pairs = _chunk_core(state.index, state.med, state.mad, wave,
+                               mappings, base_id, None, fcfg, lcfg, window)
+    return FusedState(index=index, halo=wave[-state.halo.shape[-1]:],
+                      med=state.med, mad=state.mad), pairs
+
+
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+                   donate_argnums=(0,))
+def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
+               base_id: jax.Array, valid: jax.Array,
+               fcfg: FingerprintConfig, lcfg: LSHConfig,
+               window: int = 0) -> tuple[FusedState, Pairs]:
+    """Re-seeding fused step: a whole framed block + fingerprint mask.
+
+    Used for the first block after a freeze/restore and for masked flush
+    tails; also reprimes the halo so the next step can take the advance
+    path (a zero-padded tail leaves the halo dirty — the caller tracks
+    that and routes the next block through here again).
+    """
+    index, pairs = _chunk_core(state.index, state.med, state.mad, block,
+                               mappings, base_id, valid, fcfg, lcfg, window)
+    return FusedState(index=index, halo=block[-state.halo.shape[-1]:],
+                      med=state.med, mad=state.mad), pairs
+
+
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+                   donate_argnums=(0,))
+def pool_step_advance(state: FusedState, new_samples: jax.Array,
+                      mappings: jax.Array, base_id: jax.Array,
+                      fcfg: FingerprintConfig, lcfg: LSHConfig,
+                      window: int = 0) -> tuple[FusedState, Pairs]:
+    """``step_advance`` over a station pool: state leaves and
+    ``new_samples`` carry a leading (S,) axis; ids/base advance in
+    lockstep (stations ingest the same chunk cadence)."""
+    wave = jnp.concatenate([state.halo, new_samples], axis=-1)
+    core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
+                             window=window)
+    index, pairs = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, None))(
+        state.index, state.med, state.mad, wave, mappings, base_id, None)
+    return FusedState(index=index, halo=wave[:, -state.halo.shape[-1]:],
+                      med=state.med, mad=state.mad), pairs
+
+
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+                   donate_argnums=(0,))
+def pool_step_block(state: FusedState, blocks: jax.Array,
+                    mappings: jax.Array, base_id: jax.Array,
+                    valid: jax.Array, fcfg: FingerprintConfig,
+                    lcfg: LSHConfig, window: int = 0
+                    ) -> tuple[FusedState, Pairs]:
+    """``step_block`` over a station pool (blocks (S, block_samples),
+    valid (S, block_fingerprints))."""
+    core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
+                             window=window)
+    index, pairs = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
+        state.index, state.med, state.mad, blocks, mappings, base_id, valid)
+    return FusedState(index=index, halo=blocks[:, -state.halo.shape[-1]:],
+                      med=state.med, mad=state.mad), pairs

@@ -31,8 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lsh as lsh_mod
 from repro.core.lsh import INVALID, LSHConfig, Pairs, finalize_pairs
-from repro.utils import hash_u32, hash_combine, rank_in_run, run_lengths
+from repro.utils import rank_in_run, run_lengths
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,12 +75,9 @@ def init_index(lcfg: LSHConfig, icfg: StreamIndexConfig) -> IndexState:
     )
 
 
-def _bucket_ids(sigs: jax.Array, n_buckets: int, seed: int) -> jax.Array:
-    """(N, t) signatures → (N, t) bucket indices, salted per table."""
-    t = sigs.shape[1]
-    salts = hash_u32(jnp.arange(t, dtype=jnp.uint32), seed ^ 0xB0C4E7)
-    h = hash_combine(sigs.astype(jnp.uint32), salts[None, :])
-    return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+# bucket addressing lives in core/lsh.py (shared with the fused kernel
+# epilogue); kept as a local alias for callers of the old private name
+_bucket_ids = lsh_mod.bucket_ids
 
 
 def _insert_one_table(sig_tb, ids_tb, cursor_tb, buckets, keys, new_ids,
@@ -108,17 +106,21 @@ def _insert_one_table(sig_tb, ids_tb, cursor_tb, buckets, keys, new_ids,
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
 def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
-           cfg: LSHConfig, valid: jax.Array | None = None) -> IndexState:
+           cfg: LSHConfig, valid: jax.Array | None = None,
+           buckets: jax.Array | None = None) -> IndexState:
     """Insert a batch of per-table signatures under global fingerprint ids.
 
     sigs: (N, t) uint32; ids: (N,) int32 (monotone across the stream).
     Fixed shapes — one trace per (N, index shape) combination.
+    ``buckets`` (N, t) skips bucket addressing when the caller already has
+    it (the fused chunk step computes it once for insert *and* query).
     """
     t, b, c = state.shape
     n = sigs.shape[0]
     if valid is None:
         valid = jnp.ones((n,), bool)
-    buckets = _bucket_ids(sigs, b, cfg.seed)          # (N, t)
+    if buckets is None:
+        buckets = lsh_mod.bucket_ids(sigs, b, cfg.seed)   # (N, t)
     new_sig, new_ids, new_cursor = jax.vmap(
         _insert_one_table, in_axes=(0, 0, 0, 1, 1, None, None))(
         state.sig, state.ids, state.cursor, buckets,
@@ -129,7 +131,7 @@ def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
-          cfg: LSHConfig) -> Pairs:
+          cfg: LSHConfig, buckets: jax.Array | None = None) -> Pairs:
     """Find stored partners of a signature batch → thresholded Pairs.
 
     Only partners with stored id < query id are emitted, so a batch that
@@ -140,7 +142,8 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     """
     t, b, c = state.shape
     n = sigs.shape[0]
-    buckets = _bucket_ids(sigs, b, cfg.seed)          # (N, t)
+    if buckets is None:
+        buckets = lsh_mod.bucket_ids(sigs, b, cfg.seed)   # (N, t)
 
     def one_table(sig_tb, ids_tb, bkt, keys):
         occ_sig = sig_tb[bkt]                          # (N, C)
@@ -163,6 +166,32 @@ def expire(state: IndexState, min_id: jax.Array) -> IndexState:
     return IndexState(sig=state.sig,
                       ids=jnp.where(keep, state.ids, INVALID),
                       cursor=state.cursor, inserted=state.inserted)
+
+
+# ---------------------------------------------------------------------------
+# station pools: the same IndexState with a leading station axis
+# ---------------------------------------------------------------------------
+
+
+def init_pool(lcfg: LSHConfig, icfg: StreamIndexConfig,
+              n_stations: int) -> IndexState:
+    """Stacked per-station index: every leaf gains a leading (S,) axis.
+
+    The pool is stepped via ``vmap`` inside the fused chunk step — one
+    executable serves S stations (ISSUE 3), instead of S sequential
+    engines each paying their own dispatch.
+    """
+    return stack_states([init_index(lcfg, icfg)] * n_stations)
+
+
+def stack_states(states: list[IndexState]) -> IndexState:
+    """Per-station states → one pool state with a leading station axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def slice_state(pool: IndexState, station: int) -> IndexState:
+    """One station's view of a pool state (used by snapshot + serving)."""
+    return jax.tree.map(lambda x: x[station], pool)
 
 
 def index_stats(state: IndexState) -> dict:

@@ -41,17 +41,44 @@ class StreamConfig:
     One fingerprint spans ``FingerprintConfig.lag_samples / fs`` seconds of
     stream time (2 s at paper settings), so a window of N days is
     ``N * 86400 * fs / lag_samples`` fingerprints.
+
+    ``fused`` selects the single-dispatch hot path (``stream/fused.py``):
+    ring advance + fingerprint chain + hashing + expire/insert/query as
+    one donated-buffer jitted step; False keeps the PR-1/2 multi-call
+    chain (the parity reference and unfused benchmark baseline).
+    ``pooled`` steps all stations of a multi-station detector through one
+    vmapped executable instead of S sequential engines (requires
+    ``fused``).
+
+    ``stats_warmup_blocks == 0`` defers the MAD-statistics freeze to
+    ``flush()``: every block stays buffered and the reservoir absorbs the
+    whole stream before the freeze binarizes the buffered warmup
+    fingerprints with the matured statistics — the re-binarize-after-
+    freeze hook that closes the self-computed-stats recall gap on finite
+    traces (host memory is then O(stream); use a positive warmup for
+    unbounded ingestion).
     """
 
     block_fingerprints: int = 64   # fingerprints per jitted step
     index: StreamIndexConfig = StreamIndexConfig()  # resident index shape
     stats_warmup_blocks: int = 2   # blocks buffered before MAD stats freeze
+                                   # (0 = freeze only at flush, see above)
     reservoir_rows: int = 2048     # coefficient rows kept for median/MAD
     seed: int = 0
     window_fingerprints: int = 0   # sliding detection window (0 = keep all)
     filter_window_fingerprints: int = 0  # rolling occurrence filter window
+    fused: bool = True             # single-dispatch fused hot path
+    pooled: bool = True            # vmapped station pool when multi-station
 
     def __post_init__(self):
+        if self.stats_warmup_blocks < 0:
+            raise ValueError(
+                f"stats_warmup_blocks must be >= 0 (0 = freeze at flush), "
+                f"got {self.stats_warmup_blocks}")
+        if self.pooled and not self.fused:
+            raise ValueError(
+                "pooled station stepping runs through the fused chunk step;"
+                " set fused=True (or pooled=False for the sequential path)")
         # ValueError (not assert): these are reachable from CLI flags and
         # must hold under `python -O` too — a filter window without an
         # expire window would let partners reach arbitrarily far back and

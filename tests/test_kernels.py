@@ -33,6 +33,40 @@ def test_minmax_hash_empty_rows(rng):
     assert int(jnp.max(maxs)) == 0
 
 
+@pytest.mark.parametrize("n,t,n_funcs,use_minmax",
+                         [(7, 20, 4, True), (33, 100, 8, True),
+                          (16, 12, 4, False), (5, 7, 6, True)])
+def test_minmax_sig_buckets_matches_signature_oracle(rng, n, t, n_funcs,
+                                                     use_minmax):
+    """The fused signature-fold + bucket-addressing kernel epilogue is
+    bit-identical to the jnp composition (signatures → bucket_ids) for
+    every table layout, including non-multiple table counts."""
+    import dataclasses
+    from repro.core import lsh as L
+
+    cfg = L.LSHConfig(n_tables=t, n_funcs=n_funcs, use_minmax=use_minmax,
+                      seed=99)
+    d = 256
+    fp = jnp.asarray(rng.random((n, d)) < 0.3)
+    mp = L.hash_mappings(d, cfg)
+    n_buckets = 1024
+    sig_o = L.signatures(fp, mp, cfg)
+    bkt_o = L.bucket_ids(sig_o, n_buckets, cfg.seed)
+    sig_k, bkt_k = ops.minmax_sig_buckets(
+        fp, mp, L.bucket_salts(t, cfg.seed), use_minmax=use_minmax,
+        n_buckets=n_buckets)
+    np.testing.assert_array_equal(np.asarray(sig_k), np.asarray(sig_o))
+    np.testing.assert_array_equal(np.asarray(bkt_k), np.asarray(bkt_o))
+    # and through the config-level entry with a validity mask
+    pcfg = dataclasses.replace(cfg, use_pallas=True)
+    valid = jnp.asarray(rng.random(n) < 0.6)
+    s1, b1 = L.signatures_and_buckets(fp, mp, pcfg, n_buckets, valid=valid)
+    s2 = L.signatures(fp, mp, cfg, valid=valid)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(
+        np.asarray(b1), np.asarray(L.bucket_ids(s2, n_buckets, cfg.seed)))
+
+
 # ---------------------------------------------------------------------------
 # haar2d
 # ---------------------------------------------------------------------------

@@ -1,6 +1,8 @@
 """Streaming detection subsystem: index semantics, ingest halo exactness,
-offline/streaming parity (incl. golden pin), bounded sliding-window mode,
-snapshot/restore, retracing discipline, serving smoke."""
+offline/streaming parity (incl. golden pin), fused single-dispatch hot
+path (parity / retracing / donation guards), bounded sliding-window mode
+with cross-window merge, snapshot/restore, serving smoke."""
+import dataclasses
 import json
 import pathlib
 
@@ -11,15 +13,20 @@ import pytest
 
 from repro.configs.fast_seismic import (smoke_config,
                                         stream_bounded_smoke_config,
+                                        stream_deferred_smoke_config,
                                         stream_smoke_config)
 from repro.core import fingerprint as F
 from repro.core import lsh as L
+from repro.core.align import AlignConfig
+from repro.core.detect import DetectConfig
 from repro.core.lsh import INVALID, LSHConfig
 from repro.core.synth import SynthConfig, make_dataset
 from repro.stream import (StreamConfig, StreamingDetector, StreamIndexConfig,
                           WaveformRing)
+from repro.stream import fused as FU
 from repro.stream import index as SI
-from repro.stream.engine import stream_step
+from repro.stream.engine import (RollingPairFilter, merge_boundary_rows,
+                                 stream_step)
 from repro.stream.ingest import StreamingMAD
 
 CFG = LSHConfig(n_tables=20, n_funcs=4, n_matches=2, bucket_cap=8,
@@ -240,9 +247,14 @@ def test_streaming_golden_pair_parity():
 
     Two-pass stats must reproduce the stored streamed pair set *exactly*
     (and with it 100% recovery of the stored offline set); self-computed
-    reservoir stats must stay at or above the recorded ~88% recovery. Any
-    parity drift fails loudly here instead of sliding under the slow
-    threshold tests.
+    reservoir stats with the default warmup must stay at or above the
+    recorded ~88% recovery; and the re-binarize-after-freeze hook
+    (``stats_warmup_blocks=0``: the reservoir absorbs the whole trace
+    before the flush-time freeze binarizes the buffered warmup blocks)
+    must close that gap completely — the deferred-freeze self-computed
+    statistics reproduce the two-pass pair set exactly, 100% offline
+    recall. Any parity drift fails loudly here instead of sliding under
+    the slow threshold tests.
     """
     gold = json.loads(GOLDEN.read_text())
     cfg = smoke_config()
@@ -265,6 +277,13 @@ def test_streaming_golden_pair_parity():
     recovered = len(off & got_self) / len(off)
     floor = gold["self_stats_recall"] - 0.03   # small slack under the pin
     assert recovered >= floor, (recovered, gold["self_stats_recall"])
+
+    # deferred freeze: self-computed stats == offline two-pass stats
+    got_def, _, _ = _stream_pairs(cfg, wf, gold["n_chunks"],
+                                  scfg=stream_deferred_smoke_config())
+    assert got_def == expect_two, (
+        sorted(got_def - expect_two), sorted(expect_two - got_def))
+    assert len(off & got_def) == len(off)      # gap closed: 100% recall
 
 
 # ---------------------------------------------------------------------------
@@ -407,13 +426,22 @@ def test_snapshot_restore_parity_mode(tmp_path):
 
 
 def test_stream_step_no_retracing():
-    """Same-shape chunks reuse one executable for insert/query/step."""
+    """Same-shape chunks reuse one executable, in both hot paths.
+
+    Unfused: ``block_coeffs`` + ``stream_step`` + insert/query caches stay
+    flat. Fused: the steady state is exactly ONE ``step_advance`` trace —
+    the one-dispatch invariant's retracing half (≤1 trace across ≥3
+    same-shape chunks after warmup).
+    """
     cfg, wf, _, med_mad = _parity_setup()
+    chunks = np.array_split(wf, 10)
+
+    # -- unfused chain
     scfg = StreamConfig(block_fingerprints=64,
-                        index=StreamIndexConfig(n_buckets=512, bucket_cap=8))
+                        index=StreamIndexConfig(n_buckets=512, bucket_cap=8),
+                        fused=False, pooled=False)
     det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
     st = det.stations[0]
-    chunks = np.array_split(wf, 10)
     for c in chunks[:3]:
         det.push(c)
     blocks_before = st.stats.blocks
@@ -427,11 +455,31 @@ def test_stream_step_no_retracing():
     assert SI.insert._cache_size() == ins_before
     assert SI.query._cache_size() == q_before
 
+    # -- fused single-dispatch path
+    scfg_f = dataclasses.replace(scfg, fused=True)
+    adv_start = FU.step_advance._cache_size()
+    det = StreamingDetector(cfg, scfg_f, n_stations=1, med_mad=med_mad)
+    st = det.stations[0]
+    for c in chunks[:5]:        # ≥2 blocks: step_block seed + step_advance
+        det.push(c)
+    assert st.stats.blocks >= 2
+    blocks_before = st.stats.blocks
+    adv_before = FU.step_advance._cache_size()
+    blk_before = FU.step_block._cache_size()
+    assert adv_before - adv_start == 1  # one steady-state trace, total
+    assert len(chunks[5:]) >= 3     # ≥3 same-shape chunks follow
+    for c in chunks[5:]:
+        det.push(c)
+    assert st.stats.blocks >= blocks_before + 2
+    assert FU.step_advance._cache_size() == adv_before  # ≤1 trace total
+    assert FU.step_block._cache_size() == blk_before
+
 
 def test_bounded_stream_step_no_retracing():
     """Expire + rolling-filter steps trigger no recompilation across
     chunks: the sliding window is a static arg (one extra trace total) and
-    window closes reuse the padded merge/cluster executables."""
+    window closes reuse the padded merge/cluster executables — in the
+    fused hot path too."""
     from repro.core import align as align_mod
 
     cfg, scfg, ds = _bounded_setup(n_stations=1)
@@ -444,21 +492,176 @@ def test_bounded_stream_step_no_retracing():
                                      np.asarray(med_mad[1])))
     st = det.stations[0]
     chunks = np.array_split(wf, 12)
-    for c in chunks[:5]:
+    for c in chunks[:6]:        # ≥2 blocks: step_advance is traced too
         det.push(c)
     # warmup must have closed at least one rolling window (so the filter's
     # merge/cluster executables exist) and run several expiring steps
+    assert st.stats.blocks >= 2
     assert st.filter.windows_closed >= 1
-    step_traces = stream_step._cache_size()
+    adv_traces = FU.step_advance._cache_size()
+    blk_traces = FU.step_block._cache_size()
     merge_traces = align_mod.merge_channels._cache_size()
     cluster_traces = align_mod.cluster_station._cache_size()
     windows_before = st.filter.windows_closed
-    for c in chunks[5:]:
+    for c in chunks[6:]:
         det.push(c)
     assert st.filter.windows_closed > windows_before  # more closes ran
-    assert stream_step._cache_size() == step_traces
+    assert FU.step_advance._cache_size() == adv_traces
+    assert FU.step_block._cache_size() == blk_traces
     assert align_mod.merge_channels._cache_size() == merge_traces
     assert align_mod.cluster_station._cache_size() == cluster_traces
+
+
+# ---------------------------------------------------------------------------
+# fused single-dispatch hot path (ISSUE 3): parity + donation guards
+# ---------------------------------------------------------------------------
+
+
+def _pair_set(det, station=0):
+    _, pairs, fstats = det.stations[station].finalize()
+    v = np.asarray(pairs.valid)
+    return set(zip(np.asarray(pairs.idx1)[v].tolist(),
+                   np.asarray(pairs.idx2)[v].tolist())), fstats
+
+
+def test_fused_step_parity_with_multi_call_path():
+    """The fused single dispatch is bit-identical to the unfused
+    ``block_coeffs`` + ``stream_step`` chain on ``stream_smoke_config`` —
+    same pair set with given stats, with self-computed warmup stats, and
+    across the masked flush tail (acceptance criterion)."""
+    cfg, wf, _, med_mad = _parity_setup()
+    scfg_f = stream_smoke_config()
+    scfg_u = dataclasses.replace(scfg_f, fused=False, pooled=False)
+    for mm in (med_mad, None):
+        got = {}
+        for name, scfg in (("fused", scfg_f), ("unfused", scfg_u)):
+            det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=mm)
+            for c in np.array_split(wf, 10):
+                det.push(c)
+            got[name], fstats = _pair_set(det)
+            assert fstats["fingerprints"] > 0
+        assert got["fused"] == got["unfused"], (
+            mm is None, sorted(got["fused"] ^ got["unfused"]))
+        assert len(got["fused"]) > 0
+
+
+def test_pooled_detector_matches_sequential():
+    """The vmapped station pool yields the same per-station pairs/events
+    as S sequential single-station engines."""
+    cfg, scfg, ds = _bounded_setup(n_stations=3)
+    det_p = StreamingDetector(cfg, scfg, n_stations=3)
+    det_s = StreamingDetector(cfg, dataclasses.replace(scfg, pooled=False),
+                              n_stations=3)
+    assert det_p.pooled and not det_s.pooled
+    for start in range(0, ds.waveforms.shape[1], 6000):
+        det_p.push(ds.waveforms[:, start: start + 6000])
+        det_s.push(ds.waveforms[:, start: start + 6000])
+    dp, ep, sp = det_p.finalize()
+    ds_, es, ss = det_s.finalize()
+    for i in range(3):
+        for k in ("fingerprints", "pairs", "events", "windows"):
+            assert sp[f"station{i}_{k}"] == ss[f"station{i}_{k}"], (i, k)
+    assert sp["detections"] == ss["detections"]
+    for name in ("dt", "onset", "n_stations", "score", "valid"):
+        np.testing.assert_array_equal(np.asarray(dp[name]),
+                                      np.asarray(ds_[name]), err_msg=name)
+
+
+def test_fused_step_donation_no_new_allocations():
+    """The donation half of the one-dispatch invariant: after warmup the
+    steady state retains ZERO new device bytes per chunk — every state
+    buffer is an in-place donated reuse (``jax.live_arrays`` delta)."""
+    cfg, wf, _, med_mad = _parity_setup()
+    scfg = stream_smoke_config()
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    st = det.stations[0]
+    chunks = np.array_split(wf, 10)
+    for c in chunks[:5]:        # compile step_block + step_advance
+        det.push(c)
+    assert st.stats.blocks >= 2
+    jax.block_until_ready(st.fstate.index.cursor)
+    n0 = len(jax.live_arrays())
+    b0 = sum(a.nbytes for a in jax.live_arrays())
+    blocks_before = st.stats.blocks
+    for c in chunks[5:]:
+        det.push(c)
+    jax.block_until_ready(st.fstate.index.cursor)
+    assert st.stats.blocks > blocks_before
+    n1 = len(jax.live_arrays())
+    b1 = sum(a.nbytes for a in jax.live_arrays())
+    assert (n1, b1) == (n0, b0), (n1 - n0, b1 - b0)
+
+
+def test_fused_state_does_not_alias_caller_stats():
+    """Donating the fused state must not delete the caller's med/mad
+    arrays (the state copies them at freeze)."""
+    cfg, wf, _, med_mad = _parity_setup()
+    mm = (jnp.asarray(med_mad[0]), jnp.asarray(med_mad[1]))
+    det = StreamingDetector(cfg, stream_smoke_config(), n_stations=1,
+                            med_mad=mm)
+    for c in np.array_split(wf, 6):
+        det.push(c)
+    # the originals survive the donated dispatches…
+    assert np.isfinite(np.asarray(mm[0])).all()
+    # …and the station still exposes usable statistics
+    med, mad = det.stations[0].med_mad
+    np.testing.assert_array_equal(np.asarray(med), med_mad[0])
+
+
+# ---------------------------------------------------------------------------
+# cross-window merge pass (bounded-mode boundary artifact)
+# ---------------------------------------------------------------------------
+
+
+def _merge_cfg():
+    fp = F.FingerprintConfig(img_freq=16, img_time=32, img_hop=8, top_k=64,
+                             mad_sample_rate=1.0)
+    return DetectConfig(
+        fingerprint=fp,
+        lsh=LSHConfig(n_tables=20, n_funcs=4, n_matches=2, bucket_cap=4,
+                      min_dt=fp.overlap_fingerprints, occurrence_frac=0.0),
+        align=AlignConfig(min_cluster_size=1, min_cluster_sim=4))
+
+
+def test_cross_window_merge_boundary_cluster():
+    """A diagonal cluster straddling a rolling-filter window boundary is
+    split by the per-window clustering and re-merged by the cross-window
+    pass before association (regression for the ROADMAP artifact)."""
+    cfg = _merge_cfg()
+    filt = RollingPairFilter(cfg, window=64, lookback=128)
+    # one repeating source: pairs on diagonal dt=40 whose later members
+    # span the first window close at id 64
+    idx2 = np.arange(58, 71)
+    tri = np.stack([idx2 - 40, idx2, np.full_like(idx2, 8)], axis=1)
+    filt.add(tri)
+    filt.advance(200)           # closes [0,64), [64,128), [128,192)
+    assert filt.windows_closed >= 2
+    raw = np.concatenate(filt.event_rows, axis=0)
+    assert raw.shape[0] == 2    # the boundary split happened…
+    merged = filt.all_rows()
+    assert merged.shape[0] == 1  # …and the merge pass undoes it
+    dt, onset, extent, size, score = merged[0]
+    assert dt == 40 and onset == 18 and extent == 12
+    assert size == raw[:, 3].sum() and score == raw[:, 4].sum()
+    # rows_tail (the incremental association feed) sees the merged row too
+    assert filt.rows_tail(0).shape[0] == 1
+
+
+def test_merge_boundary_rows_keeps_distinct_clusters():
+    """Rows on far diagonals or with disjoint idx ranges never merge."""
+    acfg = AlignConfig()
+    rows = np.array([
+        [40, 18, 5, 6, 48],     # base cluster
+        [40, 60, 4, 5, 40],     # same diagonal, far beyond gap → distinct
+        [90, 18, 5, 6, 48],     # different diagonal → distinct
+        [41, 24, 6, 7, 56],     # adjacent diagonal, touching → merges
+    ], np.int64)
+    out = merge_boundary_rows(rows, acfg)
+    assert out.shape[0] == 3
+    merged = out[(out[:, 1] == 18) & (out[:, 0] != 90)]
+    assert merged.shape[0] == 1 and merged[0, 3] == 13
+    # higher-score member donates the representative dt
+    assert merged[0, 0] == 41
 
 
 # ---------------------------------------------------------------------------
@@ -482,8 +685,38 @@ def test_multi_station_streaming_detections():
 
 
 def test_serve_detect_end_to_end():
+    """The slot/refill loop now answers against the per-station index
+    pool (default 2 stations)."""
     from repro.launch import serve_detect
     stats = serve_detect.main(["--requests", "6", "--slots", "3",
                                "--duration-s", "400"])
     assert stats["requests"] == 6
+    assert stats["stations"] == 2
     assert stats["hit_requests"] >= 1        # event windows match corpus
+
+
+@pytest.mark.slow
+def test_bench_e2e_smoke(tmp_path, monkeypatch):
+    """``make bench-smoke`` contract: the quick e2e benchmark runs, emits
+    a schema-stable BENCH_e2e.json, and the fused path does not regress
+    below the unfused chain (perf regressions are one command to spot)."""
+    import sys
+    root = str(pathlib.Path(__file__).parent.parent)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    from benchmarks import bench_e2e
+    out = bench_e2e.main(["--quick"])
+    assert out["schema"] == "bench-e2e/v1"
+    assert set(out) >= {"config_hash", "backend", "step", "points", "ratios"}
+    written = json.loads((tmp_path / "BENCH_e2e.json").read_text())
+    assert written["config_hash"] == out["config_hash"]
+    stations = sorted(p["stations"] for p in out["points"] if p["fused"])
+    assert stations == [1, 4, 8]
+    # the headline claim, with slack for shared-machine timing noise
+    assert out["ratios"]["fused_speedup_vs_unfused_chain"] >= 1.2
+    # donation: the fused steady state retains no device memory per chunk
+    # (the unfused reference may release warmup buffers → delta ≤ 0)
+    assert all(p["live_bytes_delta_per_chunk"] == 0
+               for p in out["points"] if p["fused"])
+    assert all(p["live_bytes_delta_per_chunk"] <= 0 for p in out["points"])
