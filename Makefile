@@ -16,5 +16,5 @@ bench:           ## full benchmark suite (BENCH_*.json + csv lines)
 bench-e2e:       ## streaming hot-path benchmark only (BENCH_e2e.json)
 	$(PY) -m benchmarks.run --e2e
 
-bench-smoke:     ## tier-1-safe perf smoke: quick e2e run, one command
-	$(PY) -m benchmarks.run --e2e --quick
+bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream point
+	$(PY) -m benchmarks.run --e2e --quick --scenario

@@ -115,8 +115,8 @@ def step_points(cfg, scfg, repeats: int) -> dict:
                                fcfg.halo_samples, med, mad)}
 
     def fused_step():
-        hold["s"], p = FU.step_advance(hold["s"], adv, mp, jnp.int32(0),
-                                       fcfg, lcfg, 0)
+        hold["s"], p, _ = FU.step_advance(hold["s"], adv, mp, jnp.int32(0),
+                                          fcfg, lcfg, 0)
         jax.block_until_ready(p.valid)
 
     t_fused = _timeit(fused_step, repeats)
@@ -126,8 +126,8 @@ def step_points(cfg, scfg, repeats: int) -> dict:
 
     def two_call():
         coeffs = E.block_coeffs(blockw, fcfg)
-        hold2["s"], p = E.stream_step(hold2["s"], coeffs, med, mad, mp,
-                                      jnp.int32(0), vmask, fcfg, lcfg, 0)
+        hold2["s"], p, _ = E.stream_step(hold2["s"], coeffs, med, mad, mp,
+                                         jnp.int32(0), vmask, fcfg, lcfg, 0)
         jax.block_until_ready(p.valid)
 
     t_two = _timeit(two_call, repeats)

@@ -5,7 +5,8 @@ Roofline reporting (from dry-run artifacts) appended when artifacts exist.
 
 ``--e2e`` runs only the streaming hot-path benchmark (BENCH_e2e.json);
 ``--quick`` shrinks it to the tier-1-safe smoke invocation
-(``make bench-smoke``).
+(``make bench-smoke``). ``--scenario`` adds the dirty-stream robustness
+point (gap + glitch spurious suppression) to BENCH_stream.json.
 """
 from __future__ import annotations
 
@@ -22,12 +23,18 @@ def main(argv=None) -> None:
                     help="run only the end-to-end hot-path benchmark")
     ap.add_argument("--quick", action="store_true",
                     help="smoke-size the e2e benchmark")
+    ap.add_argument("--scenario", action="store_true",
+                    help="also record the dirty-stream robustness point "
+                         "(BENCH_stream.json scenario key)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
     if args.e2e:
         from benchmarks import bench_e2e
         bench_e2e.main(["--quick"] if args.quick else [])
+        if args.scenario:
+            from benchmarks import bench_stream
+            bench_stream.main(["--scenario-only"])
         print(f"# total bench time {time.time()-t0:.0f}s")
         return
 
@@ -47,7 +54,8 @@ def main(argv=None) -> None:
         ("scaling(Fig14)", lambda: bench_scaling.main()),
         ("mad_sampling(Tab6)", lambda: bench_mad_sampling.main()),
         ("alternatives(Tab2)", lambda: bench_alternatives.main()),
-        ("stream(incremental_index)", lambda: bench_stream.main([])),
+        ("stream(incremental_index)",
+         lambda: bench_stream.main(["--scenario"])),
         ("stream_e2e(hot_path)",
          lambda: bench_e2e.main(["--quick"] if args.quick else [])),
     ]

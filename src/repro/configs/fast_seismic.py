@@ -58,13 +58,25 @@ def stream_config() -> StreamConfig:
     """
     day = 43_200  # fingerprints per day at the 2 s lag (86400 s / 2 s)
     # fused/pooled default True: one donated dispatch per block, and one
-    # vmapped executable for all stations of a monitoring network
+    # vmapped executable for all stations of a monitoring network.
+    # Data-quality knobs sized for real telemetry (ISSUE 4): a 60 s
+    # reorder horizon absorbs out-of-order packet delivery, offset jumps
+    # beyond one hour are rejected as corrupt timestamps rather than
+    # gap-filled, and the sample-exact duplicate guard looks one day back
+    # (telemetry repeats arrive within hours). The bucket-saturation
+    # quarantine stays OFF here: its counter is *lifetime* insert
+    # traffic, which any bucket on an unbounded multi-week stream
+    # eventually exceeds — enable it per deployment window, or wait for
+    # the window-relative decaying counter (ROADMAP open item).
     return StreamConfig(block_fingerprints=256,
                         index=StreamIndexConfig(n_buckets=16384,
                                                 bucket_cap=8),
                         stats_warmup_blocks=2, reservoir_rows=4096,
                         window_fingerprints=3 * day,
-                        filter_window_fingerprints=day)
+                        filter_window_fingerprints=day,
+                        reorder_horizon_samples=6000,
+                        max_gap_samples=360_000,
+                        dup_window_fingerprints=day)
 
 
 def stream_smoke_config() -> StreamConfig:
@@ -95,6 +107,34 @@ def stream_deferred_smoke_config() -> StreamConfig:
                         index=StreamIndexConfig(n_buckets=2048,
                                                 bucket_cap=8),
                         stats_warmup_blocks=0, reservoir_rows=1024)
+
+
+def stream_dirty_smoke_config() -> StreamConfig:
+    """Quality-hardened smoke streaming (ISSUE 4): the dirty-data path.
+
+    On clean data this configuration is **bit-identical** to
+    ``stream_smoke_config`` (pinned by tests): the reorder horizon only
+    *delays* block emission by 3 000 samples (30 s) so late or duplicated
+    chunks can still be reconciled; the sample-exact duplicate detector
+    can only fire on bit-exact repeated windows (continuous noise never
+    repeats exactly); and ``saturation_limit=10`` sits at 2× the largest
+    lifetime bucket traffic any clean smoke trace produces (≈5, measured
+    across seeds — repeating events share buckets only a handful of
+    times, while a repeating glitch hammers the same buckets tens to
+    thousands of times).
+
+    ``dup_sig_tables`` stays 0 here: on the smoke LSH config (t=20, k=4)
+    the strongest legitimate repeating events can collide in up to all 20
+    tables on some seeds, so the signature-level duplicate guard is a
+    per-deployment knob rather than a default (see ``StreamConfig``).
+    """
+    return StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=2048,
+                                                bucket_cap=8),
+                        stats_warmup_blocks=2, reservoir_rows=1024,
+                        reorder_horizon_samples=3000,
+                        saturation_limit=10,
+                        dup_window_fingerprints=512)
 
 
 def stream_bounded_smoke_config() -> StreamConfig:

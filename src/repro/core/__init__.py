@@ -3,4 +3,5 @@ from repro.core.align import AlignConfig, Events  # noqa: F401
 from repro.core.detect import DetectConfig, detect_events, detect_step  # noqa: F401
 from repro.core.fingerprint import FingerprintConfig  # noqa: F401
 from repro.core.lsh import LSHConfig, Pairs  # noqa: F401
-from repro.core.synth import SynthConfig, make_dataset  # noqa: F401
+from repro.core.synth import (ScenarioConfig, SynthConfig,  # noqa: F401
+                              make_dataset, make_scenario_dataset)

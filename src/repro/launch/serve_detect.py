@@ -265,6 +265,11 @@ def main(argv=None):
     det.flush()
     assert all(st.stats_frozen for st in det.stations), \
         "ingest too short to freeze MAD statistics"
+    # data-quality reconciliation + guard counters (gaps spliced/dropped,
+    # duplicates suppressed, saturated buckets hit) — the operational view
+    # of how dirty the ingested telemetry was
+    quality = det.quality_summary()
+    print("# ingest quality " + json.dumps(quality))
     state, med, mad = det.pool_serving_state()
 
     # query windows centered on known event arrivals (+ random controls)
@@ -284,6 +289,7 @@ def main(argv=None):
                             n_slots=args.slots)
     stats = eng.run(reqs)
     assert all(r.done for r in reqs)
+    stats["ingest_quality"] = quality
     print("RESULT " + json.dumps(stats))
     return stats
 

@@ -59,6 +59,46 @@ parity test in ``tests/test_stream.py`` enforce the invariant; the
 unfused chain (``block_coeffs`` + ``stream_step``, ``fused=False``) stays
 as the bit-exact reference.
 
+Data-quality path (ISSUE 4)
+---------------------------
+
+Real telemetry is pathological — gaps, out-of-order and duplicated
+chunks, repeating instrument glitches — and every defense lives either
+*before* the dispatch or *inside* the one traced program, never as an
+extra dispatch:
+
+* **gap-aware ingest** (``WaveformRing``): ``push(chunk, offset)``
+  places chunks on the absolute sample timeline; NaN samples and offset
+  jumps become sentinel-filled invalid spans, and each emitted block
+  carries a per-fingerprint validity mask (a fingerprint is valid iff
+  its whole window holds real samples). Masked blocks route through the
+  already-traced ``step_block`` — suppressed fingerprints get filler
+  signatures in-dispatch, are never inserted or queried, and the
+  donation/retracing invariants are untouched (pinned by
+  ``test_quality_path_single_dispatch_invariants``).
+* **reorder reconciliation** (``StreamConfig.reorder_horizon_samples``):
+  block emission is held back by the horizon so late chunks splice into
+  place and duplicated deliveries drop deterministically (first writer
+  wins); permutation-invariance within the horizon is a pinned property.
+* **repeated-segment guard** (``dup_window_fingerprints``): sample-exact
+  window hashes flag telemetry-duplicated blocks and flat-lined channels
+  *before* the dispatch — structurally zero false positives on clean
+  data (continuous noise never repeats bit-exactly).
+* **bucket-saturation quarantine** (``saturation_limit``, in-dispatch):
+  buckets whose lifetime insert traffic exceeds the limit stop emitting
+  pairs — the paper's repeating-glitch mega-bucket fix. The signature-
+  level ``dup_sig_tables`` guard is the aggressive per-deployment
+  variant (strong legitimate repeaters can collide in all tables).
+
+With every knob at its default (off) — and on clean data even with the
+knobs on — the traced program and the emitted pair set are bit-identical
+to the unguarded path (``test_quality_path_clean_bit_parity``). The
+scenario generator (``core.synth.make_scenario_dataset``) is the shared
+fault-injection substrate for ``tests/test_scenarios.py`` and
+``bench_stream --scenario`` (spurious-pair suppression recorded in
+``BENCH_stream.json``); reconciliation and guard counters surface
+through ``StreamingDetector.quality_summary`` and ``serve_detect``.
+
 ``launch/serve_detect.py`` wraps a shared index in a slot/refill request
 loop (the ``ServeEngine`` idiom) for concurrent query-window serving, with
 periodic snapshots (``--snapshot-every``) and restart (``--restore``).

@@ -47,8 +47,10 @@ reproduces the uninterrupted run's detections exactly.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import hashlib
 import time
 
 import jax
@@ -83,35 +85,39 @@ def pool_block_coeffs(blocks: jax.Array,
     return jax.vmap(lambda b: fp_mod.coeffs_from_waveform(b, fcfg))(blocks)
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window",
+                                             "saturation", "dup_tables"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
-                window: int = 0) -> tuple[IndexState, Pairs]:
-    """One fixed-shape streaming step: binarize → sign → expire → insert →
-    query. (The *unfused* half of the PR-1/2 chain — kept as the parity
-    reference and benchmark baseline for the fused step.)
+                window: int = 0, saturation: int = 0, dup_tables: int = 0
+                ) -> tuple[IndexState, Pairs, jax.Array]:
+    """One fixed-shape streaming step: binarize → sign → expire → guards →
+    insert → query. (The *unfused* half of the PR-1/2 chain — kept as the
+    parity reference and benchmark baseline for the fused step.)
 
     Same-shape blocks reuse one executable (base_id and the valid mask are
-    traced, configs and the window length are static); insert-then-query
-    with the id-ordered emission rule yields each (earlier, later) pair
-    exactly once per colliding table. Invalid rows (zero-padded flush
-    tails) get unique filler signatures, are not stored, and cannot match.
+    traced, configs, the window length and the quality knobs are static);
+    insert-then-query with the id-ordered emission rule yields each
+    (earlier, later) pair exactly once per colliding table. Invalid rows
+    (zero-padded flush tails, gap-masked fingerprints) get unique filler
+    signatures, are not stored, and cannot match.
 
     ``window`` > 0 expires index entries older than the newest id in this
     block minus the window *before* inserting it, so every emitted pair
-    satisfies idx2 - idx1 < window — the sliding detection window.
+    satisfies idx2 - idx1 < window — the sliding detection window. The
+    expire/guard/insert/query tail is ``index.guarded_step``, shared with
+    the fused path, so the two hot paths stay bit-identical with the
+    quality guards on or off.
     """
     bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
-    sigs = lsh_mod.signatures(bits, mappings, lcfg, valid=valid)
+    sigs, buckets = lsh_mod.signatures_and_buckets(
+        bits, mappings, lcfg, state.shape[1], valid=valid)
     ids = base_id + jnp.arange(sigs.shape[0], dtype=jnp.int32)
-    if window > 0:
-        newest = base_id + valid.sum(dtype=jnp.int32)
-        state = index_mod.expire(state, newest - jnp.int32(window))
-    state = index_mod.insert(state, sigs, ids, lcfg, valid=valid)
-    pairs = index_mod.query(state, sigs, ids, lcfg)
-    return state, pairs
+    return index_mod.guarded_step(state, sigs, buckets, ids, valid, lcfg,
+                                  window, saturation=saturation,
+                                  dup_tables=dup_tables)
 
 
 def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
@@ -406,7 +412,9 @@ class StationStream:
         fcfg, lcfg = cfg.fingerprint, cfg.lsh
         self.external = external
         self.fused = scfg.fused
-        self.ring = WaveformRing(fcfg, scfg.block_fingerprints)
+        self.ring = WaveformRing(fcfg, scfg.block_fingerprints,
+                                 reorder_horizon=scfg.reorder_horizon_samples,
+                                 max_gap=scfg.max_gap_samples)
         self.mad = StreamingMAD(scfg.reservoir_rows, fcfg.n_coeff,
                                 seed=scfg.seed)
         self._state: IndexState | None = index_mod.init_index(lcfg,
@@ -419,7 +427,22 @@ class StationStream:
         self._pool_idx = 0
         if med_mad is not None:
             self._set_frozen(med_mad[0], med_mad[1])
-        self.pending: list[tuple[int, np.ndarray, jax.Array]] = []
+        # (base_id, block, coeffs-or-None, gap_mask-or-None)
+        self.pending: list[tuple[int, np.ndarray, jax.Array | None,
+                                 np.ndarray | None]] = []
+        # in-dispatch guard counters (ring.quality covers the ingest
+        # side). suppressed_fingerprints counts every fingerprint masked
+        # out of the dispatch for ANY reason — gap overlap or duplicate
+        # flag — so it is a superset of duplicate_fingerprints; the
+        # gap-specific volume is ring.quality's gap/missing counters.
+        self.qc = {"duplicate_fingerprints": 0, "saturated_lookups": 0,
+                   "suppressed_fingerprints": 0}
+        # sample-exact repeated-segment detector state (window hashes of
+        # the last dup_window_fingerprints fingerprints)
+        self.dup_window = scfg.dup_window_fingerprints
+        self._dup_hist: collections.deque[tuple[int, int]] = \
+            collections.deque()
+        self._dup_map: dict[int, int] = {}   # hash -> newest fp id
         self.triplets: list[np.ndarray] = []            # (m, 3) idx1,idx2,sim
         self.rolling = scfg.filter_window_fingerprints > 0
         self.filter = (RollingPairFilter(cfg, scfg.filter_window_fingerprints,
@@ -464,37 +487,119 @@ class StationStream:
         quantity the rolling filter bounds."""
         return self.filter.buf_rows if self.rolling else self._tri_rows
 
+    def quality_summary(self) -> dict:
+        """Ingest reconciliation + in-dispatch guard counters (ISSUE 4)."""
+        out = dict(self.ring.quality)
+        out.update(self.qc)
+        return out
+
     # -- ingestion -----------------------------------------------------------
 
-    def push(self, chunk: np.ndarray) -> int:
-        """Ingest one chunk; returns pairs emitted by its ready blocks."""
+    def push(self, chunk: np.ndarray, offset: int | None = None) -> int:
+        """Ingest one chunk (optionally placed at an absolute sample
+        ``offset`` — late/overlapping/gapped arrivals are reconciled by
+        the ring); returns pairs emitted by its ready blocks."""
         assert not self.external, \
             "pooled stations are pushed through their StreamingDetector"
         t0 = time.perf_counter()
         emitted = 0
-        for base_id, block in self.ring.push(chunk):
-            emitted += self._ingest_block(base_id, block)
+        for base_id, block, mask in self.ring.push(chunk, offset):
+            emitted += self._ingest_block(base_id, block, mask)
         self.stats.chunks += 1
         self.stats.samples += int(np.asarray(chunk).size)
         self.stats.chunk_wall_s.append(time.perf_counter() - t0)
         return emitted
 
-    def _ingest_block(self, base_id: int, block: np.ndarray) -> int:
+    def _flag_duplicates(self, base_id: int, block: np.ndarray,
+                         mask: np.ndarray | None,
+                         end_id: int | None = None) -> np.ndarray | None:
+        """Sample-exact repeated-segment detector (ISSUE 4, host side).
+
+        Hashes every (still-valid) fingerprint's raw sample window and
+        flags exact repeats of any window seen within the last
+        ``dup_window_fingerprints`` ids — telemetry-duplicated blocks and
+        flat-lined channels produce *bit-exact* windows, repeating
+        earthquakes never do (independent noise floors), so the guard
+        cannot touch clean data. Flagged fingerprints merge into the
+        block's validity mask: suppressed in-dispatch, never inserted.
+        ``end_id`` is one past the last fingerprint this block consumes
+        from the id space (a flush tail consumes fewer than a whole
+        block; defaulting to a full block there would purge the hash
+        history early and leak copies whose original sits at the
+        horizon's edge).
+        """
+        if self.dup_window <= 0:
+            return mask
+        fcfg = self.cfg.fingerprint
+        w, lag = fcfg.window_samples, fcfg.lag_samples
+        n = self.scfg.block_fingerprints
+        valid = (np.ones(n, bool) if mask is None
+                 else np.asarray(mask, bool).copy())
+        flagged = 0
+        block = np.ascontiguousarray(block, np.float32)
+        # fingerprint windows overlap by w - lag, so hashing each whole
+        # window would re-hash every byte ~w/lag times. Instead each
+        # lag-aligned stride is digested once and a fingerprint's hash
+        # combines its k full-stride digests plus the sub-stride tail —
+        # still exactly window-equality (up to hash collision), at ~1x
+        # the input bytes.
+        k, tail = w // lag, w % lag
+        strides: list[bytes | None] = [None] * (n + k)
+
+        def stride(s: int) -> bytes:
+            if strides[s] is None:
+                strides[s] = hashlib.blake2b(
+                    block[s * lag: (s + 1) * lag].tobytes(),
+                    digest_size=8).digest()
+            return strides[s]
+
+        for i in range(n):
+            if not valid[i]:
+                continue
+            fid = base_id + i
+            parts = b"".join(stride(i + j) for j in range(k))
+            if tail:
+                parts += block[(i + k) * lag: (i + k) * lag + tail].tobytes()
+            h = int.from_bytes(
+                hashlib.blake2b(parts, digest_size=8).digest(), "little")
+            if h in self._dup_map:
+                valid[i] = False
+                flagged += 1
+            else:
+                self._dup_map[h] = fid
+                self._dup_hist.append((fid, h))
+        floor = (base_id + n if end_id is None else end_id) \
+            - self.dup_window
+        while self._dup_hist and self._dup_hist[0][0] < floor:
+            old_id, old_h = self._dup_hist.popleft()
+            if self._dup_map.get(old_h) == old_id:
+                del self._dup_map[old_h]
+        if flagged:
+            self.qc["duplicate_fingerprints"] += flagged
+            return valid
+        return mask
+
+    def _ingest_block(self, base_id: int, block: np.ndarray,
+                      mask: np.ndarray | None = None) -> int:
+        mask = self._flag_duplicates(base_id, block, mask)
         if not self.stats_frozen:
             coeffs = block_coeffs(jnp.asarray(block), self.cfg.fingerprint)
-            self.mad.update(np.asarray(coeffs))
+            rows = np.asarray(coeffs)
+            # gap-masked fingerprints hold sentinel samples — keep their
+            # rows out of the §5.2 statistics reservoir
+            self.mad.update(rows if mask is None else rows[mask])
             # the fused drain recomputes coefficients inside its single
             # dispatch — retaining them here (O(warmup), O(trace) in the
             # deferred-freeze mode) would be dead weight; the unfused
             # drain replays the exact buffered coefficients
             self.pending.append((base_id, np.asarray(block, np.float32),
-                                 None if self.fused else coeffs))
+                                 None if self.fused else coeffs, mask))
             warm = self.scfg.stats_warmup_blocks
             if warm > 0 and len(self.pending) >= warm:
                 self._freeze_stats()
                 return self._drain_pending()
             return 0
-        return self._process(base_id, block=block)
+        return self._process(base_id, block=block, valid=mask, primed=True)
 
     def _freeze_stats(self) -> None:
         med, mad = self.mad.stats()
@@ -502,56 +607,84 @@ class StationStream:
 
     def _drain_pending(self) -> int:
         emitted = 0
-        for base_id, block, coeffs in self.pending:
-            emitted += self._process(base_id, block=block, coeffs=coeffs)
+        for base_id, block, coeffs, mask in self.pending:
+            emitted += self._process(base_id, block=block, coeffs=coeffs,
+                                     valid=mask, primed=True)
         self.pending = []
         return emitted
 
+    def _absorb_qc(self, qc: np.ndarray, n_masked: int) -> None:
+        qc = np.asarray(qc).reshape(-1)
+        self.qc["duplicate_fingerprints"] += int(qc[0])
+        self.qc["saturated_lookups"] += int(qc[1])
+        # n_masked covers host-side suppression (gap overlap + sample-
+        # exact dup flags); qc[0] adds the in-dispatch dup_sig_tables
+        # suppressions so the superset invariant holds either way
+        self.qc["suppressed_fingerprints"] += int(n_masked) + int(qc[0])
+
     def _process(self, base_id: int, *, block: np.ndarray | None = None,
                  coeffs: jax.Array | None = None,
-                 valid: np.ndarray | None = None) -> int:
-        """One block through the device step (fused or legacy chain)."""
+                 valid: np.ndarray | None = None,
+                 primed: bool = False, n_adv: int | None = None) -> int:
+        """One block through the device step (fused or legacy chain).
+
+        ``valid`` masks fingerprints suppressed in-dispatch (gap overlap
+        or a zero-padded flush tail). ``primed`` says the block is fully
+        framed — its tail correctly primes the device halo even when some
+        fingerprints are masked (gap blocks), unlike a padded tail.
+        ``n_adv`` is the id-space advance (defaults to a whole block; a
+        flush tail advances only by its consumed fingerprints).
+        """
         fcfg, lcfg = self.cfg.fingerprint, self.cfg.lsh
         window = self.scfg.window_fingerprints
+        sat = self.scfg.saturation_limit
+        dup = self.scfg.dup_sig_tables
         n = self.scfg.block_fingerprints
         vmask = (np.ones(n, bool) if valid is None
                  else np.asarray(valid, bool))
+        if n_adv is None:
+            n_adv = n
         if self.fused:
             if valid is None and self._halo_ok:
                 adv = np.asarray(block, np.float32)[-self.ring.advance:]
-                self.fstate, pairs = fused_mod.step_advance(
+                self.fstate, pairs, qc = fused_mod.step_advance(
                     self.fstate, jnp.asarray(adv), self.mappings,
-                    jnp.int32(base_id), fcfg, lcfg, window)
+                    jnp.int32(base_id), fcfg, lcfg, window, sat, dup)
             else:
-                self.fstate, pairs = fused_mod.step_block(
+                self.fstate, pairs, qc = fused_mod.step_block(
                     self.fstate, jnp.asarray(block), self.mappings,
                     jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
-                    window)
-                # a zero-padded tail leaves the device halo dirty; the next
-                # block must re-seed through step_block
-                self._halo_ok = valid is None
+                    window, sat, dup)
+                # a zero-padded tail leaves the device halo dirty and the
+                # next block must re-seed through step_block; a fully
+                # framed (gap-masked) block primes it like a clean one
+                self._halo_ok = valid is None or primed
         else:
             if coeffs is None:
                 coeffs = block_coeffs(jnp.asarray(block), fcfg)
             med, mad = self._med_mad
-            self._state, pairs = stream_step(
+            self._state, pairs, qc = stream_step(
                 self._state, coeffs, med, mad, self.mappings,
-                jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg, window)
+                jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg, window,
+                sat, dup)
+        self._absorb_qc(qc, n_adv - int(vmask[:n_adv].sum()))
         return self._consume(
-            base_id, int(vmask.sum()),
+            base_id, n_adv, int(vmask.sum()),
             (np.asarray(pairs.idx1), np.asarray(pairs.idx2),
              np.asarray(pairs.sim), np.asarray(pairs.valid)))
 
-    def _consume(self, base_id: int, n_valid: int,
+    def _consume(self, base_id: int, n_adv: int, n_valid: int,
                  pairs_np: tuple[np.ndarray, ...]) -> int:
         """Host-side tail of a step: triplet accounting + rolling filter.
 
         Shared by the solo path and the pooled detector (which hands each
-        station its slice of the vmapped step output).
+        station its slice of the vmapped step output). ``n_adv`` advances
+        the processed-id frontier (full id-space coverage of the block,
+        gaps included); ``n_valid`` counts the real fingerprints.
         """
         i1, i2, sim, pv = pairs_np
         m = int(pv.sum())
-        self.processed_fp = base_id + n_valid
+        self.processed_fp = base_id + n_adv
         if m:
             tri = np.stack([i1[pv], i2[pv], sim[pv]], axis=1).astype(np.int64)
             if self.rolling:
@@ -582,25 +715,32 @@ class StationStream:
         if self.external:
             return 0                # the owning detector flushes the pool
         emitted = 0
+        ready = 0
+        for base_id, block, mask in self.ring.flush_ready():
+            ready += self._ingest_block(base_id, block, mask)
         part = self.ring.flush_partial()
         part_coeffs = None
         if part is not None:
-            base_id, block, n_valid = part
+            base_id, block, mask = part
+            mask = self._flag_duplicates(base_id, block, mask,
+                                         end_id=self.ring.next_fp)
+            part = (base_id, block, mask)
             if not self.stats_frozen or not self.fused:
                 part_coeffs = block_coeffs(jnp.asarray(block),
                                            self.cfg.fingerprint)
             if not self.stats_frozen:
-                self.mad.update(np.asarray(part_coeffs)[:n_valid])
+                self.mad.update(np.asarray(part_coeffs)[mask])
         if not self.stats_frozen:
             if self.mad.filled < 2:
-                return 0  # not enough signal ever arrived
+                return ready  # not enough signal ever arrived
             self._freeze_stats()
             emitted += self._drain_pending()
+        emitted += ready
         if part is not None:
-            base_id, block, n_valid = part
-            vmask = np.arange(self.scfg.block_fingerprints) < n_valid
+            base_id, block, mask = part
             emitted += self._process(base_id, block=block,
-                                     coeffs=part_coeffs, valid=vmask)
+                                     coeffs=part_coeffs, valid=mask,
+                                     n_adv=self.ring.next_fp - base_id)
         return emitted
 
     def accumulated_pairs(self, pad_to: int = 1024) -> Pairs:
@@ -630,10 +770,11 @@ class StationStream:
                 "windows": self.filter.windows_closed,
                 "events": int(events.count()),
                 "peak_buffered_triplets": self.peak_tri_rows,
+                "quality": self.quality_summary(),
             }
             return events, pairs_from_triplets(np.zeros((0, 3))), fstats
         pairs = self.accumulated_pairs()
-        fstats = {"fingerprints": n_fp}
+        fstats = {"fingerprints": n_fp, "quality": self.quality_summary()}
         if lcfg.occurrence_frac > 0 and n_fp > 0:
             pairs, excluded = lsh_mod.occurrence_filter(
                 pairs, n_fp, lcfg.occurrence_frac)
@@ -660,6 +801,7 @@ class StationStream:
         }
         ring_a, ring_s = self.ring.snapshot()
         arrays["ring/buf"] = ring_a["buf"]
+        arrays["ring/vbuf"] = ring_a["vbuf"]
         mad_a, mad_s = self.mad.snapshot()
         arrays["mad/rows"] = mad_a["rows"]
         arrays["stats/chunk_wall_s"] = np.asarray(self.stats.chunk_wall_s,
@@ -669,6 +811,7 @@ class StationStream:
             "frozen": self.stats_frozen,
             "processed_fp": self.processed_fp,
             "peak_tri_rows": self.peak_tri_rows,
+            "qc": dict(self.qc),
             "stats": {"chunks": self.stats.chunks,
                       "blocks": self.stats.blocks,
                       "samples": self.stats.samples,
@@ -678,14 +821,24 @@ class StationStream:
         if self.stats_frozen:
             arrays["med"] = np.asarray(self._med_mad[0])
             arrays["mad_stat"] = np.asarray(self._med_mad[1])
+        if self.dup_window > 0:
+            arrays["dup/ids"] = np.asarray(
+                [i for i, _ in self._dup_hist], np.int64)
+            arrays["dup/hash"] = np.asarray(
+                [h for _, h in self._dup_hist], np.uint64)
         if self.pending:
+            n = self.scfg.block_fingerprints
             arrays["pending/base"] = np.asarray(
-                [b for b, _, _ in self.pending], np.int64)
+                [b for b, _, _, _ in self.pending], np.int64)
             arrays["pending/blocks"] = np.stack(
-                [b for _, b, _ in self.pending]).astype(np.float32)
+                [b for _, b, _, _ in self.pending]).astype(np.float32)
+            # gap masks; an all-True row restores to None (clean block)
+            arrays["pending/valid"] = np.stack(
+                [np.ones(n, bool) if m is None else np.asarray(m, bool)
+                 for _, _, _, m in self.pending])
             if not self.fused:      # unfused drains replay exact coeffs
                 arrays["pending/coeffs"] = np.stack(
-                    [np.asarray(c) for _, _, c in self.pending]) \
+                    [np.asarray(c) for _, _, c, _ in self.pending]) \
                     .astype(np.float32)
         if self.rolling:
             f_a, f_s = self.filter.snapshot()
@@ -709,8 +862,21 @@ class StationStream:
         self._state = restored
         self.fstate = None
         self._halo_ok = False
-        self.ring.restore({"buf": arrays["ring/buf"]}, extra["ring"])
+        ring_a = {"buf": arrays["ring/buf"]}
+        if "ring/vbuf" in arrays:
+            ring_a["vbuf"] = arrays["ring/vbuf"]
+        self.ring.restore(ring_a, extra["ring"])
         self.mad.restore({"rows": arrays["mad/rows"]}, extra["mad"])
+        self.qc.update(extra.get("qc", {}))
+        self._dup_hist.clear()
+        self._dup_map = {}
+        if "dup/ids" in arrays:
+            ids = np.asarray(arrays["dup/ids"], np.int64)
+            hashes = np.asarray(arrays["dup/hash"], np.uint64)
+            for i in range(ids.shape[0]):
+                fid, h = int(ids[i]), int(hashes[i])
+                self._dup_hist.append((fid, h))
+                self._dup_map[h] = fid
         self._med_mad = None
         if extra["frozen"]:
             self._set_frozen(arrays["med"], arrays["mad_stat"])
@@ -720,9 +886,18 @@ class StationStream:
             blocks = np.asarray(arrays["pending/blocks"], np.float32)
             coeffs = (np.asarray(arrays["pending/coeffs"], np.float32)
                       if "pending/coeffs" in arrays else None)
+            masks = (np.asarray(arrays["pending/valid"], bool)
+                     if "pending/valid" in arrays else None)
+
+            def _mask(i):
+                if masks is None or masks[i].all():
+                    return None
+                return masks[i]
+
             self.pending = [
                 (int(bases[i]), blocks[i],
-                 None if coeffs is None else jnp.asarray(coeffs[i]))
+                 None if coeffs is None else jnp.asarray(coeffs[i]),
+                 _mask(i))
                 for i in range(bases.shape[0])]
         if self.rolling:
             self.filter.restore(
@@ -785,16 +960,21 @@ class StreamingDetector:
         self._assoc_lo = 0
         self._polled_windows = 0  # window closes seen by the last poll
 
-    def push(self, chunk: np.ndarray) -> int:
+    def push(self, chunk: np.ndarray, offset: int | None = None) -> int:
+        """Ingest one network chunk; ``offset`` places it at an absolute
+        sample offset on every station's timeline (late / duplicated /
+        gapped telemetry is reconciled per station by the rings; chunks
+        are network-aligned, so one offset serves all stations — a
+        single-station outage is NaN samples inside the chunk)."""
         chunk = np.asarray(chunk, np.float32)
         if chunk.ndim == 1:
             chunk = chunk[None, :]
         assert chunk.shape[0] == len(self.stations), \
             (chunk.shape, len(self.stations))
         if self.pooled:
-            emitted = self._pool_push(chunk)
+            emitted = self._pool_push(chunk, offset)
         else:
-            emitted = sum(st.push(chunk[i])
+            emitted = sum(st.push(chunk[i], offset)
                           for i, st in enumerate(self.stations))
         if self.rolling and len(self.stations) >= 2:
             new = self.poll_detections()
@@ -815,16 +995,18 @@ class StreamingDetector:
             st._state = None        # the pool owns the buffers now
         self._halo_ok = False
 
-    def _pool_push(self, chunk: np.ndarray) -> int:
+    def _pool_push(self, chunk: np.ndarray, offset: int | None = None
+                   ) -> int:
         t0 = time.perf_counter()
-        per_st = [st.ring.push(chunk[i])
+        per_st = [st.ring.push(chunk[i], offset)
                   for i, st in enumerate(self.stations)]
         emitted = 0
         for k in range(len(per_st[0])):   # rings advance in lockstep
             base_id = per_st[0][k][0]
             blocks = np.stack([per_st[i][k][1]
                                for i in range(len(self.stations))])
-            emitted += self._pool_ingest_block(base_id, blocks)
+            masks = [per_st[i][k][2] for i in range(len(self.stations))]
+            emitted += self._pool_ingest_block(base_id, blocks, masks)
         wall = time.perf_counter() - t0
         for i, st in enumerate(self.stations):
             st.stats.chunks += 1
@@ -832,19 +1014,25 @@ class StreamingDetector:
             st.stats.chunk_wall_s.append(wall)  # stations share the dispatch
         return emitted
 
-    def _pool_ingest_block(self, base_id: int, blocks: np.ndarray) -> int:
+    def _pool_ingest_block(self, base_id: int, blocks: np.ndarray,
+                           masks: list | None = None) -> int:
+        if masks is None:
+            masks = [None] * len(self.stations)
+        masks = [st._flag_duplicates(base_id, blocks[i], masks[i])
+                 for i, st in enumerate(self.stations)]
         if self.pstate is None:
             coeffs = np.asarray(pool_block_coeffs(jnp.asarray(blocks),
                                                   self.cfg.fingerprint))
             for i, st in enumerate(self.stations):
-                st.mad.update(coeffs[i])
-                st.pending.append((base_id, blocks[i], None))
+                st.mad.update(coeffs[i] if masks[i] is None
+                              else coeffs[i][masks[i]])
+                st.pending.append((base_id, blocks[i], None, masks[i]))
             warm = self.scfg.stats_warmup_blocks
             if warm > 0 and len(self.stations[0].pending) >= warm:
                 self._freeze_pool()
                 return self._drain_pool()
             return 0
-        return self._pool_process(base_id, blocks)
+        return self._pool_process(base_id, blocks, masks=masks)
 
     def _freeze_pool(self) -> None:
         for st in self.stations:
@@ -859,59 +1047,94 @@ class StreamingDetector:
             base_id = pend[0][k][0]
             blocks = np.stack([pend[i][k][1]
                                for i in range(len(self.stations))])
-            emitted += self._pool_process(base_id, blocks)
+            masks = [pend[i][k][3] for i in range(len(self.stations))]
+            emitted += self._pool_process(base_id, blocks, masks=masks)
         for st in self.stations:
             st.pending = []
         return emitted
 
     def _pool_process(self, base_id: int, blocks: np.ndarray,
-                      valid: np.ndarray | None = None) -> int:
+                      masks: list | None = None, primed: bool = True,
+                      n_adv: int | None = None) -> int:
+        """One lockstep block through the vmapped pool step.
+
+        ``masks``: per-station gap masks (None entries = clean); a flush
+        tail passes the shared tail mask per station with
+        ``primed=False`` and the consumed id advance ``n_adv``.
+        """
         fcfg, lcfg = self.cfg.fingerprint, self.cfg.lsh
         window = self.scfg.window_fingerprints
+        sat = self.scfg.saturation_limit
+        dup = self.scfg.dup_sig_tables
         n = self.scfg.block_fingerprints
-        vmask = (np.ones(n, bool) if valid is None
-                 else np.asarray(valid, bool))
-        if valid is None and self._halo_ok:
+        s = len(self.stations)
+        clean = masks is None or all(m is None for m in masks)
+        if n_adv is None:
+            n_adv = n
+        if clean and self._halo_ok and n_adv == n:
             adv = blocks[:, -self.stations[0].ring.advance:]
-            self.pstate, pairs = fused_mod.pool_step_advance(
+            self.pstate, pairs, qc = fused_mod.pool_step_advance(
                 self.pstate, jnp.asarray(adv), self.mappings,
-                jnp.int32(base_id), fcfg, lcfg, window)
+                jnp.int32(base_id), fcfg, lcfg, window, sat, dup)
+            vm = np.ones((s, n), bool)
         else:
-            vm = np.broadcast_to(vmask, (len(self.stations), n))
-            self.pstate, pairs = fused_mod.pool_step_block(
+            vm = np.stack([
+                np.ones(n, bool) if (masks is None or masks[i] is None)
+                else np.asarray(masks[i], bool) for i in range(s)])
+            self.pstate, pairs, qc = fused_mod.pool_step_block(
                 self.pstate, jnp.asarray(blocks), self.mappings,
-                jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window)
-            self._halo_ok = valid is None
+                jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
+                sat, dup)
+            self._halo_ok = clean or primed
         i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
         sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
-        n_valid = int(vmask.sum())
-        return sum(
-            st._consume(base_id, n_valid, (i1[i], i2[i], sim[i], pv[i]))
-            for i, st in enumerate(self.stations))
+        qc = np.asarray(qc)
+        emitted = 0
+        for i, st in enumerate(self.stations):
+            st._absorb_qc(qc[i], n_adv - int(vm[i, :n_adv].sum()))
+            emitted += st._consume(base_id, n_adv, int(vm[i].sum()),
+                                   (i1[i], i2[i], sim[i], pv[i]))
+        return emitted
 
     def _pool_flush(self) -> int:
         """Pool counterpart of ``StationStream.flush`` (lockstep rings ⇒
-        every station tails at the same base id / valid count)."""
+        every station tails at the same base id / consumed count)."""
         emitted = 0
+        ready = 0
+        per_st = [st.ring.flush_ready() for st in self.stations]
+        for k in range(len(per_st[0])):
+            base_id = per_st[0][k][0]
+            blocks = np.stack([per_st[i][k][1]
+                               for i in range(len(self.stations))])
+            masks = [per_st[i][k][2] for i in range(len(self.stations))]
+            ready += self._pool_ingest_block(base_id, blocks, masks)
         parts = [st.ring.flush_partial() for st in self.stations]
         part = parts[0]
+        if part is not None:
+            parts = [(p[0], p[1],
+                      st._flag_duplicates(p[0], p[1], p[2],
+                                          end_id=st.ring.next_fp))
+                     for st, p in zip(self.stations, parts)]
+            part = parts[0]
         blocks = (np.stack([p[1] for p in parts])
                   if part is not None else None)
         if self.pstate is None:
             if part is not None:
-                n_valid = part[2]
                 coeffs = np.asarray(pool_block_coeffs(
                     jnp.asarray(blocks), self.cfg.fingerprint))
                 for i, st in enumerate(self.stations):
-                    st.mad.update(coeffs[i][:n_valid])
+                    st.mad.update(coeffs[i][parts[i][2]])
             if any(st.mad.filled < 2 for st in self.stations):
-                return 0
+                return ready
             self._freeze_pool()
             emitted += self._drain_pool()
+        emitted += ready
         if part is not None:
-            base_id, _, n_valid = part
-            vmask = np.arange(self.scfg.block_fingerprints) < n_valid
-            emitted += self._pool_process(base_id, blocks, valid=vmask)
+            base_id = part[0]
+            masks = [p[2] for p in parts]
+            n_adv = self.stations[0].ring.next_fp - base_id
+            emitted += self._pool_process(base_id, blocks, masks=masks,
+                                          primed=False, n_adv=n_adv)
         return emitted
 
     def flush(self) -> int:
@@ -1009,7 +1232,16 @@ class StreamingDetector:
         if self.rolling:
             stats["alerts"] = int(sum(a.shape[0] for a in self.alerts))
         stats["ingest"] = [st.stats.summary() for st in self.stations]
+        stats["quality"] = self.quality_summary()
         return detections, station_events, stats
+
+    def quality_summary(self) -> dict:
+        """Network-wide data-quality counters (summed over stations)."""
+        out: dict[str, int] = {}
+        for st in self.stations:
+            for k, v in st.quality_summary().items():
+                out[k] = out.get(k, 0) + int(v)
+        return out
 
     # -- snapshot / restore -------------------------------------------------
 
@@ -1041,6 +1273,12 @@ class StreamingDetector:
                      "window_fingerprints": self.scfg.window_fingerprints,
                      "filter_window_fingerprints":
                          self.scfg.filter_window_fingerprints,
+                     "reorder_horizon_samples":
+                         self.scfg.reorder_horizon_samples,
+                     "saturation_limit": self.scfg.saturation_limit,
+                     "dup_window_fingerprints":
+                         self.scfg.dup_window_fingerprints,
+                     "dup_sig_tables": self.scfg.dup_sig_tables,
                  }}
         if step is None:
             step = self.stations[0].stats.chunks
@@ -1064,7 +1302,13 @@ class StreamingDetector:
                 ("block_fingerprints", det.scfg.block_fingerprints),
                 ("window_fingerprints", det.scfg.window_fingerprints),
                 ("filter_window_fingerprints",
-                 det.scfg.filter_window_fingerprints)):
+                 det.scfg.filter_window_fingerprints),
+                ("reorder_horizon_samples",
+                 det.scfg.reorder_horizon_samples),
+                ("saturation_limit", det.scfg.saturation_limit),
+                ("dup_window_fingerprints",
+                 det.scfg.dup_window_fingerprints),
+                ("dup_sig_tables", det.scfg.dup_sig_tables)):
             if key in saved and int(saved[key]) != int(have):
                 raise ValueError(
                     f"snapshot was taken with {key}={saved[key]} but the "

@@ -85,14 +85,21 @@ def init_pool_state(indexes: list[IndexState], halo_samples: int,
 def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
                 wave: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array | None, fcfg: FingerprintConfig,
-                lcfg: LSHConfig, window: int) -> tuple[IndexState, Pairs]:
-    """One station's block: fingerprint → hash → expire → insert → query.
+                lcfg: LSHConfig, window: int, saturation: int = 0,
+                dup_tables: int = 0
+                ) -> tuple[IndexState, Pairs, jax.Array]:
+    """One station's block: fingerprint → hash → expire → guards →
+    insert → query.
 
     Shared by the solo and the vmapped pool entries; bit-identical to the
     unfused ``block_coeffs`` + ``stream_step`` chain (the parity test's
     contract). Signatures and bucket addresses are computed together once
     (``signatures_and_buckets``) instead of once in insert and again in
-    query.
+    query. The data-quality guards (duplicate probe, bucket-saturation
+    quarantine — ``index.guarded_step``) run inside this same traced
+    program: with the knobs at 0 they compile away and the step is the
+    pre-quality program exactly. Returns the per-step quality counters
+    ``qc = [duplicates_suppressed, saturated_lookups]`` alongside pairs.
     """
     coeffs = fp_mod.coeffs_from_waveform(wave, fcfg)
     bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
@@ -100,23 +107,21 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     sigs, buckets = lsh_mod.signatures_and_buckets(
         bits, mappings, lcfg, index.shape[1], valid=valid)
     ids = base_id + jnp.arange(n, dtype=jnp.int32)
-    n_valid = (jnp.int32(n) if valid is None
-               else valid.sum(dtype=jnp.int32))
-    if window > 0:
-        newest = base_id + n_valid
-        index = index_mod.expire(index, newest - jnp.int32(window))
-    index = index_mod.insert(index, sigs, ids, lcfg, valid=valid,
-                             buckets=buckets)
-    pairs = index_mod.query(index, sigs, ids, lcfg, buckets=buckets)
-    return index, pairs
+    return index_mod.guarded_step(index, sigs, buckets, ids, valid, lcfg,
+                                  window, saturation=saturation,
+                                  dup_tables=dup_tables)
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+_QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation", "dup_tables")
+
+
+@functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
                    donate_argnums=(0,))
 def step_advance(state: FusedState, new_samples: jax.Array,
                  mappings: jax.Array, base_id: jax.Array,
                  fcfg: FingerprintConfig, lcfg: LSHConfig,
-                 window: int = 0) -> tuple[FusedState, Pairs]:
+                 window: int = 0, saturation: int = 0, dup_tables: int = 0
+                 ) -> tuple[FusedState, Pairs, jax.Array]:
     """Steady-state fused step: device halo + new samples → pairs.
 
     ``new_samples`` is (advance,) = block_fingerprints * lag_samples; the
@@ -124,61 +129,74 @@ def step_advance(state: FusedState, new_samples: jax.Array,
     (the block tail) is written back in place.
     """
     wave = jnp.concatenate([state.halo, new_samples])
-    index, pairs = _chunk_core(state.index, state.med, state.mad, wave,
-                               mappings, base_id, None, fcfg, lcfg, window)
+    index, pairs, qc = _chunk_core(state.index, state.med, state.mad, wave,
+                                   mappings, base_id, None, fcfg, lcfg,
+                                   window, saturation, dup_tables)
     return FusedState(index=index, halo=wave[-state.halo.shape[-1]:],
-                      med=state.med, mad=state.mad), pairs
+                      med=state.med, mad=state.mad), pairs, qc
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+@functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
                    donate_argnums=(0,))
 def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
                base_id: jax.Array, valid: jax.Array,
                fcfg: FingerprintConfig, lcfg: LSHConfig,
-               window: int = 0) -> tuple[FusedState, Pairs]:
+               window: int = 0, saturation: int = 0, dup_tables: int = 0
+               ) -> tuple[FusedState, Pairs, jax.Array]:
     """Re-seeding fused step: a whole framed block + fingerprint mask.
 
-    Used for the first block after a freeze/restore and for masked flush
-    tails; also reprimes the halo so the next step can take the advance
-    path (a zero-padded tail leaves the halo dirty — the caller tracks
-    that and routes the next block through here again).
+    Used for the first block after a freeze/restore, for gap-masked
+    blocks (fingerprints whose window overlaps missing data are
+    suppressed in-dispatch), and for masked flush tails; also reprimes
+    the halo so the next step can take the advance path (a zero-padded
+    tail leaves the halo dirty — the caller tracks that and routes the
+    next block through here again; a gap-masked but fully framed block
+    leaves it primed).
     """
-    index, pairs = _chunk_core(state.index, state.med, state.mad, block,
-                               mappings, base_id, valid, fcfg, lcfg, window)
+    index, pairs, qc = _chunk_core(state.index, state.med, state.mad, block,
+                                   mappings, base_id, valid, fcfg, lcfg,
+                                   window, saturation, dup_tables)
     return FusedState(index=index, halo=block[-state.halo.shape[-1]:],
-                      med=state.med, mad=state.mad), pairs
+                      med=state.med, mad=state.mad), pairs, qc
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+@functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
                    donate_argnums=(0,))
 def pool_step_advance(state: FusedState, new_samples: jax.Array,
                       mappings: jax.Array, base_id: jax.Array,
                       fcfg: FingerprintConfig, lcfg: LSHConfig,
-                      window: int = 0) -> tuple[FusedState, Pairs]:
+                      window: int = 0, saturation: int = 0,
+                      dup_tables: int = 0
+                      ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_advance`` over a station pool: state leaves and
     ``new_samples`` carry a leading (S,) axis; ids/base advance in
     lockstep (stations ingest the same chunk cadence)."""
     wave = jnp.concatenate([state.halo, new_samples], axis=-1)
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
-                             window=window)
-    index, pairs = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, None))(
+                             window=window, saturation=saturation,
+                             dup_tables=dup_tables)
+    index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None,
+                                               None))(
         state.index, state.med, state.mad, wave, mappings, base_id, None)
     return FusedState(index=index, halo=wave[:, -state.halo.shape[-1]:],
-                      med=state.med, mad=state.mad), pairs
+                      med=state.med, mad=state.mad), pairs, qc
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window"),
+@functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
                    donate_argnums=(0,))
 def pool_step_block(state: FusedState, blocks: jax.Array,
                     mappings: jax.Array, base_id: jax.Array,
                     valid: jax.Array, fcfg: FingerprintConfig,
-                    lcfg: LSHConfig, window: int = 0
-                    ) -> tuple[FusedState, Pairs]:
+                    lcfg: LSHConfig, window: int = 0, saturation: int = 0,
+                    dup_tables: int = 0
+                    ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_block`` over a station pool (blocks (S, block_samples),
-    valid (S, block_fingerprints))."""
+    valid (S, block_fingerprints) — per-station gap masks differ when one
+    station drops out while the others keep streaming)."""
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
-                             window=window)
-    index, pairs = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
+                             window=window, saturation=saturation,
+                             dup_tables=dup_tables)
+    index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
         state.index, state.med, state.mad, blocks, mappings, base_id, valid)
     return FusedState(index=index, halo=blocks[:, -state.halo.shape[-1]:],
-                      med=state.med, mad=state.mad), pairs
+                      med=state.med, mad=state.mad), pairs, qc

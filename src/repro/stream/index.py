@@ -129,9 +129,10 @@ def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
                       inserted=state.inserted + valid.sum(dtype=jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "saturation"))
 def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
-          cfg: LSHConfig, buckets: jax.Array | None = None) -> Pairs:
+          cfg: LSHConfig, buckets: jax.Array | None = None,
+          qvalid: jax.Array | None = None, saturation: int = 0) -> Pairs:
     """Find stored partners of a signature batch → thresholded Pairs.
 
     Only partners with stored id < query id are emitted, so a batch that
@@ -139,23 +140,35 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     (including same-batch ones) per colliding table — the streaming
     equivalent of the offline rank-window emission. Returns a masked
     ``Pairs`` of static size t * N * C.
+
+    ``qvalid`` suppresses emission for flagged query rows (duplicate-
+    guarded fingerprints keep their real signatures but must not pair).
+    ``saturation`` > 0 quarantines saturated buckets from emission: hits
+    inside a bucket whose lifetime insert count (``cursor``) exceeds the
+    limit are dropped — the repeating-glitch mega-bucket fix. Both
+    default off, leaving the traced program unchanged.
     """
     t, b, c = state.shape
     n = sigs.shape[0]
     if buckets is None:
         buckets = lsh_mod.bucket_ids(sigs, b, cfg.seed)   # (N, t)
 
-    def one_table(sig_tb, ids_tb, bkt, keys):
+    def one_table(sig_tb, ids_tb, cur_tb, bkt, keys):
         occ_sig = sig_tb[bkt]                          # (N, C)
         occ_id = ids_tb[bkt]                           # (N, C)
         hit = (occ_sig == keys[:, None]) & (occ_id != INVALID) \
             & (occ_id < qids[:, None])
+        if saturation > 0:
+            hit = hit & (cur_tb[bkt] <= jnp.int32(saturation))[:, None]
+        if qvalid is not None:
+            hit = hit & qvalid[:, None]
         lo = jnp.where(hit, occ_id, INVALID)
         hi = jnp.where(hit, qids[:, None], INVALID)
         return lo, hi
 
-    lo, hi = jax.vmap(one_table, in_axes=(0, 0, 1, 1))(
-        state.sig, state.ids, buckets, sigs.astype(jnp.uint32))
+    lo, hi = jax.vmap(one_table, in_axes=(0, 0, 0, 1, 1))(
+        state.sig, state.ids, state.cursor, buckets,
+        sigs.astype(jnp.uint32))
     return finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
 
 
@@ -166,6 +179,105 @@ def expire(state: IndexState, min_id: jax.Array) -> IndexState:
     return IndexState(sig=state.sig,
                       ids=jnp.where(keep, state.ids, INVALID),
                       cursor=state.cursor, inserted=state.inserted)
+
+
+# ---------------------------------------------------------------------------
+# degenerate-similarity guards (ISSUE 4): duplicate probe + saturation
+# ---------------------------------------------------------------------------
+
+
+def duplicate_flags(state: IndexState, sigs: jax.Array, ids: jax.Array,
+                    cfg: LSHConfig, dup_tables: int,
+                    buckets: jax.Array | None = None,
+                    valid: jax.Array | None = None) -> jax.Array:
+    """(N,) bool — near-exact repeated segments, flagged *before* insert.
+
+    A fingerprint is a repeat when its per-table signatures collide with
+    resident index entries (or earlier rows of the same batch) in at
+    least ``dup_tables`` of the t tables, at id distance ≥ ``min_dt``.
+    Bit-exact duplicated data blocks collide in all t tables; repeating
+    glitches in nearly all; genuine repeating earthquakes (differing
+    noise floors) in only a few — a threshold near t separates artifact
+    from signal. Traced inline by the fused step (no extra dispatch).
+    """
+    t, b, c = state.shape
+    if buckets is None:
+        buckets = lsh_mod.bucket_ids(sigs, b, cfg.seed)
+    keys = sigs.astype(jnp.uint32)
+    far = ids[:, None] - jnp.int32(max(cfg.min_dt, 1))
+
+    def one_table(sig_tb, ids_tb, bkt, k):
+        occ_sig = sig_tb[bkt]                          # (N, C)
+        occ_id = ids_tb[bkt]
+        hit = ((occ_sig == k[:, None]) & (occ_id != INVALID)
+               & (occ_id <= far))
+        return hit.any(axis=1)                         # (N,)
+
+    resident = jax.vmap(one_table, in_axes=(0, 0, 1, 1))(
+        state.sig, state.ids, buckets, keys).sum(axis=0)    # (N,)
+    # earlier rows of this batch (they are not yet resident)
+    same = (keys[:, None, :] == keys[None, :, :]).sum(-1)   # (N, N)
+    earlier = ids[None, :] <= far
+    if valid is not None:
+        earlier = earlier & valid[None, :]
+    intra = jnp.where(earlier, same, 0).max(axis=1)
+    dup = jnp.maximum(resident, intra) >= jnp.int32(dup_tables)
+    if valid is not None:
+        dup = dup & valid
+    return dup
+
+
+def saturated_lookup_count(state: IndexState, buckets: jax.Array,
+                           saturation: int,
+                           valid: jax.Array | None = None) -> jax.Array:
+    """How many of this batch's valid (row, table) lookups landed in a
+    quarantined bucket — the saturation monitoring counter. Invalid rows
+    carry pseudo-random filler buckets and must not pollute the count."""
+    cur = jax.vmap(lambda c, b: c[b], in_axes=(0, 1))(
+        state.cursor, buckets)                         # (t, N)
+    hot = cur > jnp.int32(saturation)
+    if valid is not None:
+        hot = hot & valid[None, :]
+    return hot.sum(dtype=jnp.int32)
+
+
+def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
+                 ids: jax.Array, valid: jax.Array | None, cfg: LSHConfig,
+                 window: int, saturation: int = 0, dup_tables: int = 0
+                 ) -> tuple[IndexState, Pairs, jax.Array]:
+    """expire → duplicate guard → insert → saturation-guarded query.
+
+    The one shared insert/query tail of both streaming hot paths (fused
+    ``_chunk_core`` and the unfused ``stream_step``), so the guards are
+    bit-identical in either. Returns (state, pairs, qc) with
+    ``qc = [duplicates_suppressed, saturated_lookups]`` (both 0 when the
+    corresponding knob is off — the program then matches the unguarded
+    step exactly).
+    """
+    if window > 0:
+        # newest = one past the last valid id (prefix masks reduce to
+        # base + n_valid, the pre-quality behavior; hole-y gap masks
+        # still anchor the window to absolute stream time)
+        newest = (ids[-1] + 1 if valid is None
+                  else jnp.max(jnp.where(valid, ids + 1, ids[0])))
+        state = expire(state, newest - jnp.int32(window))
+    ins_valid, qvalid = valid, None
+    qc_dup = jnp.int32(0)
+    if dup_tables > 0:
+        n = sigs.shape[0]
+        v = jnp.ones((n,), bool) if valid is None else valid
+        dup = duplicate_flags(state, sigs, ids, cfg, dup_tables,
+                              buckets=buckets, valid=v)
+        ins_valid = v & ~dup
+        qvalid = ins_valid
+        qc_dup = dup.sum(dtype=jnp.int32)
+    state = insert(state, sigs, ids, cfg, valid=ins_valid, buckets=buckets)
+    qc_sat = (saturated_lookup_count(state, buckets, saturation,
+                                     valid=ins_valid)
+              if saturation > 0 else jnp.int32(0))
+    pairs = query(state, sigs, ids, cfg, buckets=buckets, qvalid=qvalid,
+                  saturation=saturation)
+    return state, pairs, jnp.stack([qc_dup, qc_sat])
 
 
 # ---------------------------------------------------------------------------

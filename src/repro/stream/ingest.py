@@ -57,6 +57,50 @@ class StreamConfig:
     freeze hook that closes the self-computed-stats recall gap on finite
     traces (host memory is then O(stream); use a positive warmup for
     unbounded ingestion).
+
+    Data-quality knobs (ISSUE 4; all default off = the clean-stream
+    semantics, bit-identical to the pre-quality path):
+
+    * ``reorder_horizon_samples`` — block emission is held back this many
+      samples so late/out-of-order chunks (within the horizon) can still
+      be spliced into place, duplicated chunks dropped deterministically
+      (first writer wins), and gaps healed before their block is
+      committed. 0 = emit as soon as a block completes (in-order only).
+      Gap masking itself (NaN samples / offset jumps → suppressed
+      fingerprints) is always on — it needs no knob because it is an
+      exact no-op on contiguous finite input.
+    * ``max_gap_samples`` — the largest forward offset jump accepted as a
+      genuine gap. A chunk arriving further ahead is a corrupted or
+      unit-mismatched timestamp, not telemetry loss: accepting it would
+      allocate the whole bogus span as sentinel fill (a single bad
+      header could demand gigabytes) and burn thousands of all-invalid
+      dispatches. Such chunks are rejected and counted instead
+      (``quality["rejected_chunks"]``). 0 = unbounded (trusted feeds).
+    * ``saturation_limit`` — buckets whose lifetime insert count exceeds
+      this are quarantined from pair emission inside the jitted step (the
+      paper's repeating-glitch mega-bucket fix, applied structurally).
+      Size it well above any healthy bucket's traffic over a deployment
+      window so clean data never trips it. The counter is *lifetime*
+      traffic (never decays), so on unbounded multi-week streams leave
+      this 0 unless the limit is sized for the whole deployment — a
+      window-relative counter is a ROADMAP open item. 0 = off.
+    * ``dup_window_fingerprints`` — sample-exact repeated-segment
+      detector: every fingerprint's raw sample window is hashed and
+      compared against the previous N fingerprints' hashes; an exact
+      repeat (telemetry-duplicated data block, flat-lined channel) is
+      suppressed *before* the dispatch — never inserted, never queried.
+      Repeating earthquakes are never sample-exact (independent noise),
+      so this guard has zero false positives on real signal and clean
+      bit-parity is structural, not tuned. 0 = off.
+    * ``dup_sig_tables`` — the aggressive in-dispatch variant: a
+      fingerprint whose *signature* collides with a resident (or earlier
+      same-batch) fingerprint in at least this many of the t tables at
+      distance ≥ ``min_dt`` is treated as a near-exact repeat. Strong
+      repeating earthquakes can legitimately collide in many (sometimes
+      all) tables, so this knob trades recall of the strongest repeaters
+      for glitch suppression — size it above your workload's strongest
+      legitimate repeat, or leave it 0 and let the saturation guard
+      handle glitch trains. 0 = off.
     """
 
     block_fingerprints: int = 64   # fingerprints per jitted step
@@ -69,12 +113,25 @@ class StreamConfig:
     filter_window_fingerprints: int = 0  # rolling occurrence filter window
     fused: bool = True             # single-dispatch fused hot path
     pooled: bool = True            # vmapped station pool when multi-station
+    reorder_horizon_samples: int = 0  # late-chunk splice window (0 = none)
+    max_gap_samples: int = 0       # largest offset jump gap-filled (0 = ∞)
+    saturation_limit: int = 0      # quarantine buckets past this traffic
+    dup_window_fingerprints: int = 0  # sample-exact repeat horizon
+    dup_sig_tables: int = 0        # signature matches that flag a repeat
 
     def __post_init__(self):
         if self.stats_warmup_blocks < 0:
             raise ValueError(
                 f"stats_warmup_blocks must be >= 0 (0 = freeze at flush), "
                 f"got {self.stats_warmup_blocks}")
+        if min(self.reorder_horizon_samples, self.max_gap_samples,
+               self.saturation_limit, self.dup_window_fingerprints,
+               self.dup_sig_tables) < 0:
+            raise ValueError(
+                "data-quality knobs (reorder_horizon_samples, "
+                "max_gap_samples, saturation_limit, "
+                "dup_window_fingerprints, dup_sig_tables) must be >= 0 "
+                "(0 = off)")
         if self.pooled and not self.fused:
             raise ValueError(
                 "pooled station stepping runs through the fused chunk step;"
@@ -97,51 +154,179 @@ class StreamConfig:
 
 
 class WaveformRing:
-    """Host-side sample ring for one station.
+    """Host-side sample ring for one station, gap/reorder aware.
 
     push() accepts chunks of any length and returns zero or more
     fixed-size blocks; a ``halo_samples`` tail is retained so adjacent
     blocks overlap exactly like the offline sliding windows.
+
+    Real telemetry is not contiguous, so every sample carries a validity
+    bit alongside its value:
+
+    * NaN samples in a chunk are "never arrived": stored as 0.0, marked
+      invalid.
+    * ``push(chunk, offset)`` places the chunk at an absolute sample
+      offset. A jump past the contiguous frontier opens a *gap* — the
+      missing span is sentinel-filled (0.0) and marked invalid, keeping
+      the fingerprint id grid aligned to absolute time.
+    * An offset behind the frontier is a late / out-of-order / duplicated
+      chunk. Samples still inside the un-emitted buffer are reconciled
+      deterministically: invalid positions are healed (spliced), already-
+      valid positions are dropped first-writer-wins (re-sent duplicates
+      are no-ops). Samples behind the buffer are dropped and counted.
+      ``reorder_horizon`` holds block emission back that many samples so
+      the buffer keeps a splice window open.
+
+    Emitted blocks are ``(base_fingerprint_id, block, valid_mask)`` where
+    ``valid_mask`` is None for fully-valid blocks (the clean hot path) or
+    a per-fingerprint bool mask: a fingerprint is valid iff its whole
+    analysis window holds valid samples. ``quality`` counts every
+    reconciliation decision for monitoring.
     """
 
-    def __init__(self, fcfg: FingerprintConfig, block_fingerprints: int):
+    def __init__(self, fcfg: FingerprintConfig, block_fingerprints: int,
+                 reorder_horizon: int = 0, max_gap: int = 0):
         assert block_fingerprints >= 1
+        assert reorder_horizon >= 0 and max_gap >= 0
         self.fcfg = fcfg
         self.block_fp = block_fingerprints
         self.block_samples = fcfg.block_samples(block_fingerprints)
         self.advance = block_fingerprints * fcfg.lag_samples
+        self.horizon = int(reorder_horizon)
+        self.max_gap = int(max_gap)
         self.buf = np.zeros(0, np.float32)
+        self.vbuf = np.zeros(0, bool)   # per-sample validity
+        self.start = 0            # absolute offset of buf[0]
         self.next_fp = 0          # global index of the next fingerprint
         self.samples_in = 0
+        self.quality = {
+            "gaps": 0, "gap_samples": 0, "missing_samples": 0,
+            "late_spliced_samples": 0, "late_dropped_samples": 0,
+            "duplicate_samples": 0, "rejected_chunks": 0,
+            "rejected_samples": 0,
+        }
 
-    def push(self, chunk: np.ndarray) -> list[tuple[int, np.ndarray]]:
-        """Append samples; emit ready (base_fingerprint_id, block) tuples."""
+    @property
+    def frontier(self) -> int:
+        """Absolute offset one past the last buffered sample."""
+        return self.start + self.buf.size
+
+    def push(self, chunk: np.ndarray, offset: int | None = None
+             ) -> list[tuple[int, np.ndarray, np.ndarray | None]]:
+        """Place samples at ``offset`` (default: the contiguous frontier);
+        emit ready (base_fingerprint_id, block, valid_mask) tuples."""
         chunk = np.asarray(chunk, np.float32).reshape(-1)
         self.samples_in += chunk.size
-        self.buf = np.concatenate([self.buf, chunk])
+        off = self.frontier if offset is None else int(offset)
+        if self.max_gap > 0 and off - self.frontier > self.max_gap:
+            # corrupted / unit-mismatched timestamp, not telemetry loss:
+            # gap-filling the bogus span could demand unbounded memory
+            self.quality["rejected_chunks"] += 1
+            self.quality["rejected_samples"] += chunk.size
+            return []
+        finite = np.isfinite(chunk)
+        if not finite.all():
+            chunk = np.where(finite, chunk, np.float32(0.0))
+        if off > self.frontier:          # gap: sentinel-fill to the offset
+            fill = off - self.frontier
+            self.quality["gaps"] += 1
+            self.quality["gap_samples"] += fill
+            self.buf = np.concatenate([self.buf,
+                                       np.zeros(fill, np.float32)])
+            self.vbuf = np.concatenate([self.vbuf, np.zeros(fill, bool)])
+            off = self.frontier
+        # the last emitted block's content is immutable: its tail is also
+        # the device-resident halo of the fused path, so healing those
+        # samples host-side would silently diverge from the halo already
+        # committed on device. Late data below the committed frontier is
+        # dropped (the committed region's validity mask stays authoritative).
+        committed = self.start + (self.fcfg.halo_samples
+                                  if self.next_fp > 0 else 0)
+        if off < committed:              # beyond the reorder horizon
+            cut = min(committed - off, chunk.size)
+            self.quality["late_dropped_samples"] += int(finite[:cut].sum())
+            chunk, finite = chunk[cut:], finite[cut:]
+            off = committed
+        overlap = min(self.frontier - off, chunk.size)
+        if overlap > 0:                  # splice into the buffered region
+            lo = off - self.start
+            held = self.vbuf[lo:lo + overlap]
+            heal = finite[:overlap] & ~held
+            dup = finite[:overlap] & held
+            self.buf[lo:lo + overlap][heal] = chunk[:overlap][heal]
+            held[heal] = True
+            self.quality["late_spliced_samples"] += int(heal.sum())
+            self.quality["duplicate_samples"] += int(dup.sum())
+            chunk, finite = chunk[overlap:], finite[overlap:]
+        if chunk.size:                   # in-order tail append
+            # count missing telemetry only in newly-accepted territory:
+            # NaNs in re-delivered / late-dropped spans were either never
+            # accepted or already accounted (gap fill)
+            self.quality["missing_samples"] += int((~finite).sum())
+            self.buf = np.concatenate([self.buf, chunk])
+            self.vbuf = np.concatenate([self.vbuf, finite])
         out = []
-        while self.buf.size >= self.block_samples:
-            out.append((self.next_fp, self.buf[:self.block_samples].copy()))
-            self.buf = self.buf[self.advance:]
-            self.next_fp += self.block_fp
+        while self.buf.size >= self.block_samples + self.horizon:
+            out.append(self._emit_block())
         return out
 
-    def flush_partial(self) -> tuple[int, np.ndarray, int] | None:
-        """Emit the tail as a zero-padded block with a valid-count.
+    def _fp_mask(self, v: np.ndarray) -> np.ndarray | None:
+        """Per-fingerprint validity of a framed sample-validity span
+        (None = all valid): fp i is valid iff v[i*lag : i*lag + w].all()."""
+        if v.all():
+            return None
+        w, lag = self.fcfg.window_samples, self.fcfg.lag_samples
+        csum = np.concatenate([[0], np.cumsum(~v)])
+        starts = np.arange(self.block_fp) * lag
+        return (csum[starts + w] - csum[starts]) == 0
 
-        Returns (base_fingerprint_id, block, n_valid) covering however many
-        whole fingerprints the buffer still holds, or None if fewer than
-        one. Consumes those fingerprints (the halo stays), so ingestion may
+    def _emit_block(self) -> tuple[int, np.ndarray, np.ndarray | None]:
+        item = (self.next_fp, self.buf[:self.block_samples].copy(),
+                self._fp_mask(self.vbuf[:self.block_samples]))
+        self.buf = self.buf[self.advance:]
+        self.vbuf = self.vbuf[self.advance:]
+        self.start += self.advance
+        self.next_fp += self.block_fp
+        return item
+
+    def flush_ready(self) -> list[tuple[int, np.ndarray,
+                                        np.ndarray | None]]:
+        """Emit complete blocks held back only by the reorder horizon
+        (flush boundary: late chunks for them can no longer splice)."""
+        out = []
+        while self.buf.size >= self.block_samples:
+            out.append(self._emit_block())
+        return out
+
+    def flush_partial(self) -> tuple[int, np.ndarray, np.ndarray] | None:
+        """Emit the tail as a zero-padded block with a validity mask.
+
+        Returns (base_fingerprint_id, block, valid_mask) covering however
+        many whole fingerprints the buffer still holds, or None if fewer
+        than one. The mask combines the tail cut (fingerprints whose
+        window would run past the buffered samples) with gap validity.
+        Consumes those fingerprints (the halo stays), so ingestion may
         continue afterwards — flush is a checkpoint, not a terminator.
+        Call ``flush_ready()`` first when a reorder horizon is set.
         """
         w, lag = self.fcfg.window_samples, self.fcfg.lag_samples
         if self.buf.size < w:
             return None
+        assert self.buf.size < self.block_samples, \
+            "drain flush_ready() before flush_partial()"
         n_valid = (self.buf.size - w) // lag + 1
         block = np.zeros(self.block_samples, np.float32)
         block[: self.buf.size] = self.buf
-        out = (self.next_fp, block, n_valid)
+        mask = np.arange(self.block_fp) < n_valid
+        vfull = np.zeros(self.block_samples, bool)
+        vfull[: self.buf.size] = self.vbuf
+        gap_mask = self._fp_mask(vfull)
+        if gap_mask is not None:
+            mask = mask & gap_mask
+        out = (self.next_fp, block, mask)
         self.buf = self.buf[n_valid * lag:]
+        self.vbuf = self.vbuf[n_valid * lag:]
+        self.start += n_valid * lag
         self.next_fp += n_valid
         return out
 
@@ -151,13 +336,23 @@ class WaveformRing:
 
     def snapshot(self) -> tuple[dict, dict]:
         """(arrays, json-able scalars) capturing the ring exactly."""
-        return ({"buf": self.buf.copy()},
-                {"next_fp": self.next_fp, "samples_in": self.samples_in})
+        return ({"buf": self.buf.copy(), "vbuf": self.vbuf.copy()},
+                {"next_fp": self.next_fp, "samples_in": self.samples_in,
+                 "quality": dict(self.quality)})
 
     def restore(self, arrays: dict, scalars: dict) -> None:
         self.buf = np.asarray(arrays["buf"], np.float32).reshape(-1).copy()
+        if "vbuf" in arrays:
+            self.vbuf = np.asarray(arrays["vbuf"], bool).reshape(-1).copy()
+        else:                      # pre-quality snapshot: all samples valid
+            self.vbuf = np.ones(self.buf.size, bool)
+        assert self.vbuf.size == self.buf.size
         self.next_fp = int(scalars["next_fp"])
         self.samples_in = int(scalars["samples_in"])
+        # start is not independent state: every consumption path advances
+        # it in lockstep with next_fp (both by whole fingerprints)
+        self.start = self.next_fp * self.fcfg.lag_samples
+        self.quality.update(scalars.get("quality", {}))
 
 
 class StreamingMAD:

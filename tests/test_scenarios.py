@@ -1,0 +1,345 @@
+"""Fault-injection scenario suite (ISSUE 4).
+
+Every pathology the scenario generator can inject — telemetry gaps,
+station dropouts, duplicated data blocks, repeating glitch trains,
+clock-drifted copies — runs through the quality-hardened streaming path
+(``stream_dirty_smoke_config``) and is held to two standards against the
+clean-stream golden (the same trace without the pathology, streamed
+through the same configuration):
+
+  * spurious pairs beyond the clean set stay within a pinned budget
+    (zero for sample-exact pathologies), and
+  * recall on the clean portion — pairs whose fingerprints touch no
+    injected sample — is unchanged (bit-exact with frozen statistics).
+
+The scenario substrate is shared with ``bench_stream --scenario``
+(``benchmarks.bench_stream.bench_scenario``); the glitch-train acceptance
+(≥ 10× spurious reduction vs the unguarded path, recall unchanged) is
+pinned here at the exact benchmark configuration.
+"""
+import pathlib
+import sys
+from dataclasses import replace as dataclasses_replace
+
+import numpy as np
+import pytest
+
+from repro.configs.fast_seismic import (smoke_config,
+                                        stream_dirty_smoke_config,
+                                        stream_smoke_config)
+from repro.core.synth import (ScenarioConfig, SynthConfig,
+                              make_scenario_dataset)
+from repro.stream import StreamingDetector
+
+ROOT = str(pathlib.Path(__file__).parent.parent)
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)             # the benchmarks package
+
+# the same frozen statistics the scenario benchmark uses, so the pins
+# here hold at the exact benchmark configuration
+from benchmarks.common import frozen_smoke_stats as _frozen  # noqa: E402
+
+
+def _raw_pairs(st):
+    tri = (np.concatenate(st.triplets, axis=0) if st.triplets
+           else np.zeros((0, 3), np.int64))
+    return set(zip(tri[:, 0].tolist(), tri[:, 1].tolist()))
+
+
+def _run(cfg, scfg, wf, med_mad, n_stations=1, n_chunks=10):
+    """Stream a (S, T) or (T,) trace → per-station raw pair sets + det."""
+    det = StreamingDetector(cfg, scfg, n_stations=n_stations,
+                            med_mad=med_mad)
+    wf = np.atleast_2d(np.asarray(wf, np.float32))
+    for chunk in np.array_split(wf, n_chunks, axis=1):
+        det.push(chunk if n_stations > 1 else chunk[0])
+    det.flush()
+    return [_raw_pairs(st) for st in det.stations], det
+
+
+def _clean_ids(cfg, scen, station):
+    fcfg = cfg.fingerprint
+    return set(scen.clean_fp_ids(station, fcfg.window_samples,
+                                 fcfg.lag_samples).tolist())
+
+
+def _restrict(pairs, ids):
+    return {p for p in pairs if p[0] in ids and p[1] in ids}
+
+
+def _base_synth(**over):
+    kw = dict(duration_s=600.0, n_stations=1, n_sources=2,
+              events_per_source=5, event_snr=3.0, seed=3)
+    kw.update(over)
+    return SynthConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# gaps
+# ---------------------------------------------------------------------------
+
+
+def test_gap_scenario_no_spurious_and_exact_clean_recall():
+    """Telemetry gaps: fingerprints touching missing data never pair, and
+    pairs among untouched fingerprints are bit-identical to the clean
+    golden (spurious budget: zero)."""
+    cfg, scfg = smoke_config(), stream_dirty_smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(), n_gaps=4, gap_dur_s=(2.0, 8.0), seed=7))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    (clean,), _ = _run(cfg, scfg, scen.clean.waveforms[0], med_mad)
+    (dirty,), det = _run(cfg, scfg, scen.waveforms[0], med_mad)
+    q = det.quality_summary()
+    assert q["missing_samples"] == int(scen.missing.sum())
+    assert q["suppressed_fingerprints"] > 0
+    ok = _clean_ids(cfg, scen, 0)
+    lag, w = cfg.fingerprint.lag_samples, cfg.fingerprint.window_samples
+    n_fp = cfg.fingerprint.n_fingerprints(scen.waveforms.shape[1])
+    bad = set(range(n_fp)) - ok
+    # no pair touches a gap-masked fingerprint…
+    assert not any(a in bad or b in bad for a, b in dirty)
+    # …and the clean portion is exactly the clean golden (zero spurious,
+    # recall unchanged)
+    assert dirty == _restrict(clean, ok)
+
+
+def test_station_dropout_pooled_isolation():
+    """A dropout on one station of a pooled detector masks only that
+    station: the healthy station's pair set stays bit-identical, the
+    dropped span emits nothing, and network finalize still runs."""
+    cfg, scfg = smoke_config(), stream_dirty_smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(n_stations=2),
+        dropout_stations=(1,), dropout_dur_s=90.0, seed=5))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    clean_sets, det_c = _run(cfg, scfg, scen.clean.waveforms, med_mad,
+                             n_stations=2)
+    dirty_sets, det_d = _run(cfg, scfg, scen.waveforms, med_mad,
+                             n_stations=2)
+    assert det_d.pooled                  # the vmapped pool path ran
+    assert dirty_sets[0] == clean_sets[0]
+    ok1 = _clean_ids(cfg, scen, 1)
+    n_fp = cfg.fingerprint.n_fingerprints(scen.waveforms.shape[1])
+    bad1 = set(range(n_fp)) - ok1
+    assert not any(a in bad1 or b in bad1 for a, b in dirty_sets[1])
+    assert dirty_sets[1] == _restrict(clean_sets[1], ok1)
+    d, _, stats = det_d.finalize()
+    assert stats["quality"]["suppressed_fingerprints"] > 0
+
+
+# ---------------------------------------------------------------------------
+# duplicated data blocks
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_block_guard_budget():
+    """Telemetry-duplicated blocks: the unguarded path emits spurious
+    copy-vs-original pairs; the sample-exact duplicate guard suppresses
+    the copies before insert, leaving at most a small boundary budget,
+    with the clean portion exact."""
+    cfg = smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(), n_dup_blocks=2, dup_block_dur_s=20.0,
+        dup_spacing_s=60.0, seed=2))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    (clean,), _ = _run(cfg, stream_dirty_smoke_config(),
+                       scen.clean.waveforms[0], med_mad)
+    (unguarded,), _ = _run(cfg, stream_smoke_config(), scen.waveforms[0],
+                           med_mad)
+    (guarded,), det = _run(cfg, stream_dirty_smoke_config(),
+                           scen.waveforms[0], med_mad)
+    assert len(unguarded - clean) > len(guarded - clean)
+    assert len(guarded - clean) <= 6     # boundary-window budget
+    assert det.quality_summary()["duplicate_fingerprints"] > 0
+    ok = _clean_ids(cfg, scen, 0)
+    assert _restrict(guarded, ok) == _restrict(clean, ok)
+
+
+def test_wild_offset_chunk_rejected():
+    """A corrupted / unit-mismatched timestamp (offset jump beyond
+    ``max_gap_samples``) is rejected and counted instead of gap-filling
+    an unbounded sentinel span."""
+    cfg = smoke_config()
+    scfg = stream_dirty_smoke_config()
+    scfg = dataclasses_replace(scfg, max_gap_samples=50_000)
+    ds = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(duration_s=300.0)))
+    wf = ds.clean.waveforms[0]
+    med_mad = _frozen(cfg, wf)
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    det.push(wf[:6000])
+    det.push(wf[6000:12000], offset=8_640_000_000)   # ms-vs-samples bug
+    det.push(wf[6000:12000], offset=6000)            # the real chunk
+    q = det.quality_summary()
+    assert q["rejected_chunks"] == 1
+    assert q["rejected_samples"] == 6000
+    assert det.stations[0].ring.pending_samples < 50_000
+    # the stream continues unharmed: identical to never seeing the bogus
+    # chunk at all
+    det2 = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    det2.push(wf[:6000])
+    det2.push(wf[6000:12000], offset=6000)
+    np.testing.assert_array_equal(det.stations[0].ring.buf,
+                                  det2.stations[0].ring.buf)
+
+
+def test_duplicate_chunk_redelivery_is_noop():
+    """Re-delivered chunks (double-send telemetry) change nothing: the
+    detector's output is bit-identical to single delivery and the drops
+    are counted."""
+    cfg, scfg = smoke_config(), stream_dirty_smoke_config()
+    ds = make_scenario_dataset(ScenarioConfig(base=_base_synth()))
+    wf = ds.clean.waveforms[0]
+    med_mad = _frozen(cfg, wf)
+    chunks = np.array_split(wf, 10)
+    offs = np.cumsum([0] + [c.size for c in chunks])[:-1]
+    det1 = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    det2 = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    for off, c in zip(offs, chunks):
+        det1.push(c, int(off))
+        det2.push(c, int(off))
+        det2.push(c, int(off))          # every chunk delivered twice
+    det1.flush()
+    det2.flush()
+    assert _raw_pairs(det1.stations[0]) == _raw_pairs(det2.stations[0])
+    q = det2.quality_summary()
+    assert q["duplicate_samples"] + q["late_dropped_samples"] \
+        == int(wf.size)
+
+
+# ---------------------------------------------------------------------------
+# repeating glitch trains (the benchmark acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_glitch_train_scenario_10x_reduction():
+    """Acceptance criterion: on the pinned gap + duplicate + glitch-train
+    benchmark scenario, the guards cut spurious pairs ≥ 10× vs the
+    unguarded path while clean-portion recall is unchanged."""
+    from benchmarks.bench_stream import bench_scenario
+    cfg = smoke_config()
+    scen = make_scenario_dataset(bench_scenario(600.0))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    (clean,), _ = _run(cfg, stream_dirty_smoke_config(),
+                       scen.clean.waveforms[0], med_mad)
+    (unguarded,), _ = _run(cfg, stream_smoke_config(), scen.waveforms[0],
+                           med_mad)
+    (guarded,), det = _run(cfg, stream_dirty_smoke_config(),
+                           scen.waveforms[0], med_mad)
+    spurious_u = len(unguarded - clean)
+    spurious_g = len(guarded - clean)
+    assert spurious_u >= 10              # the pathology really fires
+    assert spurious_u / max(spurious_g, 1) >= 10.0, (spurious_u, spurious_g)
+    ok = _clean_ids(cfg, scen, 0)
+    ref = _restrict(clean, ok)
+    assert len(ref) > 0
+    assert _restrict(guarded, ok) == ref  # recall unchanged, no extras
+    assert det.quality_summary()["duplicate_fingerprints"] > 0
+
+
+def test_additive_glitch_saturation_mitigation():
+    """Glitches riding on the live noise floor are not sample-exact, so
+    the duplicate guard cannot see them — the bucket-saturation
+    quarantine still cuts the spurious stream and its counter records
+    the quarantined traffic."""
+    cfg = smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(), glitch_stations=(0,), glitch_trains=4,
+        glitch_train_dur_s=40.0, glitch_replace=False, seed=1))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    (clean,), _ = _run(cfg, stream_dirty_smoke_config(),
+                       scen.clean.waveforms[0], med_mad)
+    (unguarded,), _ = _run(cfg, stream_smoke_config(), scen.waveforms[0],
+                           med_mad)
+    (guarded,), det = _run(cfg, stream_dirty_smoke_config(),
+                           scen.waveforms[0], med_mad)
+    spurious_u = len(unguarded - clean)
+    spurious_g = len(guarded - clean)
+    assert spurious_u > 0
+    assert spurious_g < spurious_u       # strictly reduced…
+    assert spurious_u / max(spurious_g, 1) >= 1.5
+    assert det.quality_summary()["saturated_lookups"] > 0
+    ok = _clean_ids(cfg, scen, 0)
+    assert _restrict(guarded, ok) == _restrict(clean, ok)
+
+
+# ---------------------------------------------------------------------------
+# clock drift
+# ---------------------------------------------------------------------------
+
+
+def test_clock_drift_network_detection_survives():
+    """A station with a few-hundred-ppm clock drift still associates into
+    network detections (drift over the trace stays within the alignment
+    tolerances)."""
+    cfg, scfg = smoke_config(), stream_dirty_smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(n_stations=3, seed=11),
+        clock_drift_stations=(2,), clock_drift_ppm=200.0, seed=4))
+    _, det = _run(cfg, scfg, scen.waveforms, None, n_stations=3)
+    detections, _, stats = det.finalize()
+    assert stats["detections"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore of the quality state
+# ---------------------------------------------------------------------------
+
+
+def test_dirty_stream_snapshot_roundtrip(tmp_path):
+    """Kill/restore mid-dirty-stream reproduces the uninterrupted run
+    exactly — including the new quality state (sample-validity ring,
+    duplicate-hash history, reconciliation + guard counters)."""
+    cfg, scfg = smoke_config(), stream_dirty_smoke_config()
+    scen = make_scenario_dataset(ScenarioConfig(
+        base=_base_synth(), n_gaps=3, n_dup_blocks=1,
+        dup_block_dur_s=20.0, dup_spacing_s=60.0,
+        glitch_stations=(0,), glitch_trains=1, glitch_train_dur_s=100.0,
+        seed=6))
+    wf = scen.waveforms[0]
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    chunks = np.array_split(wf, 12)
+
+    run = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    for c in chunks[:6]:
+        run.push(c)
+    run.snapshot(str(tmp_path), step=6)
+    restored, step = StreamingDetector.restore(str(tmp_path), cfg, scfg)
+    assert step == 6
+    for c in chunks[6:]:
+        run.push(c)
+        restored.push(c)
+    uninterrupted = StreamingDetector(cfg, scfg, n_stations=1,
+                                      med_mad=med_mad)
+    for c in chunks:
+        uninterrupted.push(c)
+    e0, p0, f0 = uninterrupted.stations[0].finalize()
+    e1, p1, f1 = run.stations[0].finalize()
+    e2, p2, f2 = restored.stations[0].finalize()
+    np.testing.assert_array_equal(np.asarray(p0.idx1), np.asarray(p2.idx1))
+    np.testing.assert_array_equal(np.asarray(p0.valid),
+                                  np.asarray(p2.valid))
+    assert f0 == f1 == f2                # incl. the quality counters
+    assert f0["quality"]["duplicate_fingerprints"] > 0
+    assert f0["quality"]["missing_samples"] > 0
+
+
+# ---------------------------------------------------------------------------
+# benchmark schema guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_bench_scenario_schema(tmp_path, monkeypatch):
+    """``bench_stream --scenario-only`` emits a schema-stable scenario
+    point meeting the acceptance numbers."""
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    from benchmarks import bench_stream
+    out = bench_stream.main(["--scenario-only"])
+    point = out["scenario"]
+    assert point["schema"] == "bench-stream-scenario/v1"
+    assert set(point) >= {"spurious_unguarded", "spurious_guarded",
+                          "spurious_reduction", "clean_portion_recall",
+                          "guarded_chunks_per_s", "quality"}
+    assert point["spurious_reduction"] >= 10.0
+    assert point["clean_portion_recall"] == 1.0

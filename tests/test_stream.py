@@ -147,13 +147,16 @@ def test_ring_blocks_are_sample_exact(rng):
     tail = ring.flush_partial()
     coeffs_off = np.asarray(F.coeffs_from_waveform(jnp.asarray(wf), fcfg))
     got = 0
-    for base, blk in blocks:
+    for base, blk, mask in blocks:
+        assert mask is None               # contiguous input: all valid
         cb = np.asarray(F.coeffs_from_waveform(jnp.asarray(blk), fcfg))
         np.testing.assert_allclose(cb, coeffs_off[base: base + 16],
                                    rtol=1e-5, atol=1e-5)
         got += cb.shape[0]
     assert tail is not None
-    base, blk, n_valid = tail
+    base, blk, mask = tail
+    n_valid = int(mask.sum())
+    assert mask[:n_valid].all()           # clean tail mask is a prefix
     cb = np.asarray(F.coeffs_from_waveform(jnp.asarray(blk), fcfg))[:n_valid]
     np.testing.assert_allclose(cb, coeffs_off[base: base + n_valid],
                                rtol=1e-5, atol=1e-5)
@@ -606,6 +609,74 @@ def test_fused_state_does_not_alias_caller_stats():
     # …and the station still exposes usable statistics
     med, mad = det.stations[0].med_mad
     np.testing.assert_array_equal(np.asarray(med), med_mad[0])
+
+
+# ---------------------------------------------------------------------------
+# data-quality path (ISSUE 4): clean bit-parity + one-dispatch invariants
+# ---------------------------------------------------------------------------
+
+
+def test_quality_path_clean_bit_parity():
+    """Acceptance criterion: with every quality feature enabled (reorder
+    horizon, saturation quarantine, sample-exact duplicate guard) but no
+    pathologies present, the emitted pair set is identical to the
+    pre-quality fused path — for given and for self-computed statistics —
+    and every quality counter stays zero."""
+    from repro.configs.fast_seismic import stream_dirty_smoke_config
+    cfg, wf, _, med_mad = _parity_setup()
+    for mm in (med_mad, None):
+        got, quality = {}, None
+        for name, scfg in (("base", stream_smoke_config()),
+                           ("quality", stream_dirty_smoke_config())):
+            det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=mm)
+            for c in np.array_split(wf, 10):
+                det.push(c)
+            got[name], fstats = _pair_set(det)
+            quality = fstats["quality"]
+        assert got["base"] == got["quality"], (
+            mm is None, sorted(got["base"] ^ got["quality"]))
+        assert len(got["base"]) > 0
+        assert all(v == 0 for v in quality.values()), quality
+
+
+def test_quality_path_single_dispatch_invariants():
+    """Acceptance criterion: the one-dispatch invariants survive the
+    quality path — ≤1 steady-state trace and zero retained bytes/chunk,
+    including across a gap-masked block mid-steady-state (masks route
+    through the already-traced ``step_block``, never re-splitting or
+    retracing the hot path)."""
+    from repro.configs.fast_seismic import stream_dirty_smoke_config
+    cfg, wf, _, med_mad = _parity_setup()
+    scfg = stream_dirty_smoke_config()
+    wf = wf.copy()
+    mid = wf.size * 3 // 4
+    wf[mid: mid + 900] = np.nan           # a gap inside the steady state
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    st = det.stations[0]
+    chunks = np.array_split(wf, 10)
+    adv_start = FU.step_advance._cache_size()
+    for c in chunks[:5]:
+        det.push(c)
+    assert st.stats.blocks >= 2
+    jax.block_until_ready(st.fstate.index.cursor)
+    adv_before = FU.step_advance._cache_size()
+    blk_before = FU.step_block._cache_size()
+    # ≤1 new steady-state trace (0 when another quality test already
+    # traced these statics in-process)
+    assert adv_before - adv_start <= 1
+    n0 = len(jax.live_arrays())
+    b0 = sum(a.nbytes for a in jax.live_arrays())
+    blocks_before = st.stats.blocks
+    for c in chunks[5:]:
+        det.push(c)
+    jax.block_until_ready(st.fstate.index.cursor)
+    assert st.stats.blocks > blocks_before
+    assert st.qc["suppressed_fingerprints"] > 0   # the gap really was masked
+    assert FU.step_advance._cache_size() == adv_before
+    assert FU.step_block._cache_size() == blk_before
+    n1 = len(jax.live_arrays())
+    b1 = sum(a.nbytes for a in jax.live_arrays())
+    assert (n1, b1) == (n0, b0), (n1 - n0, b1 - b0)
 
 
 # ---------------------------------------------------------------------------

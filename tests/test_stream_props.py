@@ -12,6 +12,14 @@ Properties (ISSUE 2):
     ``cap`` newest same-signature residents;
   * ``expire(min_id)`` leaves no reachable id < min_id;
   * chunked ingestion is sample-exact for random chunk lengths.
+
+Data-quality properties (ISSUE 4):
+  * gap-masked ingest is sample-exact vs contiguous ingest on the non-gap
+    region, and the emitted fingerprint masks are exactly the windows
+    that touch a missing sample;
+  * reorder reconciliation is permutation-invariant within the horizon,
+    and re-pushing an already-delivered chunk is always a no-op;
+  * quarantined (saturated) buckets never emit pairs.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -127,12 +135,15 @@ def check_chunked_ingest_sample_exact(seed: int):
         blocks.extend(ring.push(wf[pos: pos + step]))
         pos += step
     lag, bs = fcfg.lag_samples, fcfg.block_samples(block_fp)
-    for base, blk in blocks:
+    for base, blk, mask in blocks:
+        assert mask is None
         np.testing.assert_array_equal(blk, wf[base * lag: base * lag + bs])
     tail = ring.flush_partial()
     got = len(blocks) * block_fp
     if tail is not None:
-        base, blk, n_valid = tail
+        base, blk, mask = tail
+        n_valid = int(mask.sum())
+        assert mask[:n_valid].all()      # clean tail mask is a prefix
         # the tail block carries every remaining buffered sample, padded
         extent = min(bs, n_samples - base * lag)
         np.testing.assert_array_equal(
@@ -143,6 +154,147 @@ def check_chunked_ingest_sample_exact(seed: int):
         assert (n_valid - 1) * lag + w <= extent
         got += n_valid
     assert got == fcfg.n_fingerprints(n_samples), (seed, got)
+
+
+def _ring_fcfg():
+    return F.FingerprintConfig(img_freq=8, img_time=16, img_hop=4, top_k=16,
+                               mad_sample_rate=1.0)
+
+
+def _drain(ring):
+    """All remaining (base, block, mask) items: held-back blocks + tail."""
+    out = ring.flush_ready()
+    tail = ring.flush_partial()
+    if tail is not None:
+        out.append(tail)
+    return out
+
+
+def _blocks_equal(a, b):
+    assert len(a) == len(b), (len(a), len(b))
+    for (b1, blk1, m1), (b2, blk2, m2) in zip(a, b):
+        assert b1 == b2
+        np.testing.assert_array_equal(blk1, blk2)
+        if m1 is None or m2 is None:
+            assert (m1 is None or np.asarray(m1).all())
+            assert (m2 is None or np.asarray(m2).all())
+        else:
+            np.testing.assert_array_equal(m1, m2)
+
+
+def check_gap_masked_ingest_sample_exact(seed: int):
+    """NaN holes: non-gap samples are bit-exact vs the clean run, and the
+    fingerprint masks are exactly the windows touching a hole."""
+    rng = np.random.default_rng(seed)
+    fcfg = _ring_fcfg()
+    block_fp = int(rng.integers(2, 9))
+    n_samples = int(rng.integers(6_000, 16_000))
+    wf = rng.standard_normal(n_samples).astype(np.float32)
+    missing = np.zeros(n_samples, bool)
+    for _ in range(int(rng.integers(1, 4))):
+        dur = int(rng.integers(50, 900))
+        i0 = int(rng.integers(0, max(1, n_samples - dur)))
+        missing[i0:i0 + dur] = True
+    dirty = wf.copy()
+    dirty[missing] = np.nan
+
+    clean_ring = WaveformRing(fcfg, block_fingerprints=block_fp)
+    dirty_ring = WaveformRing(fcfg, block_fingerprints=block_fp)
+    clean_blocks, dirty_blocks = [], []
+    pos = 0
+    while pos < n_samples:
+        step = int(rng.integers(1, 2_500))
+        clean_blocks.extend(clean_ring.push(wf[pos: pos + step]))
+        dirty_blocks.extend(dirty_ring.push(dirty[pos: pos + step]))
+        pos += step
+    clean_blocks += _drain(clean_ring)
+    dirty_blocks += _drain(dirty_ring)
+    assert dirty_ring.quality["missing_samples"] == int(missing.sum())
+
+    w, lag = fcfg.window_samples, fcfg.lag_samples
+    assert len(clean_blocks) == len(dirty_blocks)
+    for (cb, cblk, cm), (db, dblk, dm) in zip(clean_blocks, dirty_blocks):
+        assert cb == db
+        ok = ~missing[cb * lag: cb * lag + dblk.size]
+        ok = np.pad(ok, (0, dblk.size - ok.size))
+        # non-gap samples are bit-exact; gap samples are sentinel zeros
+        np.testing.assert_array_equal(dblk[ok], cblk[ok])
+        assert (dblk[~ok] == 0).all()
+        # fingerprint mask == "window touches no missing sample"
+        cmask = (np.ones(block_fp, bool) if cm is None
+                 else np.asarray(cm, bool))
+        dmask = (np.ones(block_fp, bool) if dm is None
+                 else np.asarray(dm, bool))
+        for i in range(block_fp):
+            if not cmask[i]:              # tail-cut fp: same in both runs
+                assert not dmask[i]
+                continue
+            touches = missing[(cb + i) * lag: (cb + i) * lag + w].any()
+            assert dmask[i] == (not touches), (seed, cb, i)
+
+
+def check_reorder_permutation_invariant(seed: int):
+    """Chunks delivered in any order within the horizon (including exact
+    re-deliveries) yield the identical block/mask stream."""
+    rng = np.random.default_rng(seed)
+    fcfg = _ring_fcfg()
+    block_fp = int(rng.integers(2, 7))
+    chunk_len = int(rng.integers(200, 1_200))
+    n_chunks = int(rng.integers(8, 20))
+    swap_span = 2                         # max displacement in chunks
+    horizon = (swap_span + 1) * chunk_len
+    wf = rng.standard_normal(n_chunks * chunk_len).astype(np.float32)
+    chunks = [(i * chunk_len, wf[i * chunk_len:(i + 1) * chunk_len])
+              for i in range(n_chunks)]
+    order = np.arange(n_chunks)
+    for i in range(0, n_chunks - swap_span, swap_span + 1):
+        seg = order[i:i + swap_span + 1]
+        rng.shuffle(seg)                  # local shuffle ≤ horizon
+
+    ref = WaveformRing(fcfg, block_fp, reorder_horizon=horizon)
+    got = WaveformRing(fcfg, block_fp, reorder_horizon=horizon)
+    ref_blocks, got_blocks = [], []
+    for off, c in chunks:
+        ref_blocks.extend(ref.push(c, off))
+    for k in order:
+        got_blocks.extend(got.push(chunks[k][1], chunks[k][0]))
+        if rng.random() < 0.3:            # duplicate re-delivery: a no-op
+            got_blocks.extend(got.push(chunks[k][1], chunks[k][0]))
+    ref_blocks += _drain(ref)
+    got_blocks += _drain(got)
+    _blocks_equal(ref_blocks, got_blocks)
+    assert got.quality["late_dropped_samples"] == 0
+    # in-order delivery through the horizon matches a no-horizon ring too
+    plain = WaveformRing(fcfg, block_fp)
+    plain_blocks = []
+    for off, c in chunks:
+        plain_blocks.extend(plain.push(c, off))
+    plain_blocks += _drain(plain)
+    _blocks_equal(ref_blocks, plain_blocks)
+
+
+def check_quarantined_bucket_never_emits(seed: int, saturation: int):
+    """Once a bucket's lifetime traffic passes the saturation limit, no
+    further pair is emitted from it; below the limit pairs flow."""
+    rng = np.random.default_rng(seed)
+    cfg = LSHConfig(n_tables=4, n_funcs=4, n_matches=1, bucket_cap=8,
+                    min_dt=1, occurrence_frac=0.0)
+    state = SI.init_index(cfg, StreamIndexConfig(n_buckets=64,
+                                                 bucket_cap=8))
+    sig = jnp.asarray(rng.integers(0, 2**32, (1, 4), dtype=np.uint32))
+    n_ins = saturation + int(rng.integers(1, 6))
+    for i in range(n_ins):
+        state = SI.insert(state, sig, jnp.asarray([i], jnp.int32), cfg)
+        pairs = SI.query(state, sig, jnp.asarray([i], jnp.int32), cfg,
+                         saturation=saturation)
+        emitted = int(np.asarray(pairs.valid).sum())
+        if i + 1 > saturation:            # bucket traffic past the limit
+            assert emitted == 0, (seed, i)
+        elif i > 0:
+            assert emitted > 0, (seed, i)
+    # an unguarded query still sees the residents (quarantine ≠ eviction)
+    pairs = SI.query(state, sig, jnp.asarray([n_ins], jnp.int32), cfg)
+    assert int(np.asarray(pairs.valid).sum()) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +326,24 @@ def test_chunked_ingest_hyp(seed):
     check_chunked_ingest_sample_exact(seed)
 
 
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_gap_masked_ingest_hyp(seed):
+    check_gap_masked_ingest_sample_exact(seed)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SET
+def test_reorder_permutation_hyp(seed):
+    check_reorder_permutation_invariant(seed)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+@SET
+def test_quarantine_hyp(seed, saturation):
+    check_quarantined_bucket_never_emits(seed, saturation)
+
+
 # ---------------------------------------------------------------------------
 # deterministic seed sweep (always runs)
 # ---------------------------------------------------------------------------
@@ -198,3 +368,18 @@ def test_expire_unreachable(seed):
 @pytest.mark.parametrize("seed", range(4))
 def test_chunked_ingest_sample_exact(seed):
     check_chunked_ingest_sample_exact(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_gap_masked_ingest_sample_exact(seed):
+    check_gap_masked_ingest_sample_exact(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_reorder_permutation_invariant(seed):
+    check_reorder_permutation_invariant(seed)
+
+
+@pytest.mark.parametrize("seed,saturation", [(0, 2), (1, 5), (2, 8), (3, 3)])
+def test_quarantined_bucket_never_emits(seed, saturation):
+    check_quarantined_bucket_never_emits(seed, saturation)
