@@ -22,12 +22,22 @@ throughput), at three granularities:
   (``jax.live_arrays`` delta — 0 means every steady-state buffer is a
   donated in-place reuse) and peak host MB (tracemalloc), from a
   separate per-point pass.
+* **offline_replay** (ISSUE 5): the unified batch driver —
+  ``detect_events`` replaying an archive through the pooled streaming
+  core, one fused dispatch per block for all stations — against a
+  benchmark-local copy of the legacy host loop (per-station
+  fingerprint → signatures → sort-based search → filter chains with
+  blocking syncs between stages; the code this PR deleted from
+  ``core/detect.py``), at 1/4/8 stations. Records batch blocks/sec and
+  the legacy-vs-unified speedup (acceptance: unified ≥ legacy at 4
+  stations on the quick run).
 
-Schema-stable output: ``BENCH_e2e.json`` with ``schema: "bench-e2e/v1"``,
+Schema-stable output: ``BENCH_e2e.json`` with ``schema: "bench-e2e/v2"``,
 a config hash, per-point chunks/sec, and the headline ratios
 (fused speedup vs the unfused chain; 4-/8-station pool wall vs
-1-station). ``--quick`` shrinks the stream for the tier-1-safe smoke
-invocation (``make bench-smoke`` / the slow-marked pytest guard).
+1-station; unified-batch speedup vs the legacy loop). ``--quick``
+shrinks the stream for the tier-1-safe smoke invocation
+(``make bench-smoke`` / the slow-marked pytest guard).
 """
 from __future__ import annotations
 
@@ -44,17 +54,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line, frozen_smoke_stats
-from repro.configs.fast_seismic import (latency_config,
+from repro.configs.fast_seismic import (latency_config, smoke_config,
                                         stream_latency_smoke_config)
+from repro.core import align as A
 from repro.core import fingerprint as F
 from repro.core import lsh as L
+from repro.core.detect import detect_events, replay_config
 from repro.core.synth import SynthConfig, make_dataset
 from repro.stream import engine as E
 from repro.stream import fused as FU
 from repro.stream import index as SI
 from repro.stream.engine import StreamingDetector
 
-SCHEMA = "bench-e2e/v1"
+SCHEMA = "bench-e2e/v2"
 
 # (stations, fused) points; (1, False) is the unfused e2e reference
 SPECS = [(1, True), (1, False), (4, True), (8, True)]
@@ -163,6 +175,96 @@ def step_points(cfg, scfg, repeats: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# offline replay: the unified batch driver vs the legacy host loop
+# ---------------------------------------------------------------------------
+
+
+def _legacy_detect_loop(waveforms, cfg):
+    """Benchmark-local copy of the pre-unification ``detect_events`` host
+    loop (per-station stage chains, four blocking syncs per station) —
+    the baseline the unified replay driver is measured against."""
+    fcfg, lcfg, acfg = cfg.fingerprint, cfg.lsh, cfg.align
+    station_events = []
+    for st in range(waveforms.shape[0]):
+        x = jnp.asarray(waveforms[st])
+        bits, _ = F.fingerprints_from_waveform(
+            x, fcfg, key=jax.random.PRNGKey(fcfg.stft_len + st))
+        jax.block_until_ready(bits)
+        mp = L.hash_mappings(fcfg.fp_dim, lcfg)
+        sigs = L.signatures(bits, mp, lcfg)
+        jax.block_until_ready(sigs)
+        pairs = L.candidate_pairs(sigs, lcfg)
+        if lcfg.occurrence_frac > 0:
+            pairs, _ = L.occurrence_filter(pairs, bits.shape[0],
+                                           lcfg.occurrence_frac)
+        jax.block_until_ready(pairs.valid)
+        merged = A.merge_channels(
+            [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
+            acfg.channel_threshold)
+        events = A.cluster_station(merged, acfg)
+        jax.block_until_ready(events.valid)
+        station_events.append(events)
+    det = A.associate_network(station_events, acfg, waveforms.shape[0])
+    jax.block_until_ready(det["valid"])
+    return det
+
+
+def offline_replay_points(duration_s: float, repeats: int = 3) -> dict:
+    """Batch archive reprocessing: unified core vs legacy loop, 1/4/8
+    stations. Both drivers run the identical detection semantics (the
+    unified pair set is golden-pinned bit-exact against the legacy one),
+    so the comparison is pure orchestration cost: one pooled fused
+    dispatch per block vs per-station per-stage dispatches + syncs."""
+    cfg = smoke_config()
+    scfg = replay_config(cfg.lsh, block_fingerprints=64, n_buckets=2048)
+    ds = make_dataset(SynthConfig(duration_s=duration_s, n_stations=8,
+                                  n_sources=2, events_per_source=4,
+                                  event_snr=3.0, seed=7))
+    n_fp = cfg.fingerprint.n_fingerprints(ds.waveforms.shape[1])
+    n_blocks = -(-n_fp // scfg.block_fingerprints)
+    points = []
+    for s in (1, 4, 8):
+        wf = ds.waveforms[:s]
+
+        def unified():
+            return detect_events(wf, cfg, scfg=scfg)
+
+        def legacy():
+            return _legacy_detect_loop(wf, cfg)
+
+        for fn in (unified, legacy):    # compile both before timing
+            fn()
+        t_uni = float(np.median([_wall(unified) for _ in range(repeats)]))
+        t_leg = float(np.median([_wall(legacy) for _ in range(repeats)]))
+        point = {
+            "stations": s,
+            "fingerprints": n_fp,
+            "blocks": n_blocks,
+            "unified_wall_ms": round(t_uni * 1e3, 2),
+            "unified_blocks_per_s": round(n_blocks / max(t_uni, 1e-9), 2),
+            "legacy_wall_ms": round(t_leg * 1e3, 2),
+            "speedup_vs_legacy": round(t_leg / max(t_uni, 1e-9), 3),
+        }
+        csv_line(f"e2e.offline_replay_s{s}", t_uni * 1e6,
+                 f"legacy={t_leg * 1e6:.0f}us "
+                 f"speedup={point['speedup_vs_legacy']}x")
+        points.append(point)
+    return {
+        "duration_s": duration_s,
+        "block_fingerprints": scfg.block_fingerprints,
+        "points": points,
+        "speedup_vs_legacy_4st": next(
+            p["speedup_vs_legacy"] for p in points if p["stations"] == 4),
+    }
+
+
+def _wall(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
 # end-to-end detector throughput + allocation behaviour
 # ---------------------------------------------------------------------------
 
@@ -187,15 +289,23 @@ def interleaved_walls(cfg, scfg, ds, med_mad, n_chunks: int,
 
 def memory_point(cfg, scfg, ds, med_mad, n_stations: int, fused: bool,
                  n_chunks: int, warmup: int) -> dict:
-    """Retained-bytes + host-peak pass for one point (untimed)."""
+    """Retained-bytes + host-peak pass for one point (untimed).
+
+    ``gc.collect()`` before each live-array snapshot: buffers abandoned
+    by *earlier* benchmark phases (e.g. the offline-replay drivers) must
+    not be collected mid-measurement and show up as a phantom negative
+    delta on this point."""
+    import gc
     det = _detector(cfg, scfg, n_stations, fused, med_mad)
     chunks = np.array_split(ds.waveforms[:n_stations], n_chunks, axis=1)
     tracemalloc.start()
     for c in chunks[:warmup]:
         det.push(c)
+    gc.collect()
     live0 = _live_bytes()
     for c in chunks[warmup:]:
         det.push(c)
+    gc.collect()
     live_delta = _live_bytes() - live0
     _, host_peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
@@ -231,6 +341,7 @@ def main(argv=None):
     warmup = max(4, n_chunks // 10)
 
     step = step_points(cfg, scfg, repeats)
+    replay = offline_replay_points(duration)
     walls = interleaved_walls(cfg, scfg, ds, med_mad, n_chunks, warmup)
     points = []
     for k in SPECS:
@@ -258,6 +369,8 @@ def main(argv=None):
             walls[(4, True)] / walls[(1, True)], 3),
         "pool_wall_x_8st_vs_1st": round(
             walls[(8, True)] / walls[(1, True)], 3),
+        "offline_replay_speedup_vs_legacy_4st":
+            replay["speedup_vs_legacy_4st"],
     }
     out = {
         "schema": SCHEMA,
@@ -267,6 +380,7 @@ def main(argv=None):
         "duration_s": duration,
         "step": step,
         "points": points,
+        "offline_replay": replay,
         "ratios": ratios,
     }
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
@@ -277,7 +391,8 @@ def main(argv=None):
     print(f"# fused vs unfused chain: "
           f"{ratios['fused_speedup_vs_unfused_chain']}x; "
           f"8-station pool wall: {ratios['pool_wall_x_8st_vs_1st']}x "
-          f"1-station")
+          f"1-station; offline replay vs legacy loop @4st: "
+          f"{replay['speedup_vs_legacy_4st']}x")
     return out
 
 

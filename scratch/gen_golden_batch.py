@@ -1,0 +1,100 @@
+"""Generate tests/golden/batch_detect.json (legacy detect_events pin).
+
+The unified batch driver (PR 5: ``detect_events`` as a replay over the
+streaming core) must reproduce the *legacy* host-orchestrated per-station
+loop bit-exactly on the seed synthetic dataset. The legacy chain itself
+was deleted in that PR, so this generator carries a verbatim copy of it:
+fingerprint → signatures → sort-based candidate search → §6.5 occurrence
+filter → channel merge → diagonal clustering, per station, then network
+association. Regenerating the golden therefore never needs the old code
+back — run this script and commit the JSON.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AlignConfig, DetectConfig, FingerprintConfig,
+                        LSHConfig, SynthConfig, make_dataset)
+from repro.core import align as align_mod
+from repro.core import fingerprint as fp_mod
+from repro.core import lsh as lsh_mod
+from repro.core.detect import recall_against_truth
+
+SYNTH = dict(duration_s=420.0, n_stations=3, n_sources=2,
+             events_per_source=4, repeating_noise_stations=(0,),
+             event_snr=3.0, seed=3)
+
+
+def golden_cfg() -> DetectConfig:
+    """The tests/test_detect_e2e.py configuration (pin target)."""
+    fcfg = FingerprintConfig(img_time=32, img_hop=4, top_k=200,
+                             mad_sample_rate=1.0)
+    lcfg = LSHConfig(n_tables=100, n_funcs=4, n_matches=2, bucket_cap=8,
+                     min_dt=fcfg.overlap_fingerprints, occurrence_frac=0.05)
+    acfg = AlignConfig(channel_threshold=3, min_cluster_sim=4,
+                       min_cluster_size=1, min_stations=2,
+                       onset_tol=int(10 * fcfg.fs / fcfg.lag_samples))
+    return DetectConfig(fingerprint=fcfg, lsh=lcfg, align=acfg)
+
+
+def legacy_detect_events(waveforms, cfg):
+    """Verbatim copy of the pre-PR-5 ``detect_events`` station loop."""
+    n_stations = waveforms.shape[0]
+    stats, station_events, station_pairs = {}, [], []
+    fcfg, lcfg, acfg = cfg.fingerprint, cfg.lsh, cfg.align
+    for st in range(n_stations):
+        x = jnp.asarray(waveforms[st])
+        bits, _ = fp_mod.fingerprints_from_waveform(
+            x, fcfg, key=jax.random.PRNGKey(fcfg.stft_len + st))
+        mp = lsh_mod.hash_mappings(fcfg.fp_dim, lcfg)
+        sigs = lsh_mod.signatures(bits, mp, lcfg)
+        pairs = lsh_mod.candidate_pairs(sigs, lcfg)
+        if lcfg.occurrence_frac > 0:
+            pairs, excluded = lsh_mod.occurrence_filter(
+                pairs, bits.shape[0], lcfg.occurrence_frac)
+            stats[f"station{st}_excluded"] = int(excluded.sum())
+        stats[f"station{st}_pairs"] = int(pairs.count())
+        stats[f"station{st}_fingerprints"] = int(bits.shape[0])
+        merged = align_mod.merge_channels(
+            [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
+            acfg.channel_threshold)
+        events = align_mod.cluster_station(merged, acfg)
+        stats[f"station{st}_events"] = int(events.count())
+        station_events.append(events)
+        station_pairs.append(pairs)
+    detections = align_mod.associate_network(station_events, acfg, n_stations)
+    stats["detections"] = int(detections["valid"].sum())
+    return detections, station_events, station_pairs, stats
+
+
+def main():
+    cfg = golden_cfg()
+    ds = make_dataset(SynthConfig(**SYNTH))
+    _, events, pairs, stats = legacy_detect_events(ds.waveforms, cfg)
+    rec = recall_against_truth({}, events, ds, cfg.fingerprint)
+    per_station = []
+    for p in pairs:
+        v = np.asarray(p.valid)
+        tri = sorted(zip(np.asarray(p.idx1)[v].tolist(),
+                         np.asarray(p.idx2)[v].tolist(),
+                         np.asarray(p.sim)[v].tolist()))
+        per_station.append([list(t) for t in tri])
+    out = {
+        "synth": SYNTH,
+        "station_pairs": per_station,
+        "stats": stats,
+        "recall": rec,
+    }
+    print({k: v for k, v in stats.items()})
+    print("recall", rec)
+    p = pathlib.Path("tests/golden/batch_detect.json")
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(out, indent=1))
+    print("wrote", p)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,20 +63,29 @@ def stream_config() -> StreamConfig:
     # reorder horizon absorbs out-of-order packet delivery, offset jumps
     # beyond one hour are rejected as corrupt timestamps rather than
     # gap-filled, and the sample-exact duplicate guard looks one day back
-    # (telemetry repeats arrive within hours). The bucket-saturation
-    # quarantine stays OFF here: its counter is *lifetime* insert
-    # traffic, which any bucket on an unbounded multi-week stream
-    # eventually exceeds — enable it per deployment window, or wait for
-    # the window-relative decaying counter (ROADMAP open item).
+    # (telemetry repeats arrive within hours).
+    # The bucket-saturation quarantine is ON for unbounded streams now
+    # (ISSUE 5): with a sliding window its traffic counter halves every
+    # window inside the traced expire, so it tracks recent pressure —
+    # average bucket traffic per 3-day window is ~130k/16384 ≈ 8 inserts,
+    # and 200 sits ~25× above it while a repeating glitch hammers one
+    # bucket thousands of times per day. The in-dispatch §6.5 occurrence
+    # limiter caps per-fingerprint partners at 1% of the filter window
+    # (the paper's occurrence fraction applied to a day), with the
+    # partner-count ring sized to the 3-day detection window; the host
+    # rolling filter stays on as the exact §6.5 reference.
     return StreamConfig(block_fingerprints=256,
                         index=StreamIndexConfig(n_buckets=16384,
-                                                bucket_cap=8),
+                                                bucket_cap=8,
+                                                occ_slots=3 * day),
                         stats_warmup_blocks=2, reservoir_rows=4096,
                         window_fingerprints=3 * day,
                         filter_window_fingerprints=day,
                         reorder_horizon_samples=6000,
                         max_gap_samples=360_000,
-                        dup_window_fingerprints=day)
+                        dup_window_fingerprints=day,
+                        saturation_limit=200,
+                        occ_limit=day // 100)
 
 
 def stream_smoke_config() -> StreamConfig:
@@ -127,14 +136,30 @@ def stream_dirty_smoke_config() -> StreamConfig:
     the strongest legitimate repeating events can collide in up to all 20
     tables on some seeds, so the signature-level duplicate guard is a
     per-deployment knob rather than a default (see ``StreamConfig``).
+
+    ``occ_limit=30`` is the in-dispatch §6.5 occurrence limiter (ISSUE
+    5). Its counter is the raw partner-collision count (table×slot
+    signature matches at id distance ≥ ``min_dt`` — the §6.3
+    lookups-per-query skew signal): the densest legitimate repeater on
+    the parity-pinned smoke traces accumulates ≤ 25 collisions over a
+    whole trace (measured per station across the test seeds), while the
+    fingerprints of an *additive* glitch train — pulses riding the live
+    noise floor, invisible to the sample-exact duplicate guard — collide
+    with their ring-resident siblings in most tables at once and land at
+    60–100+. 30 splits the regimes: clean bit-parity is pinned, and the
+    glitch-train spurious stream drops ≥ 10× (vs ~2–3× from the
+    saturation quarantine alone). The partner-count ring covers the
+    longest smoke trace so counts never recycle mid-test.
     """
     return StreamConfig(block_fingerprints=64,
                         index=StreamIndexConfig(n_buckets=2048,
-                                                bucket_cap=8),
+                                                bucket_cap=8,
+                                                occ_slots=4096),
                         stats_warmup_blocks=2, reservoir_rows=1024,
                         reorder_horizon_samples=3000,
                         saturation_limit=10,
-                        dup_window_fingerprints=512)
+                        dup_window_fingerprints=512,
+                        occ_limit=30)
 
 
 def stream_bounded_smoke_config() -> StreamConfig:

@@ -186,18 +186,33 @@ def _param_struct(cfg: ModelConfig):
         functools.partial(init_params, jax.random.PRNGKey(0), cfg))
 
 
-def lower_detect_cell(shape_name: str, mesh, use_shard_map: bool = True):
+def lower_detect_cell(shape_name: str, mesh, use_shard_map: bool = True,
+                      occ_limit: int = 0):
+    """Lower the fixed-shape detection cell (now a wrapper over the shared
+    streaming core) with production shardings. The per-chunk in-trace
+    index is sized like the paper-scale streaming config; ``occ_limit``
+    > 0 lowers the cell with the in-dispatch §6.5 occurrence limiter on,
+    so its cost shows up in the dry-run HLO/memory stats before anyone
+    pays for a TPU."""
     from repro.configs import fast_seismic as fs
     from repro.core.detect import detect_step, detect_step_sharded
+    from repro.stream.index import StreamIndexConfig
     dcfg = fs.config()
     specs = fs.input_specs(shape_name)
+    n_chunk_fp = dcfg.fingerprint.n_fingerprints(
+        specs["waveforms"].shape[1])
+    icfg = StreamIndexConfig(
+        n_buckets=16384, bucket_cap=dcfg.lsh.bucket_cap,
+        occ_slots=n_chunk_fp if occ_limit > 0 else 0)
+    knobs = dict(icfg=icfg, occ_limit=occ_limit)
     all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
     wf_sh = NamedSharding(mesh, P(all_axes, None))
     stat_sh = NamedSharding(mesh, P())
     if use_shard_map:
-        step = functools.partial(detect_step_sharded, cfg=dcfg, mesh=mesh)
+        step = functools.partial(detect_step_sharded, cfg=dcfg, mesh=mesh,
+                                 **knobs)
     else:  # SPMD-partitioner baseline (kept for §Perf comparison)
-        step = jax.vmap(functools.partial(detect_step, cfg=dcfg),
+        step = jax.vmap(functools.partial(detect_step, cfg=dcfg, **knobs),
                         in_axes=(0, None, None))
     with mesh:
         jitted = jax.jit(step, in_shardings=(wf_sh, stat_sh, stat_sh))

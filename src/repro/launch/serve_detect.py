@@ -31,6 +31,12 @@ Restartable service flags:
   ``--filter-window-fp N``  rolling occurrence-filter window: candidate
                           pairs are retired per closed window, bounding
                           host pair state for unbounded ingestion.
+  ``--occ-limit N``       in-dispatch §6.5 occurrence limiter: cap raw
+                          partner collisions per fingerprint inside the
+                          traced ingest step (suppresses additive glitch
+                          trains; the host rolling filter remains the
+                          exact reference). Sizes its ring to the
+                          sliding window (or the corpus when unwindowed).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
@@ -236,14 +242,25 @@ def main(argv=None):
                     help="sliding detection window (fingerprints; 0 = off)")
     ap.add_argument("--filter-window-fp", type=int, default=0,
                     help="rolling occurrence-filter window (0 = finalize)")
+    ap.add_argument("--occ-limit", type=int, default=0,
+                    help="in-dispatch §6.5 partner-collision cap (0 = off)")
     args = ap.parse_args(argv)
 
     cfg, scfg = smoke_config(), stream_smoke_config()
-    if args.window_fp or args.filter_window_fp:
+    if args.window_fp or args.filter_window_fp or args.occ_limit:
         import dataclasses
+        icfg = scfg.index
+        if args.occ_limit:
+            # ring spans everything a pair can reach back over: the
+            # sliding window when set, else the whole ingested corpus
+            n_fp = int(args.duration_s * cfg.fingerprint.fs
+                       / cfg.fingerprint.lag_samples) + 1
+            icfg = dataclasses.replace(
+                icfg, occ_slots=args.window_fp or n_fp)
         scfg = dataclasses.replace(
             scfg, window_fingerprints=args.window_fp,
-            filter_window_fingerprints=args.filter_window_fp)
+            filter_window_fingerprints=args.filter_window_fp,
+            occ_limit=args.occ_limit, index=icfg)
     ds = make_dataset(SynthConfig(duration_s=args.duration_s,
                                   n_stations=args.stations,
                                   n_sources=2, events_per_source=5,

@@ -27,8 +27,8 @@ an unbounded stream:
              chain above as **one** jitted step over a donated
              ``FusedState`` pytree, plus the vmapped station pool.
 
-Hot path anatomy — the one-dispatch invariant
----------------------------------------------
+Hot path anatomy — the one-dispatch invariant, one core two drivers
+-------------------------------------------------------------------
 
 Steady state (statistics frozen, no flush pending) must stay a *single*
 device dispatch per block, per detector. The traced program is::
@@ -38,9 +38,14 @@ device dispatch per block, per detector. The traced program is::
     coeffs = haar2d(spectral_images(stft(wave)))  # fingerprint chain
     bits   = topk_binarize((coeffs - med) / mad)  # §5.2 binarization
     sig,bk = signatures_and_buckets(bits)       # Min-Max fold + addressing
-    index  = insert(expire(index), sig, bk)     # sliding-window index
+    index  = insert(expire(index), sig, bk)     # sliding window + decay
     pairs  = query(index, sig, bk)              # id-ordered emission
-    return FusedState{index', wave[-halo:], med, mad}, pairs
+    pairs  = occurrence_limit(index, pairs)     # in-dispatch §6.5 limiter
+    return FusedState{index', wave[-halo:], med, mad}, pairs, qc
+
+(the expire/guards/insert/query/limit tail is ``index.guarded_step``; the
+duplicate probe and saturation quarantine run inside it, and with every
+knob at 0 the whole tail compiles down to the unguarded program exactly).
 
 Every ``FusedState`` leaf is **donated**: chunk N+1 overwrites chunk N's
 buffers in place (zero steady-state HBM allocation), and the halo — the
@@ -49,6 +54,18 @@ station detectors stack the state on a leading S axis and run the same
 program under ``vmap`` (``pool_step_advance``): S stations, one dispatch.
 Signature fold + bucket addressing are computed once and shared by insert
 and query (and fuse into the Pallas Min-Max kernel epilogue on TPU).
+
+**Batch = replay.** This is the repo's ONLY detection core (ISSUE 5):
+the offline pipeline, ``core.detect.detect_events``, is a thin batch
+driver that stacks an archive's stations and drives whole-trace blocks
+through ``pool_step_block`` — the legacy host-orchestrated per-station
+fingerprint→signatures→search→filter chain is deleted, its output
+golden-pinned bit-exact against the replay
+(``tests/golden/batch_detect.json``). Every guard below is therefore
+available to archive reprocessing through the same ``StreamConfig``
+knobs, and any future guard or kernel lands in one place and serves
+both drivers. ``detect_step`` (the dry-run cell) wraps the same
+``guarded_step`` tail over a fresh in-trace index.
 
 Future PRs must not re-split this step: anything added to the per-block
 path (new filters, extra statistics) belongs *inside* the traced program
@@ -85,10 +102,28 @@ extra dispatch:
   *before* the dispatch — structurally zero false positives on clean
   data (continuous noise never repeats bit-exactly).
 * **bucket-saturation quarantine** (``saturation_limit``, in-dispatch):
-  buckets whose lifetime insert traffic exceeds the limit stop emitting
-  pairs — the paper's repeating-glitch mega-bucket fix. The signature-
-  level ``dup_sig_tables`` guard is the aggressive per-deployment
-  variant (strong legitimate repeaters can collide in all tables).
+  buckets whose insert-traffic counter exceeds the limit stop emitting
+  pairs — the paper's repeating-glitch mega-bucket fix. With a sliding
+  window the counter is *window-relative*: it halves once per window
+  inside the traced ``expire`` (``IndexState.traffic`` — separate from
+  the monotonic ring ``cursor``), so quarantined buckets recover once a
+  glitching channel is repaired and the guard is safe on unbounded
+  multi-month streams. The signature-level ``dup_sig_tables`` guard is
+  the aggressive per-deployment variant (strong legitimate repeaters can
+  collide in all tables).
+* **in-dispatch §6.5 occurrence limiter** (``occ_limit``, ISSUE 5): raw
+  partner collisions — (table, slot) signature matches at id distance ≥
+  ``min_dt``, the §6.3 lookups-per-query skew signal — are accumulated
+  per fingerprint in an id-keyed ring (``IndexState.occ``, slots
+  recycled as the window slides), and pairs touching a fingerprint past
+  the limit are dropped inside the same traced program. This is what
+  suppresses *additive* (non-sample-exact) glitch trains ≥10× — they
+  ride the live noise floor, so the duplicate guard cannot see them and
+  the saturation quarantine alone only managed ~2×. The host-side
+  ``occurrence_filter`` (one shared invocation,
+  ``engine.host_occurrence_filter``, used by finalize, the rolling
+  filter, and the batch replay driver) remains the bit-exact §6.5
+  reference/fallback.
 
 With every knob at its default (off) — and on clean data even with the
 knobs on — the traced program and the emitted pair set are bit-identical
@@ -119,6 +154,7 @@ from repro.stream.engine import (RollingPairFilter,  # noqa: F401
                                  StationStream, StreamingDetector,
                                  StreamStats, block_coeffs, ingest_chunks,
                                  events_from_rows, events_to_rows,
+                                 host_occurrence_filter,
                                  merge_boundary_rows, pairs_from_triplets,
                                  pool_block_coeffs, stream_step)
 from repro.stream.fused import (FusedState, init_pool_state,  # noqa: F401

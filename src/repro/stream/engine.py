@@ -86,12 +86,14 @@ def pool_block_coeffs(blocks: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window",
-                                             "saturation", "dup_tables"),
+                                             "saturation", "dup_tables",
+                                             "occ_limit"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
-                window: int = 0, saturation: int = 0, dup_tables: int = 0
+                window: int = 0, saturation: int = 0, dup_tables: int = 0,
+                occ_limit: int = 0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One fixed-shape streaming step: binarize → sign → expire → guards →
     insert → query. (The *unfused* half of the PR-1/2 chain — kept as the
@@ -117,7 +119,8 @@ def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
     ids = base_id + jnp.arange(sigs.shape[0], dtype=jnp.int32)
     return index_mod.guarded_step(state, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
-                                  dup_tables=dup_tables)
+                                  dup_tables=dup_tables,
+                                  occ_limit=occ_limit)
 
 
 def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
@@ -203,6 +206,38 @@ def merge_boundary_rows(rows: np.ndarray, acfg: AlignConfig) -> np.ndarray:
         else:
             out.append(r)
     return np.stack(out, axis=0)
+
+
+def host_occurrence_filter(pairs: Pairs, n_fp: int, lcfg: LSHConfig, *,
+                           base: int = 0, limit: int | None = None
+                           ) -> tuple[Pairs, jax.Array]:
+    """The host-side §6.5 occurrence filter over an accumulated pair set.
+
+    The one shared invocation behind every host-side call site — the
+    parity-mode ``finalize``, the rolling per-window filter, and the
+    batch replay driver (``core.detect.detect_events``) — kept as the
+    bit-exact reference/fallback for the in-dispatch occurrence limiter
+    (``index.occurrence_limit_pairs``). ``base`` rebases ids into a
+    static [0, n_fp) span first (the rolling filter's window-local id
+    space) and restores the original ids on the way out; ``limit``
+    overrides the ``frac * n_fp`` occurrence cap when the partition whose
+    fraction is meant differs from the id span. Returns
+    (filtered pairs, excluded-fingerprint mask over the rebased span).
+    """
+    v = pairs.valid
+    local = pairs if base == 0 else Pairs(
+        idx1=jnp.where(v, pairs.idx1 - base, INVALID),
+        idx2=jnp.where(v, pairs.idx2 - base, INVALID),
+        sim=pairs.sim, valid=v)
+    filt, excluded = lsh_mod.occurrence_filter(
+        local, n_fp, lcfg.occurrence_frac, limit=limit)
+    if base == 0:
+        return filt, excluded
+    keep = filt.valid
+    return Pairs(idx1=jnp.where(keep, pairs.idx1, INVALID),
+                 idx2=jnp.where(keep, pairs.idx2, INVALID),
+                 sim=jnp.where(keep, pairs.sim, 0),
+                 valid=keep), excluded
 
 
 class RollingPairFilter:
@@ -324,19 +359,10 @@ class RollingPairFilter:
         lcfg, acfg = self.cfg.lsh, self.cfg.align
         pairs = pairs_from_triplets(tri, self.pad_to)
         if lcfg.occurrence_frac > 0:
-            base = self.w_start - self.lookback
-            v = pairs.valid
-            local = Pairs(
-                idx1=jnp.where(v, pairs.idx1 - base, INVALID),
-                idx2=jnp.where(v, pairs.idx2 - base, INVALID),
-                sim=pairs.sim, valid=v)
-            filt, _ = lsh_mod.occurrence_filter(
-                local, self.lookback + self.window, lcfg.occurrence_frac,
+            pairs, _ = host_occurrence_filter(
+                pairs, self.lookback + self.window, lcfg,
+                base=self.w_start - self.lookback,
                 limit=max(1, int(lcfg.occurrence_frac * self.window)))
-            keep = filt.valid
-            pairs = Pairs(idx1=jnp.where(keep, pairs.idx1, INVALID),
-                          idx2=jnp.where(keep, pairs.idx2, INVALID),
-                          sim=jnp.where(keep, pairs.sim, 0), valid=keep)
         self.pairs_kept += int(pairs.count())
         merged = align_mod.merge_channels(
             [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
@@ -436,7 +462,7 @@ class StationStream:
         # flag — so it is a superset of duplicate_fingerprints; the
         # gap-specific volume is ring.quality's gap/missing counters.
         self.qc = {"duplicate_fingerprints": 0, "saturated_lookups": 0,
-                   "suppressed_fingerprints": 0}
+                   "suppressed_fingerprints": 0, "limited_pairs": 0}
         # sample-exact repeated-segment detector state (window hashes of
         # the last dup_window_fingerprints fingerprints)
         self.dup_window = scfg.dup_window_fingerprints
@@ -617,6 +643,7 @@ class StationStream:
         qc = np.asarray(qc).reshape(-1)
         self.qc["duplicate_fingerprints"] += int(qc[0])
         self.qc["saturated_lookups"] += int(qc[1])
+        self.qc["limited_pairs"] += int(qc[2])
         # n_masked covers host-side suppression (gap overlap + sample-
         # exact dup flags); qc[0] adds the in-dispatch dup_sig_tables
         # suppressions so the superset invariant holds either way
@@ -639,6 +666,7 @@ class StationStream:
         window = self.scfg.window_fingerprints
         sat = self.scfg.saturation_limit
         dup = self.scfg.dup_sig_tables
+        occ = self.scfg.occ_limit
         n = self.scfg.block_fingerprints
         vmask = (np.ones(n, bool) if valid is None
                  else np.asarray(valid, bool))
@@ -649,12 +677,12 @@ class StationStream:
                 adv = np.asarray(block, np.float32)[-self.ring.advance:]
                 self.fstate, pairs, qc = fused_mod.step_advance(
                     self.fstate, jnp.asarray(adv), self.mappings,
-                    jnp.int32(base_id), fcfg, lcfg, window, sat, dup)
+                    jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ)
             else:
                 self.fstate, pairs, qc = fused_mod.step_block(
                     self.fstate, jnp.asarray(block), self.mappings,
                     jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
-                    window, sat, dup)
+                    window, sat, dup, occ)
                 # a zero-padded tail leaves the device halo dirty and the
                 # next block must re-seed through step_block; a fully
                 # framed (gap-masked) block primes it like a clean one
@@ -666,7 +694,7 @@ class StationStream:
             self._state, pairs, qc = stream_step(
                 self._state, coeffs, med, mad, self.mappings,
                 jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg, window,
-                sat, dup)
+                sat, dup, occ)
         self._absorb_qc(qc, n_adv - int(vmask[:n_adv].sum()))
         return self._consume(
             base_id, n_adv, int(vmask.sum()),
@@ -776,8 +804,7 @@ class StationStream:
         pairs = self.accumulated_pairs()
         fstats = {"fingerprints": n_fp, "quality": self.quality_summary()}
         if lcfg.occurrence_frac > 0 and n_fp > 0:
-            pairs, excluded = lsh_mod.occurrence_filter(
-                pairs, n_fp, lcfg.occurrence_frac)
+            pairs, excluded = host_occurrence_filter(pairs, n_fp, lcfg)
             fstats["excluded_fingerprints"] = int(excluded.sum())
         merged = align_mod.merge_channels(
             [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
@@ -798,6 +825,9 @@ class StationStream:
             "index/ids": np.asarray(jax.device_get(state.ids)),
             "index/cursor": np.asarray(jax.device_get(state.cursor)),
             "index/inserted": np.asarray(jax.device_get(state.inserted)),
+            "index/traffic": np.asarray(jax.device_get(state.traffic)),
+            "index/occ": np.asarray(jax.device_get(state.occ)),
+            "index/epoch": np.asarray(jax.device_get(state.epoch)),
         }
         ring_a, ring_s = self.ring.snapshot()
         arrays["ring/buf"] = ring_a["buf"]
@@ -852,13 +882,31 @@ class StationStream:
         return arrays, extra
 
     def restore_state(self, arrays: dict, extra: dict) -> None:
+        init = index_mod.init_index(self.cfg.lsh, self.scfg.index)
         restored = IndexState(
             sig=jnp.asarray(arrays["index/sig"], jnp.uint32),
             ids=jnp.asarray(arrays["index/ids"], jnp.int32),
             cursor=jnp.asarray(arrays["index/cursor"], jnp.int32),
-            inserted=jnp.asarray(arrays["index/inserted"], jnp.int32))
-        t, b, c = index_mod.init_index(self.cfg.lsh, self.scfg.index).shape
-        assert restored.shape == (t, b, c), (restored.shape, (t, b, c))
+            inserted=jnp.asarray(arrays["index/inserted"], jnp.int32),
+            # pre-limiter snapshots lack the guard counters: the cursor
+            # restores the lifetime traffic those snapshots ran under,
+            # and the epoch is re-derived from the processed frontier —
+            # an epoch of 0 would make the first windowed expire
+            # right-shift the counter by the whole elapsed epoch span
+            # and release every quarantined bucket at once
+            traffic=jnp.asarray(arrays.get("index/traffic",
+                                           arrays["index/cursor"]),
+                                jnp.int32),
+            occ=jnp.asarray(arrays["index/occ"], jnp.int32)
+            if "index/occ" in arrays else init.occ,
+            epoch=jnp.asarray(arrays["index/epoch"], jnp.int32)
+            if "index/epoch" in arrays else jnp.asarray(
+                max(0, int(extra["processed_fp"])
+                    - self.scfg.window_fingerprints)
+                // max(self.scfg.window_fingerprints, 1), jnp.int32))
+        assert restored.shape == init.shape, (restored.shape, init.shape)
+        assert restored.occ.shape == init.occ.shape, \
+            (restored.occ.shape, init.occ.shape)
         self._state = restored
         self.fstate = None
         self._halo_ok = False
@@ -1066,6 +1114,7 @@ class StreamingDetector:
         window = self.scfg.window_fingerprints
         sat = self.scfg.saturation_limit
         dup = self.scfg.dup_sig_tables
+        occ = self.scfg.occ_limit
         n = self.scfg.block_fingerprints
         s = len(self.stations)
         clean = masks is None or all(m is None for m in masks)
@@ -1075,7 +1124,7 @@ class StreamingDetector:
             adv = blocks[:, -self.stations[0].ring.advance:]
             self.pstate, pairs, qc = fused_mod.pool_step_advance(
                 self.pstate, jnp.asarray(adv), self.mappings,
-                jnp.int32(base_id), fcfg, lcfg, window, sat, dup)
+                jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ)
             vm = np.ones((s, n), bool)
         else:
             vm = np.stack([
@@ -1084,7 +1133,7 @@ class StreamingDetector:
             self.pstate, pairs, qc = fused_mod.pool_step_block(
                 self.pstate, jnp.asarray(blocks), self.mappings,
                 jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
-                sat, dup)
+                sat, dup, occ)
             self._halo_ok = clean or primed
         i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
         sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
@@ -1279,6 +1328,7 @@ class StreamingDetector:
                      "dup_window_fingerprints":
                          self.scfg.dup_window_fingerprints,
                      "dup_sig_tables": self.scfg.dup_sig_tables,
+                     "occ_limit": self.scfg.occ_limit,
                  }}
         if step is None:
             step = self.stations[0].stats.chunks
@@ -1308,7 +1358,8 @@ class StreamingDetector:
                 ("saturation_limit", det.scfg.saturation_limit),
                 ("dup_window_fingerprints",
                  det.scfg.dup_window_fingerprints),
-                ("dup_sig_tables", det.scfg.dup_sig_tables)):
+                ("dup_sig_tables", det.scfg.dup_sig_tables),
+                ("occ_limit", det.scfg.occ_limit)):
             if key in saved and int(saved[key]) != int(have):
                 raise ValueError(
                     f"snapshot was taken with {key}={saved[key]} but the "

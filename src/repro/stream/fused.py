@@ -29,6 +29,12 @@ sequential single-station engines each paying their own dispatch. When a
 fingerprint-sharded mesh is available the pool axis is the natural
 candidate for ``shard_map``; on a single device the vmap alone already
 amortizes dispatch + pipeline overheads across stations.
+
+``pool_step_block`` is also the **batch** entry (ISSUE 5, one core two
+drivers): ``core.detect.detect_events`` replays archive traces through
+it block by block — whole framed blocks with a tail mask, no ring state
+needed — so offline reprocessing and the live service run the identical
+guarded program.
 """
 from __future__ import annotations
 
@@ -86,7 +92,7 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
                 wave: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array | None, fcfg: FingerprintConfig,
                 lcfg: LSHConfig, window: int, saturation: int = 0,
-                dup_tables: int = 0
+                dup_tables: int = 0, occ_limit: int = 0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One station's block: fingerprint → hash → expire → guards →
     insert → query.
@@ -96,10 +102,12 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     contract). Signatures and bucket addresses are computed together once
     (``signatures_and_buckets``) instead of once in insert and again in
     query. The data-quality guards (duplicate probe, bucket-saturation
-    quarantine — ``index.guarded_step``) run inside this same traced
-    program: with the knobs at 0 they compile away and the step is the
-    pre-quality program exactly. Returns the per-step quality counters
-    ``qc = [duplicates_suppressed, saturated_lookups]`` alongside pairs.
+    quarantine, in-dispatch §6.5 occurrence limiter —
+    ``index.guarded_step``) run inside this same traced program: with the
+    knobs at 0 they compile away and the step is the pre-quality program
+    exactly. Returns the per-step quality counters ``qc =
+    [duplicates_suppressed, saturated_lookups, limited_pairs]`` alongside
+    pairs.
     """
     coeffs = fp_mod.coeffs_from_waveform(wave, fcfg)
     bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
@@ -109,10 +117,12 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     ids = base_id + jnp.arange(n, dtype=jnp.int32)
     return index_mod.guarded_step(index, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
-                                  dup_tables=dup_tables)
+                                  dup_tables=dup_tables,
+                                  occ_limit=occ_limit)
 
 
-_QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation", "dup_tables")
+_QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation",
+                    "dup_tables", "occ_limit")
 
 
 @functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
@@ -120,7 +130,8 @@ _QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation", "dup_tables")
 def step_advance(state: FusedState, new_samples: jax.Array,
                  mappings: jax.Array, base_id: jax.Array,
                  fcfg: FingerprintConfig, lcfg: LSHConfig,
-                 window: int = 0, saturation: int = 0, dup_tables: int = 0
+                 window: int = 0, saturation: int = 0, dup_tables: int = 0,
+                 occ_limit: int = 0
                  ) -> tuple[FusedState, Pairs, jax.Array]:
     """Steady-state fused step: device halo + new samples → pairs.
 
@@ -131,7 +142,8 @@ def step_advance(state: FusedState, new_samples: jax.Array,
     wave = jnp.concatenate([state.halo, new_samples])
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, wave,
                                    mappings, base_id, None, fcfg, lcfg,
-                                   window, saturation, dup_tables)
+                                   window, saturation, dup_tables,
+                                   occ_limit)
     return FusedState(index=index, halo=wave[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -141,7 +153,8 @@ def step_advance(state: FusedState, new_samples: jax.Array,
 def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
                base_id: jax.Array, valid: jax.Array,
                fcfg: FingerprintConfig, lcfg: LSHConfig,
-               window: int = 0, saturation: int = 0, dup_tables: int = 0
+               window: int = 0, saturation: int = 0, dup_tables: int = 0,
+               occ_limit: int = 0
                ) -> tuple[FusedState, Pairs, jax.Array]:
     """Re-seeding fused step: a whole framed block + fingerprint mask.
 
@@ -155,7 +168,8 @@ def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
     """
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, block,
                                    mappings, base_id, valid, fcfg, lcfg,
-                                   window, saturation, dup_tables)
+                                   window, saturation, dup_tables,
+                                   occ_limit)
     return FusedState(index=index, halo=block[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -166,7 +180,7 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
                       mappings: jax.Array, base_id: jax.Array,
                       fcfg: FingerprintConfig, lcfg: LSHConfig,
                       window: int = 0, saturation: int = 0,
-                      dup_tables: int = 0
+                      dup_tables: int = 0, occ_limit: int = 0
                       ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_advance`` over a station pool: state leaves and
     ``new_samples`` carry a leading (S,) axis; ids/base advance in
@@ -174,7 +188,7 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
     wave = jnp.concatenate([state.halo, new_samples], axis=-1)
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
-                             dup_tables=dup_tables)
+                             dup_tables=dup_tables, occ_limit=occ_limit)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None,
                                                None))(
         state.index, state.med, state.mad, wave, mappings, base_id, None)
@@ -188,14 +202,14 @@ def pool_step_block(state: FusedState, blocks: jax.Array,
                     mappings: jax.Array, base_id: jax.Array,
                     valid: jax.Array, fcfg: FingerprintConfig,
                     lcfg: LSHConfig, window: int = 0, saturation: int = 0,
-                    dup_tables: int = 0
+                    dup_tables: int = 0, occ_limit: int = 0
                     ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_block`` over a station pool (blocks (S, block_samples),
     valid (S, block_fingerprints) — per-station gap masks differ when one
     station drops out while the others keep streaming)."""
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
-                             dup_tables=dup_tables)
+                             dup_tables=dup_tables, occ_limit=occ_limit)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
         state.index, state.med, state.mad, blocks, mappings, base_id, valid)
     return FusedState(index=index, halo=blocks[:, -state.halo.shape[-1]:],

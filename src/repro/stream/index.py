@@ -42,14 +42,18 @@ class StreamIndexConfig:
 
     n_buckets: int = 4096     # buckets per table (power of two)
     bucket_cap: int = 8       # slots per bucket (ring, oldest evicted)
+    occ_slots: int = 0        # per-fingerprint partner-count ring (ISSUE 5:
+                              # the in-dispatch §6.5 limiter; 0 = no ring)
 
     def __post_init__(self):
         assert self.n_buckets & (self.n_buckets - 1) == 0, \
             f"n_buckets must be a power of two, got {self.n_buckets}"
+        assert self.occ_slots >= 0, self.occ_slots
 
     def state_bytes(self, n_tables: int) -> int:
         slots = n_tables * self.n_buckets * self.bucket_cap
-        return slots * (4 + 4) + n_tables * self.n_buckets * 4
+        return (slots * (4 + 4) + 2 * n_tables * self.n_buckets * 4
+                + max(self.occ_slots, 1) * 4)
 
 
 @jax.tree_util.register_dataclass
@@ -59,6 +63,13 @@ class IndexState:
     ids: jax.Array      # (t, B, C) int32, INVALID where empty
     cursor: jax.Array   # (t, B) int32 monotonic ring cursor
     inserted: jax.Array  # () int32 total rows ever inserted
+    traffic: jax.Array  # (t, B) int32 bucket insert traffic; unlike
+                        # ``cursor`` (the ring write position, which must
+                        # stay monotonic) it DECAYS under a sliding window
+                        # so the saturation quarantine is window-relative
+    occ: jax.Array      # (L,) int32 per-fingerprint emitted-partner counts
+                        # (ring keyed by id % L; L = occ_slots or 1)
+    epoch: jax.Array    # () int32 last traffic-decay epoch (expire)
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -72,6 +83,9 @@ def init_index(lcfg: LSHConfig, icfg: StreamIndexConfig) -> IndexState:
         ids=jnp.full((t, b, c), INVALID, jnp.int32),
         cursor=jnp.zeros((t, b), jnp.int32),
         inserted=jnp.zeros((), jnp.int32),
+        traffic=jnp.zeros((t, b), jnp.int32),
+        occ=jnp.zeros((max(icfg.occ_slots, 1),), jnp.int32),
+        epoch=jnp.zeros((), jnp.int32),
     )
 
 
@@ -80,8 +94,8 @@ def init_index(lcfg: LSHConfig, icfg: StreamIndexConfig) -> IndexState:
 _bucket_ids = lsh_mod.bucket_ids
 
 
-def _insert_one_table(sig_tb, ids_tb, cursor_tb, buckets, keys, new_ids,
-                      valid):
+def _insert_one_table(sig_tb, ids_tb, cursor_tb, traffic_tb, buckets, keys,
+                      new_ids, valid):
     """Scatter one batch into one table's (B, C) bucket arrays."""
     b, c = sig_tb.shape
     n = buckets.shape[0]
@@ -98,10 +112,12 @@ def _insert_one_table(sig_tb, ids_tb, cursor_tb, buckets, keys, new_ids,
     new_sig = sig_tb.reshape(-1).at[slot].set(k_s, mode="drop").reshape(b, c)
     new_ids_tb = ids_tb.reshape(-1).at[slot].set(id_s, mode="drop") \
         .reshape(b, c)
-    # advance cursors by the full run length (ring continues past drops)
+    # advance cursors by the full run length (ring continues past drops);
+    # the traffic counter advances identically but may later decay
     adds = valid.astype(jnp.int32)
     new_cursor = cursor_tb.at[buckets].add(adds, mode="drop")
-    return new_sig, new_ids_tb, new_cursor
+    new_traffic = traffic_tb.at[buckets].add(adds, mode="drop")
+    return new_sig, new_ids_tb, new_cursor, new_traffic
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
@@ -121,12 +137,13 @@ def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
         valid = jnp.ones((n,), bool)
     if buckets is None:
         buckets = lsh_mod.bucket_ids(sigs, b, cfg.seed)   # (N, t)
-    new_sig, new_ids, new_cursor = jax.vmap(
-        _insert_one_table, in_axes=(0, 0, 0, 1, 1, None, None))(
-        state.sig, state.ids, state.cursor, buckets,
+    new_sig, new_ids, new_cursor, new_traffic = jax.vmap(
+        _insert_one_table, in_axes=(0, 0, 0, 0, 1, 1, None, None))(
+        state.sig, state.ids, state.cursor, state.traffic, buckets,
         sigs.astype(jnp.uint32), ids, valid)
     return IndexState(sig=new_sig, ids=new_ids, cursor=new_cursor,
-                      inserted=state.inserted + valid.sum(dtype=jnp.int32))
+                      inserted=state.inserted + valid.sum(dtype=jnp.int32),
+                      traffic=new_traffic, occ=state.occ, epoch=state.epoch)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "saturation"))
@@ -144,9 +161,11 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     ``qvalid`` suppresses emission for flagged query rows (duplicate-
     guarded fingerprints keep their real signatures but must not pair).
     ``saturation`` > 0 quarantines saturated buckets from emission: hits
-    inside a bucket whose lifetime insert count (``cursor``) exceeds the
-    limit are dropped — the repeating-glitch mega-bucket fix. Both
-    default off, leaving the traced program unchanged.
+    inside a bucket whose insert-traffic counter exceeds the limit are
+    dropped — the repeating-glitch mega-bucket fix. The counter is
+    ``state.traffic``, which a sliding window decays (see ``expire``), so
+    quarantined buckets recover once the offending channel is repaired.
+    Both default off, leaving the traced program unchanged.
     """
     t, b, c = state.shape
     n = sigs.shape[0]
@@ -167,18 +186,36 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
         return lo, hi
 
     lo, hi = jax.vmap(one_table, in_axes=(0, 0, 0, 1, 1))(
-        state.sig, state.ids, state.cursor, buckets,
+        state.sig, state.ids, state.traffic, buckets,
         sigs.astype(jnp.uint32))
     return finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
 
 
-@jax.jit
-def expire(state: IndexState, min_id: jax.Array) -> IndexState:
-    """Sliding detection window: drop entries with id < min_id."""
+@functools.partial(jax.jit, static_argnames=("half_life",))
+def expire(state: IndexState, min_id: jax.Array,
+           half_life: int = 0) -> IndexState:
+    """Sliding detection window: drop entries with id < min_id.
+
+    ``half_life`` > 0 additionally makes the bucket-saturation traffic
+    counter *window-relative*: every time ``min_id`` crosses a half-life
+    boundary the counter is halved (a right shift per crossed epoch), so
+    ``traffic`` approximates recent-window insert pressure instead of
+    lifetime totals and quarantined buckets recover once a glitching
+    channel is repaired. 0 keeps the lifetime counter (and the exact
+    pre-decay traced program).
+    """
     keep = state.ids >= jnp.int32(min_id)
+    traffic, epoch = state.traffic, state.epoch
+    if half_life > 0:
+        new_epoch = jnp.maximum(jnp.asarray(min_id, jnp.int32), 0) \
+            // jnp.int32(half_life)
+        shift = jnp.clip(new_epoch - epoch, 0, 31)
+        traffic = traffic >> shift          # halve once per crossed epoch
+        epoch = new_epoch
     return IndexState(sig=state.sig,
                       ids=jnp.where(keep, state.ids, INVALID),
-                      cursor=state.cursor, inserted=state.inserted)
+                      cursor=state.cursor, inserted=state.inserted,
+                      traffic=traffic, occ=state.occ, epoch=epoch)
 
 
 # ---------------------------------------------------------------------------
@@ -234,33 +271,108 @@ def saturated_lookup_count(state: IndexState, buckets: jax.Array,
     quarantined bucket — the saturation monitoring counter. Invalid rows
     carry pseudo-random filler buckets and must not pollute the count."""
     cur = jax.vmap(lambda c, b: c[b], in_axes=(0, 1))(
-        state.cursor, buckets)                         # (t, N)
+        state.traffic, buckets)                        # (t, N)
     hot = cur > jnp.int32(saturation)
     if valid is not None:
         hot = hot & valid[None, :]
     return hot.sum(dtype=jnp.int32)
 
 
+def occurrence_limit_pairs(state: IndexState, sigs: jax.Array,
+                           buckets: jax.Array, ids: jax.Array,
+                           qvalid: jax.Array | None, cfg: LSHConfig,
+                           pairs: Pairs, limit: int
+                           ) -> tuple[IndexState, Pairs, jax.Array]:
+    """In-dispatch §6.5 occurrence limiter (ISSUE 5 tentpole).
+
+    Counts every raw partner collision — a (table, slot) signature match
+    at id distance ≥ ``min_dt``, the §6.3 lookups-per-query skew signal,
+    *before* any ring-cap / threshold / quarantine attenuation — against
+    both endpoints' per-fingerprint counters in the ``occ`` ring (keyed
+    by id % L; slots recycle as the window slides, so counts are
+    window-relative like the host filter's per-partition fractions).
+    Pairs touching a fingerprint whose accumulated count exceeds
+    ``limit`` are then dropped *inside the already-traced program*. A
+    repeating glitch train collides with its ring-resident siblings in
+    nearly every table, so its fingerprints blow past the limit within
+    their first block and the train's pairs — including additive,
+    non-sample-exact trains the duplicate guard cannot see — die
+    in-dispatch; a legitimate repeater's lifetime total stays near the
+    sum of its pair similarities, far below a sanely sized limit, so
+    clean data is bit-identical with the limiter on or off (pinned).
+    The host-side ``occurrence_filter`` stays as the exact §6.5
+    reference/fallback. Returns (state, limited pairs, pairs dropped).
+    """
+    t, b, c = state.shape
+    ring = state.occ.shape[0]
+    keys = sigs.astype(jnp.uint32)
+    far = ids[:, None] - jnp.int32(max(cfg.min_dt, 1) - 1)  # id dist ≥ min_dt
+
+    def one_table(sig_tb, ids_tb, bkt, k):
+        occ_sig = sig_tb[bkt]                          # (N, C)
+        occ_id = ids_tb[bkt]
+        hit = ((occ_sig == k[:, None]) & (occ_id != INVALID)
+               & (occ_id < far))
+        if qvalid is not None:
+            hit = hit & qvalid[:, None]
+        return hit, occ_id
+
+    hit, occ_id = jax.vmap(one_table, in_axes=(0, 0, 1, 1))(
+        state.sig, state.ids, buckets, keys)           # (t, N, C) each
+    q_counts = hit.sum(axis=(0, 2), dtype=jnp.int32)   # (N,)
+    pslot = jnp.where(hit, occ_id % ring, ring).reshape(-1)  # OOB → dropped
+    occ = state.occ.at[ids % ring].add(q_counts, mode="drop") \
+        .at[pslot].add(hit.reshape(-1).astype(jnp.int32), mode="drop")
+    hot = occ > jnp.int32(limit)
+    v = pairs.valid
+    s1 = jnp.where(v, pairs.idx1 % ring, 0)
+    s2 = jnp.where(v, pairs.idx2 % ring, 0)
+    keep = v & ~hot[s1] & ~hot[s2]
+    dropped = (v & ~keep).sum(dtype=jnp.int32)
+    limited = Pairs(idx1=pairs.idx1, idx2=pairs.idx2,
+                    sim=jnp.where(keep, pairs.sim, 0), valid=keep)
+    return dataclasses.replace(state, occ=occ), limited, dropped
+
+
 def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
                  ids: jax.Array, valid: jax.Array | None, cfg: LSHConfig,
-                 window: int, saturation: int = 0, dup_tables: int = 0
+                 window: int, saturation: int = 0, dup_tables: int = 0,
+                 occ_limit: int = 0
                  ) -> tuple[IndexState, Pairs, jax.Array]:
-    """expire → duplicate guard → insert → saturation-guarded query.
+    """expire → duplicate guard → insert → saturation-guarded query →
+    occurrence limiter.
 
-    The one shared insert/query tail of both streaming hot paths (fused
-    ``_chunk_core`` and the unfused ``stream_step``), so the guards are
-    bit-identical in either. Returns (state, pairs, qc) with
-    ``qc = [duplicates_suppressed, saturated_lookups]`` (both 0 when the
-    corresponding knob is off — the program then matches the unguarded
-    step exactly).
+    The one shared insert/query tail of EVERY detection path — the fused
+    ``_chunk_core``, the unfused ``stream_step``, and the batch replay
+    driver (``core.detect``) — so the guards are bit-identical in all of
+    them. Returns (state, pairs, qc) with ``qc = [duplicates_suppressed,
+    saturated_lookups, limited_pairs]`` (all 0 when the corresponding
+    knob is off — the program then matches the unguarded step exactly).
+
+    ``occ_limit`` > 0 enables the in-dispatch §6.5 occurrence limiter
+    (``occurrence_limit_pairs``): per-fingerprint partner counts carried
+    in ``state.occ``, decayed with the sliding window (each incoming id
+    reclaims its ring slot — the previous owner is ≥ occ_slots older and
+    long expired), capping pair emission per query with no extra
+    dispatch. ``window`` > 0 with ``saturation`` > 0 also switches the
+    saturation quarantine to the window-relative decaying traffic counter
+    (see ``expire``).
     """
+    if occ_limit > 0:
+        # recycle the incoming ids' partner-count slots (window decay:
+        # a slot's previous owner is a full ring behind — outside any
+        # window the ring was sized for)
+        ring = state.occ.shape[0]
+        state = dataclasses.replace(
+            state, occ=state.occ.at[ids % ring].set(0))
     if window > 0:
         # newest = one past the last valid id (prefix masks reduce to
         # base + n_valid, the pre-quality behavior; hole-y gap masks
         # still anchor the window to absolute stream time)
         newest = (ids[-1] + 1 if valid is None
                   else jnp.max(jnp.where(valid, ids + 1, ids[0])))
-        state = expire(state, newest - jnp.int32(window))
+        state = expire(state, newest - jnp.int32(window),
+                       half_life=window if saturation > 0 else 0)
     ins_valid, qvalid = valid, None
     qc_dup = jnp.int32(0)
     if dup_tables > 0:
@@ -277,7 +389,11 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
               if saturation > 0 else jnp.int32(0))
     pairs = query(state, sigs, ids, cfg, buckets=buckets, qvalid=qvalid,
                   saturation=saturation)
-    return state, pairs, jnp.stack([qc_dup, qc_sat])
+    qc_occ = jnp.int32(0)
+    if occ_limit > 0:
+        state, pairs, qc_occ = occurrence_limit_pairs(
+            state, sigs, buckets, ids, qvalid, cfg, pairs, occ_limit)
+    return state, pairs, jnp.stack([qc_dup, qc_sat, qc_occ])
 
 
 # ---------------------------------------------------------------------------

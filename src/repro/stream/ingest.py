@@ -76,14 +76,17 @@ class StreamConfig:
       header could demand gigabytes) and burn thousands of all-invalid
       dispatches. Such chunks are rejected and counted instead
       (``quality["rejected_chunks"]``). 0 = unbounded (trusted feeds).
-    * ``saturation_limit`` — buckets whose lifetime insert count exceeds
+    * ``saturation_limit`` — buckets whose insert-traffic counter exceeds
       this are quarantined from pair emission inside the jitted step (the
       paper's repeating-glitch mega-bucket fix, applied structurally).
-      Size it well above any healthy bucket's traffic over a deployment
-      window so clean data never trips it. The counter is *lifetime*
-      traffic (never decays), so on unbounded multi-week streams leave
-      this 0 unless the limit is sized for the whole deployment — a
-      window-relative counter is a ROADMAP open item. 0 = off.
+      Size it well above any healthy bucket's traffic over a detection
+      window so clean data never trips it. With a sliding window
+      (``window_fingerprints`` > 0) the counter is *window-relative*: it
+      halves every window of stream time inside the already-traced
+      ``expire``, so it tracks recent pressure and quarantined buckets
+      recover once a glitching channel is repaired — safe to leave on
+      for unbounded multi-month streams. Without a window the counter is
+      lifetime traffic (the pre-window behavior). 0 = off.
     * ``dup_window_fingerprints`` — sample-exact repeated-segment
       detector: every fingerprint's raw sample window is hashed and
       compared against the previous N fingerprints' hashes; an exact
@@ -101,6 +104,19 @@ class StreamConfig:
       for glitch suppression — size it above your workload's strongest
       legitimate repeat, or leave it 0 and let the saturation guard
       handle glitch trains. 0 = off.
+    * ``occ_limit`` — the in-dispatch §6.5 occurrence limiter (ISSUE 5):
+      per-fingerprint emitted-partner counts are carried in the index
+      state (a ring of ``index.occ_slots`` slots keyed by id, recycled as
+      the window slides) and pairs touching a fingerprint past the limit
+      are dropped inside the already-traced step. This is what suppresses
+      *additive* (non-sample-exact) glitch trains, which ride the live
+      noise floor and so evade the duplicate guard; the host-side
+      ``occurrence_filter`` at finalize remains the bit-exact §6.5
+      reference. Size it above the densest legitimate repeater's partner
+      count within a window (clean data then never trips it — bit-exact
+      parity with the limiter off is pinned). Requires
+      ``index.occ_slots`` ≥ the id span pairs can reach back over
+      (the sliding window, or the whole stream when unwindowed). 0 = off.
     """
 
     block_fingerprints: int = 64   # fingerprints per jitted step
@@ -118,6 +134,7 @@ class StreamConfig:
     saturation_limit: int = 0      # quarantine buckets past this traffic
     dup_window_fingerprints: int = 0  # sample-exact repeat horizon
     dup_sig_tables: int = 0        # signature matches that flag a repeat
+    occ_limit: int = 0             # in-dispatch §6.5 partner-count limiter
 
     def __post_init__(self):
         if self.stats_warmup_blocks < 0:
@@ -126,12 +143,29 @@ class StreamConfig:
                 f"got {self.stats_warmup_blocks}")
         if min(self.reorder_horizon_samples, self.max_gap_samples,
                self.saturation_limit, self.dup_window_fingerprints,
-               self.dup_sig_tables) < 0:
+               self.dup_sig_tables, self.occ_limit) < 0:
             raise ValueError(
                 "data-quality knobs (reorder_horizon_samples, "
                 "max_gap_samples, saturation_limit, "
-                "dup_window_fingerprints, dup_sig_tables) must be >= 0 "
-                "(0 = off)")
+                "dup_window_fingerprints, dup_sig_tables, occ_limit) "
+                "must be >= 0 (0 = off)")
+        if self.occ_limit > 0 and self.index.occ_slots <= 0:
+            raise ValueError(
+                "occ_limit needs a partner-count ring: set "
+                "StreamIndexConfig.occ_slots to at least the sliding "
+                "window (window_fingerprints), or the expected stream "
+                "length when unwindowed")
+        if self.occ_limit > 0 and 0 < self.index.occ_slots \
+                < self.window_fingerprints:
+            # a ring narrower than the window makes two live in-window
+            # fingerprints share a slot: the newcomer's slot reset zeroes
+            # a still-active partner count (under-suppression) and merged
+            # counts can push clean fingerprints past the limit (silent
+            # clean-pair drops) — reject rather than degrade silently
+            raise ValueError(
+                f"occ_slots={self.index.occ_slots} is narrower than the "
+                f"sliding window ({self.window_fingerprints}): every id a "
+                f"pair can reach back to needs its own partner-count slot")
         if self.pooled and not self.fused:
             raise ValueError(
                 "pooled station stepping runs through the fused chunk step;"

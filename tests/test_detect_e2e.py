@@ -1,5 +1,12 @@
 """End-to-end detection on synthetic seismic data (paper Figure 2 system
-behaviour): recall vs injected ground truth, occurrence-filter effects."""
+behaviour): recall vs injected ground truth, occurrence-filter effects,
+and the one-core golden pin — the unified batch driver (``detect_events``
+replaying through the streaming station pool) must reproduce the deleted
+legacy host loop bit-exactly (``tests/golden/batch_detect.json``,
+regenerable via ``scratch/gen_golden_batch.py``)."""
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
@@ -50,6 +57,54 @@ def test_occurrence_filter_only_fires_on_noisy_station(dataset):
     # station 0 carries injected repeating noise; others should be ~clean
     assert stats["station0_excluded"] >= 0
     assert stats["station1_excluded"] <= stats["station0_excluded"] + 5
+
+
+BATCH_GOLDEN = pathlib.Path(__file__).parent / "golden" / "batch_detect.json"
+
+
+def test_unified_driver_matches_legacy_golden(dataset):
+    """One core, two drivers (ISSUE 5 acceptance): the replayed batch
+    driver reproduces the legacy per-station host loop's post-filter pair
+    triplets (idx1, idx2, sim), per-station stats, detections count, and
+    ``recall_against_truth`` numbers bit-exactly on the seed synthetic
+    dataset."""
+    gold = json.loads(BATCH_GOLDEN.read_text())
+    assert gold["synth"]["seed"] == dataset.cfg.seed  # same pinned dataset
+    assert gold["synth"]["duration_s"] == dataset.cfg.duration_s
+    cfg = _cfg()
+    det, events, times, stats = detect_events(dataset.waveforms, cfg,
+                                              keep_pairs=True)
+    pairs = stats.pop("_station_pairs")
+    assert stats == gold["stats"]
+    rec = recall_against_truth(det, events, dataset, cfg.fingerprint)
+    assert rec == gold["recall"]
+    for st, p in enumerate(pairs):
+        v = np.asarray(p.valid)
+        got = sorted(zip(np.asarray(p.idx1)[v].tolist(),
+                         np.asarray(p.idx2)[v].tolist(),
+                         np.asarray(p.sim)[v].tolist()))
+        want = [tuple(t) for t in gold["station_pairs"][st]]
+        assert got == want, (st, len(got), len(want))
+    # the replay attributed its stages (fused step once, to search_s)
+    assert times.search_s > 0 and times.total() > 0
+
+
+def test_unified_driver_quality_knobs_in_batch(dataset):
+    """The streaming guards are available to batch replay: an occ-limited
+    replay of the noisy station still runs end-to-end, and with the
+    limiter off the scfg override reproduces the default pair set."""
+    import dataclasses
+    from repro.core.detect import replay_config
+    cfg = _cfg()
+    n_fp = cfg.fingerprint.n_fingerprints(dataset.waveforms.shape[1])
+    base = replay_config(cfg.lsh)
+    limited = dataclasses.replace(
+        base, occ_limit=10_000,
+        index=dataclasses.replace(base.index, occ_slots=n_fp))
+    _, _, _, s_def = detect_events(dataset.waveforms, cfg)
+    _, _, _, s_lim = detect_events(dataset.waveforms, cfg, scfg=limited)
+    # a sky-high limit never fires: identical stats incl. pair counts
+    assert s_lim == s_def
 
 
 def test_detect_step_jittable(dataset):

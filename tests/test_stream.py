@@ -132,6 +132,145 @@ def test_index_valid_mask_not_stored(rng):
 
 
 # ---------------------------------------------------------------------------
+# in-dispatch §6.5 occurrence limiter + window-relative saturation (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+def _guarded_batch(state, sigs, base, cfg, n_buckets, **kw):
+    n = sigs.shape[0]
+    buckets = L.bucket_ids(sigs, n_buckets, cfg.seed)
+    ids = base + jnp.arange(n, dtype=jnp.int32)
+    return SI.guarded_step(state, sigs, buckets, ids, None, cfg, **kw)
+
+
+def test_occ_limiter_quarantines_dense_repeaters(rng):
+    """A fingerprint family colliding in every table (glitch-train shape)
+    accumulates raw partner collisions past the limit within its very
+    first batch — in-step counting, so even the first block's pairs die —
+    and stays quarantined; sparse random batches through the same limiter
+    are bit-identical to the limiter-off program."""
+    cfg = L.LSHConfig(n_tables=8, n_funcs=4, n_matches=1, bucket_cap=8,
+                      min_dt=1, occurrence_frac=0.0)
+    icfg = StreamIndexConfig(n_buckets=256, bucket_cap=8, occ_slots=512)
+    glitch = jnp.tile(_random_sigs(rng, 1, t=8), (4, 1))   # identical sigs
+    emitted, limited = [], 0
+    state = SI.init_index(cfg, icfg)
+    for step in range(4):
+        state, pairs, qc = _guarded_batch(state, glitch, jnp.int32(4 * step),
+                                          cfg, 256, window=0, occ_limit=20)
+        emitted.append(int(np.asarray(pairs.valid).sum()))
+        limited += int(np.asarray(qc)[2])
+    assert sum(emitted) == 0             # never a single train pair out
+    assert limited > 0                   # …because the limiter dropped them
+    assert int(np.asarray(state.occ).max()) > 20
+    # a sparse batch through the same limiter config is untouched
+    state2 = SI.init_index(cfg, icfg)
+    sparse = _random_sigs(rng, 8, t=8)
+    state2, p1, qc1 = _guarded_batch(state2, sparse, jnp.int32(0), cfg, 256,
+                                     window=0, occ_limit=20)
+    state3 = SI.init_index(cfg, icfg)
+    state3, p0, _ = _guarded_batch(state3, sparse, jnp.int32(0), cfg, 256,
+                                   window=0, occ_limit=0)
+    np.testing.assert_array_equal(np.asarray(p1.valid), np.asarray(p0.valid))
+    assert int(np.asarray(qc1)[2]) == 0
+
+
+def test_occ_limiter_ring_recycles_with_stream():
+    """Partner counts die as the id stream advances past the ring span
+    (the expire-coupled decay): a fingerprint family quarantined early
+    emits again once its counts have been recycled."""
+    rng = np.random.default_rng(1)
+    cfg = L.LSHConfig(n_tables=8, n_funcs=4, n_matches=1, bucket_cap=8,
+                      min_dt=1, occurrence_frac=0.0)
+    icfg = StreamIndexConfig(n_buckets=256, bucket_cap=8, occ_slots=32)
+    window = 16
+    sig = jnp.asarray(rng.integers(0, 2**32, (1, 8), dtype=np.uint32))
+    dense = jnp.tile(sig, (4, 1))
+    state = SI.init_index(cfg, icfg)
+    # batch 1 emits (intra-batch counts under the limit); batch 2's rows
+    # also hit batch 1's residents, cross the limit, and are quarantined
+    state, p0, _ = _guarded_batch(state, dense, jnp.int32(0), cfg, 256,
+                                  window=window, occ_limit=30)
+    assert int(np.asarray(p0.valid).sum()) > 0
+    state, p1, _ = _guarded_batch(state, dense, jnp.int32(4), cfg, 256,
+                                  window=window, occ_limit=30)
+    assert int(np.asarray(p1.valid).sum()) == 0
+    # a full ring of unrelated ids later, the family's slots recycled
+    # (and the window expired the old residents): emission resumes
+    base = 8
+    for k in range(8):
+        filler = jnp.asarray(rng.integers(0, 2**32, (4, 8), dtype=np.uint32))
+        state, _, _ = _guarded_batch(state, filler, jnp.int32(base + 4 * k),
+                                     cfg, 256, window=window, occ_limit=30)
+    state, p2, _ = _guarded_batch(state, dense, jnp.int32(base + 32), cfg,
+                                  256, window=window, occ_limit=30)
+    assert int(np.asarray(p2.valid).sum()) > 0
+
+
+def test_occ_limit_requires_ring():
+    """The limiter without a partner-count ring is a config error, caught
+    up front (not a silent (1,)-ring that quarantines everything)."""
+    with pytest.raises(ValueError, match="occ_slots"):
+        StreamConfig(occ_limit=10)
+    # a ring narrower than the sliding window would alias live counters
+    with pytest.raises(ValueError, match="narrower"):
+        StreamConfig(occ_limit=10, window_fingerprints=8192,
+                     index=StreamIndexConfig(occ_slots=1024))
+    # and the dirty smoke config carries a properly sized ring
+    from repro.configs.fast_seismic import stream_dirty_smoke_config
+    scfg = stream_dirty_smoke_config()
+    assert scfg.occ_limit > 0 and scfg.index.occ_slots >= 4096
+
+
+def test_saturation_traffic_decays_with_window():
+    """Window-relative saturation (the ROADMAP follow-up): a bucket
+    quarantined by a traffic burst recovers after the sliding window
+    passes (its counter halves per window), unlike the old lifetime
+    counter which never forgave."""
+    rng = np.random.default_rng(2)
+    cfg = L.LSHConfig(n_tables=4, n_funcs=4, n_matches=1, bucket_cap=8,
+                      min_dt=1, occurrence_frac=0.0)
+    icfg = StreamIndexConfig(n_buckets=64, bucket_cap=8)
+    window = 16
+    sig = jnp.asarray(rng.integers(0, 2**32, (1, 4), dtype=np.uint32))
+    dense = jnp.tile(sig, (4, 1))
+    state = SI.init_index(cfg, icfg)
+    # hammer one bucket family past the saturation limit
+    for step in range(4):
+        state, pairs, qc = _guarded_batch(
+            state, dense, jnp.int32(4 * step), cfg, 64,
+            window=window, saturation=10)
+    assert int(np.asarray(qc)[1]) > 0            # quarantine engaged
+    assert int(np.asarray(pairs.valid).sum()) == 0
+    hot_before = int(np.asarray(state.traffic).max())
+    assert hot_before > 10
+    # the glitching channel is "repaired": several windows of benign
+    # traffic later the counter has halved back under the limit
+    base = 16
+    for k in range(8):
+        filler = jnp.asarray(rng.integers(0, 2**32, (4, 4), dtype=np.uint32))
+        state, _, _ = _guarded_batch(state, filler, jnp.int32(base + 4 * k),
+                                     cfg, 64, window=window, saturation=10)
+    assert int(np.asarray(state.traffic).max()) <= 10
+    # the family pairs again (its old residents expired; new inserts are
+    # below the limit)
+    state, p2, _ = _guarded_batch(state, dense, jnp.int32(base + 32), cfg,
+                                  64, window=window, saturation=10)
+    assert int(np.asarray(p2.valid).sum()) > 0
+    # lifetime behavior (window=0) keeps the quarantine forever
+    state_l = SI.init_index(cfg, icfg)
+    for step in range(4):
+        state_l, _, _ = _guarded_batch(state_l, dense, jnp.int32(4 * step),
+                                       cfg, 64, window=0, saturation=10)
+    for k in range(8):
+        filler = jnp.asarray(rng.integers(0, 2**32, (4, 4), dtype=np.uint32))
+        state_l, _, _ = _guarded_batch(state_l, filler,
+                                       jnp.int32(16 + 4 * k), cfg, 64,
+                                       window=0, saturation=10)
+    assert int(np.asarray(state_l.traffic).max()) > 10
+
+
+# ---------------------------------------------------------------------------
 # ingest: ring framing + halo exactness + reservoir stats
 # ---------------------------------------------------------------------------
 
@@ -778,8 +917,9 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
     from benchmarks import bench_e2e
     out = bench_e2e.main(["--quick"])
-    assert out["schema"] == "bench-e2e/v1"
-    assert set(out) >= {"config_hash", "backend", "step", "points", "ratios"}
+    assert out["schema"] == "bench-e2e/v2"
+    assert set(out) >= {"config_hash", "backend", "step", "points",
+                        "offline_replay", "ratios"}
     written = json.loads((tmp_path / "BENCH_e2e.json").read_text())
     assert written["config_hash"] == out["config_hash"]
     stations = sorted(p["stations"] for p in out["points"] if p["fused"])
@@ -791,3 +931,10 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     assert all(p["live_bytes_delta_per_chunk"] == 0
                for p in out["points"] if p["fused"])
     assert all(p["live_bytes_delta_per_chunk"] <= 0 for p in out["points"])
+    # offline replay (ISSUE 5): unified batch driver at 1/4/8 stations,
+    # at least as fast as the legacy host loop at 4 stations
+    replay = out["offline_replay"]
+    assert sorted(p["stations"] for p in replay["points"]) == [1, 4, 8]
+    assert replay["speedup_vs_legacy_4st"] >= 1.0
+    assert out["ratios"]["offline_replay_speedup_vs_legacy_4st"] \
+        == replay["speedup_vs_legacy_4st"]
