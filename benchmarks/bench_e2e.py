@@ -270,8 +270,13 @@ def _wall(fn) -> float:
 
 
 def interleaved_walls(cfg, scfg, ds, med_mad, n_chunks: int,
-                      warmup: int) -> dict:
-    """Per-spec median ``push`` wall, measured round-robin per chunk."""
+                      warmup: int) -> tuple[dict, dict]:
+    """Per-spec median ``push`` wall, measured round-robin per chunk.
+
+    Also returns the flagship 4-station pooled detector's
+    ``metrics_snapshot()`` (ISSUE 6) — the structured telemetry view of
+    the timed stream, embedded in ``BENCH_e2e.json`` so a perf regression
+    comes with its drop/quality/wall-histogram context attached."""
     dets = {k: _detector(cfg, scfg, k[0], k[1], med_mad) for k in SPECS}
     split = {k: np.array_split(ds.waveforms[:k[0]], n_chunks, axis=1)
              for k in SPECS}
@@ -284,7 +289,8 @@ def interleaved_walls(cfg, scfg, ds, med_mad, n_chunks: int,
             t0 = time.perf_counter()
             det.push(split[k][i])
             walls[k].append(time.perf_counter() - t0)
-    return {k: float(np.median(w)) for k, w in walls.items()}
+    metrics = dets[(4, True)].metrics_snapshot()
+    return {k: float(np.median(w)) for k, w in walls.items()}, metrics
 
 
 def memory_point(cfg, scfg, ds, med_mad, n_stations: int, fused: bool,
@@ -342,7 +348,8 @@ def main(argv=None):
 
     step = step_points(cfg, scfg, repeats)
     replay = offline_replay_points(duration)
-    walls = interleaved_walls(cfg, scfg, ds, med_mad, n_chunks, warmup)
+    walls, metrics = interleaved_walls(cfg, scfg, ds, med_mad, n_chunks,
+                                       warmup)
     points = []
     for k in SPECS:
         n_stations, fused = k
@@ -382,6 +389,7 @@ def main(argv=None):
         "points": points,
         "offline_replay": replay,
         "ratios": ratios,
+        "metrics": metrics,
     }
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
     path = os.path.join(out_dir, "BENCH_e2e.json")

@@ -126,7 +126,7 @@ def additive_bench_scenario(duration_s: float = 600.0) -> ScenarioConfig:
 
 
 def _scenario_run(cfg, scfg, wf, med_mad, n_chunks=16, timing=False):
-    """One detector pass → (raw emitted pair set, station, chunks/sec)."""
+    """One detector pass → (raw emitted pair set, detector, chunks/sec)."""
     det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
     res = ingest_chunks(det, wf, n_chunks=n_chunks,
                         warmup_chunks=4 if timing else 0)
@@ -136,7 +136,7 @@ def _scenario_run(cfg, scfg, wf, med_mad, n_chunks=16, timing=False):
            else np.zeros((0, 3), np.int64))
     raw = set(zip(tri[:, 0].tolist(), tri[:, 1].tolist()))
     cps = res["timed_chunks"] / max(res["wall_s"], 1e-9) if timing else None
-    return raw, st, cps
+    return raw, det, cps
 
 
 def scenario_point(duration_s: float = 600.0) -> dict:
@@ -163,8 +163,9 @@ def scenario_point(duration_s: float = 600.0) -> dict:
     golden, _, _ = _scenario_run(cfg, guarded_cfg, wf_clean, med_mad)
     unguarded, _, _ = _scenario_run(cfg, stream_smoke_config(), wf_dirty,
                                     med_mad)
-    guarded, st, cps = _scenario_run(cfg, guarded_cfg, wf_dirty, med_mad,
-                                     timing=True)
+    guarded, det, cps = _scenario_run(cfg, guarded_cfg, wf_dirty, med_mad,
+                                      timing=True)
+    st = det.stations[0]
 
     fcfg = cfg.fingerprint
     ok = set(scen.clean_fp_ids(0, fcfg.window_samples,
@@ -187,6 +188,10 @@ def scenario_point(duration_s: float = 600.0) -> dict:
             len(ref & got) / max(len(ref), 1), 4),
         "guarded_chunks_per_s": round(cps, 2),
         "quality": st.quality_summary(),
+        # the ISSUE-6 structured view of the guarded dirty run: drop
+        # breakdown, wall histograms, spans, watchdog — one schema shared
+        # with serve_detect / bench_e2e / the tier-1 schema test
+        "metrics": det.metrics_snapshot(),
         "additive": additive_scenario_point(duration_s),
     }
     csv_line("stream.scenario_spurious_reduction",
@@ -213,8 +218,9 @@ def additive_scenario_point(duration_s: float = 600.0) -> dict:
                                  med_mad)
     unguarded, _, _ = _scenario_run(cfg, stream_smoke_config(),
                                     scen.waveforms[0], med_mad)
-    guarded, st, cps = _scenario_run(cfg, guarded_cfg, scen.waveforms[0],
-                                     med_mad, timing=True)
+    guarded, det, cps = _scenario_run(cfg, guarded_cfg, scen.waveforms[0],
+                                      med_mad, timing=True)
+    st = det.stations[0]
     fcfg = cfg.fingerprint
     ok = set(scen.clean_fp_ids(0, fcfg.window_samples,
                                fcfg.lag_samples).tolist())

@@ -33,7 +33,7 @@ def run(cfg_name: str, cfg: DetectConfig, waveforms, dataset, scfg=None):
           f"detections={stats['detections']:3d} "
           f"recall={rec['recall']:.2f} "
           f"(stats={times.fingerprint_s:.1f} hash={times.hashgen_s:.1f} "
-          f"fused={times.search_s:.1f} align={times.align_s:.1f})")
+          f"fused={times.fused_step_s:.1f} align={times.align_s:.1f})")
     return wall, rec
 
 

@@ -69,6 +69,17 @@ def main():
           f"(chunk p50={ing['chunk_ms_p50']:.0f}ms "
           f"p95={ing['chunk_ms_p95']:.0f}ms "
           f"{ing['samples_per_s']:.0f} samples/s/station)")
+    # the ISSUE-6 telemetry view: real-time factor, in-dispatch drop
+    # breakdown, wall histograms — the same snapshot serve_detect and the
+    # BENCH artifacts embed
+    m = det.metrics_snapshot()
+    fused_p95_ms = 1e3 * m["histograms"]["fused_step_wall_seconds"]["p95"]
+    print(f"telemetry   rtf={m['rtf']:.0f}x realtime "
+          f"pairs={m['drops']['pairs_emitted']} "
+          f"masked={m['drops']['masked_fingerprints']} "
+          f"limited={m['drops']['limited_pairs']} "
+          f"fused p95={fused_p95_ms:.1f}ms steps={m['watchdog']['steps']} "
+          f"stragglers={m['watchdog']['stragglers']}")
 
     t0 = time.perf_counter()
     off_det, off_events, _, off_stats = detect_events(wf, cfg)

@@ -59,6 +59,10 @@ def stream_config() -> StreamConfig:
     day = 43_200  # fingerprints per day at the 2 s lag (86400 s / 2 s)
     # fused/pooled default True: one donated dispatch per block, and one
     # vmapped executable for all stations of a monitoring network.
+    # telemetry default True (ISSUE 6): the in-dispatch QC_FIELDS counter
+    # vector rides in the same dispatch — production streams keep the
+    # drop/guard breakdown live at zero extra dispatches and bit-identical
+    # detections; set telemetry=False to compile the counters away.
     # Data-quality knobs sized for real telemetry (ISSUE 4): a 60 s
     # reorder horizon absorbs out-of-order packet delivery, offset jumps
     # beyond one hour are rejected as corrupt timestamps rather than

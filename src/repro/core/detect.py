@@ -28,11 +28,17 @@ workflow serves both archive reprocessing and real-time monitoring):
     separate sort-based search implementation.
 
 Stage wall times: the fused replay dispatch covers fingerprint + hash +
-search in one program, so ``StageTimes`` attributes it ONCE — to
-``search_s`` — rather than pretending to split it; ``fingerprint_s`` is
-the §5.2 statistics pass (the two-pass structure's first pass),
-``hashgen_s`` the hash-mapping construction, ``align_s`` the host tail
-(§6.5 reference filter + clustering + network association).
+search in one program, so ``StageTimes`` attributes it ONCE — to its own
+``fused_step_s`` stage — rather than pretending to split it;
+``fingerprint_s`` is the §5.2 statistics pass (the two-pass structure's
+first pass), ``hashgen_s`` the hash-mapping construction, ``align_s`` the
+host tail (§6.5 reference filter + clustering + network association).
+``search_s`` remains as a read-only legacy alias of ``fused_step_s`` for
+the golden comparisons and older callers. The attribution itself is
+derived from the ``repro.obsv`` span layer: ``detect_events`` brackets
+each stage in a :class:`~repro.obsv.spans.SpanTracer` span and reads the
+per-name totals back, so batch replays emit the same structured trace
+(JSONL / ``jax.profiler``) as the streaming service when given a tracer.
 """
 from __future__ import annotations
 
@@ -61,16 +67,32 @@ class DetectConfig:
 @dataclasses.dataclass
 class StageTimes:
     """Wall seconds per phase. The fused replay step (fingerprint → hash →
-    insert/query as one dispatch) is attributed once, to ``search_s``."""
+    insert/query as one dispatch) is attributed once, to ``fused_step_s``;
+    ``search_s`` is a read-only legacy alias of it."""
 
     fingerprint_s: float = 0.0   # §5.2 statistics pass (stats, not bits)
     hashgen_s: float = 0.0       # hash-mapping construction
-    search_s: float = 0.0        # fused replay: all per-block device work
+    fused_step_s: float = 0.0    # fused replay: all per-block device work
     align_s: float = 0.0         # §6.5 filter + clustering + association
 
+    @property
+    def search_s(self) -> float:
+        """Legacy name for the fused replay stage (pre-span attribution
+        booked the whole pooled dispatch under 'search')."""
+        return self.fused_step_s
+
     def total(self) -> float:
-        return (self.fingerprint_s + self.hashgen_s + self.search_s
+        return (self.fingerprint_s + self.hashgen_s + self.fused_step_s
                 + self.align_s)
+
+    @classmethod
+    def from_spans(cls, tracer) -> "StageTimes":
+        """Derive stage attribution from the span layer's per-name totals
+        (the spans ``detect_events`` enters around each stage)."""
+        return cls(fingerprint_s=tracer.total_s("fingerprint_stats"),
+                   hashgen_s=tracer.total_s("hashgen"),
+                   fused_step_s=tracer.total_s("fused_step"),
+                   align_s=tracer.total_s("host_tail"))
 
 
 def _block(x):
@@ -97,8 +119,9 @@ def replay_config(lcfg: LSHConfig, block_fingerprints: int = 256,
 
 def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
                   n_partitions: int = 1, scfg=None,
-                  keep_pairs: bool = False) -> tuple[dict, list[Events],
-                                                     StageTimes, dict]:
+                  keep_pairs: bool = False,
+                  tracer=None) -> tuple[dict, list[Events],
+                                        StageTimes, dict]:
     """(n_stations, T) waveforms → network detections, via the streaming
     core (batch = replay).
 
@@ -111,7 +134,20 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     resident index *is* the §6.4 working-set bound), so the knob is a
     no-op. ``keep_pairs`` stashes the per-station post-filter ``Pairs``
     under ``stats["_station_pairs"]`` (the golden-pin hook).
+
+    Stage attribution goes through the span layer: each stage runs inside
+    a :class:`~repro.obsv.spans.SpanTracer` span and ``StageTimes`` is
+    read back from the per-name totals. Pass ``tracer`` (e.g. one built
+    with ``jsonl_path=...`` or ``profile_dir=...``) to capture the
+    structured trace; by default a private tracer provides the totals
+    only. With ``scfg.telemetry`` on (the default), the replay also
+    collects the in-dispatch ``index.QC_FIELDS`` counters — summed over
+    blocks into ``stats["drops"]`` (per guard, summed over stations) with
+    per-station vectors under ``stats["station<i>_qc"]`` — at no extra
+    dispatch. Span wall totals stay on the tracer (deliberately out of
+    ``stats``, which is compared dict-exact by the golden tests).
     """
+    from repro.obsv.spans import SpanTracer
     from repro.stream import fused as fused_mod
     from repro.stream import index as index_mod
     from repro.stream.engine import host_occurrence_filter, \
@@ -122,7 +158,7 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     fcfg, lcfg, acfg = cfg.fingerprint, cfg.lsh, cfg.align
     if scfg is None:
         scfg = replay_config(lcfg)
-    times = StageTimes()
+    tracer = tracer or SpanTracer()
     stats: dict = {}
     n_fp = fcfg.n_fingerprints(waveforms.shape[1])
 
@@ -133,22 +169,25 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     # on the statistics alone — the price of running the *identical*
     # traced program as the streaming service (which owns no whole-trace
     # buffer to begin with) rather than a batch-only coeffs-in variant
-    t0 = time.perf_counter()
-    meds, mads = [], []
-    for st in range(n_stations):
-        coeffs = fp_mod.coeffs_from_waveform(jnp.asarray(waveforms[st]),
-                                             fcfg)
-        med, mad = fp_mod.mad_stats(coeffs, fcfg.mad_sample_rate,
-                                    jax.random.PRNGKey(fcfg.stft_len + st))
-        meds.append(med)
-        mads.append(mad)
-    t1 = _block(mads[-1])
-    times.fingerprint_s += t1 - t0
-    mappings = lsh_mod.hash_mappings(fcfg.fp_dim, lcfg)
-    t2 = _block(mappings)
-    times.hashgen_s += t2 - t1
+    with tracer.span("fingerprint_stats"):
+        meds, mads = [], []
+        for st in range(n_stations):
+            coeffs = fp_mod.coeffs_from_waveform(
+                jnp.asarray(waveforms[st]), fcfg)
+            med, mad = fp_mod.mad_stats(
+                coeffs, fcfg.mad_sample_rate,
+                jax.random.PRNGKey(fcfg.stft_len + st))
+            meds.append(med)
+            mads.append(mad)
+        _block(mads[-1])
+    with tracer.span("hashgen"):
+        mappings = lsh_mod.hash_mappings(fcfg.fp_dim, lcfg)
+        _block(mappings)
 
-    # fused replay: ONE pooled dispatch per block for all S stations
+    # fused replay: ONE pooled dispatch per block for all S stations;
+    # counters ride inside the same dispatch when telemetry is on
+    ctr = 1 if getattr(scfg, "telemetry", True) else 0
+    qc_sum = np.zeros((n_stations, len(index_mod.QC_FIELDS)), np.int64)
     state = fused_mod.init_pool_state(
         [index_mod.init_index(lcfg, scfg.index) for _ in range(n_stations)],
         fcfg.halo_samples, meds, mads)
@@ -156,53 +195,64 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     bs = fcfg.block_samples(b)
     tri: list[list[np.ndarray]] = [[] for _ in range(n_stations)]
     for base in range(0, n_fp, b):
-        n_valid = min(b, n_fp - base)
-        start = base * fcfg.lag_samples
-        block = np.zeros((n_stations, bs), np.float32)
-        seg = waveforms[:, start:start + bs]
-        block[:, :seg.shape[1]] = seg
-        vmask = np.broadcast_to(np.arange(b) < n_valid, (n_stations, b))
-        state, pairs, _ = fused_mod.pool_step_block(
-            state, jnp.asarray(block), mappings, jnp.int32(base),
-            jnp.asarray(vmask), fcfg, lcfg, scfg.window_fingerprints,
-            scfg.saturation_limit, scfg.dup_sig_tables, scfg.occ_limit)
-        i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
-        sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
-        for st in range(n_stations):
-            m = pv[st]
-            if m.any():
-                tri[st].append(np.stack(
-                    [i1[st][m], i2[st][m], sim[st][m]],
-                    axis=1).astype(np.int64))
-    t3 = time.perf_counter()
-    times.search_s += t3 - t2
+        with tracer.span("fused_step", base=base):
+            n_valid = min(b, n_fp - base)
+            start = base * fcfg.lag_samples
+            block = np.zeros((n_stations, bs), np.float32)
+            seg = waveforms[:, start:start + bs]
+            block[:, :seg.shape[1]] = seg
+            vmask = np.broadcast_to(np.arange(b) < n_valid,
+                                    (n_stations, b))
+            state, pairs, qc = fused_mod.pool_step_block(
+                state, jnp.asarray(block), mappings, jnp.int32(base),
+                jnp.asarray(vmask), fcfg, lcfg, scfg.window_fingerprints,
+                scfg.saturation_limit, scfg.dup_sig_tables, scfg.occ_limit,
+                ctr)
+            i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
+            sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
+            qc_sum += np.asarray(qc, np.int64)
+            for st in range(n_stations):
+                m = pv[st]
+                if m.any():
+                    tri[st].append(np.stack(
+                        [i1[st][m], i2[st][m], sim[st][m]],
+                        axis=1).astype(np.int64))
 
     # host tail: §6.5 reference filter + channel merge + clustering,
     # shared with the streaming finalize
-    station_events: list[Events] = []
-    station_pairs: list[Pairs] = []
-    for st in range(n_stations):
-        tri_st = (np.concatenate(tri[st], axis=0) if tri[st]
-                  else np.zeros((0, 3), np.int64))
-        pairs = pairs_from_triplets(tri_st)
-        if lcfg.occurrence_frac > 0 and n_fp > 0:
-            pairs, excluded = host_occurrence_filter(pairs, n_fp, lcfg)
-            stats[f"station{st}_excluded"] = int(excluded.sum())
-        stats[f"station{st}_pairs"] = int(pairs.count())
-        stats[f"station{st}_fingerprints"] = n_fp
-        merged = align_mod.merge_channels(
-            [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
-            acfg.channel_threshold)
-        events = align_mod.cluster_station(merged, acfg)
-        stats[f"station{st}_events"] = int(events.count())
-        station_events.append(events)
-        station_pairs.append(pairs)
+    with tracer.span("host_tail"):
+        station_events: list[Events] = []
+        station_pairs: list[Pairs] = []
+        for st in range(n_stations):
+            tri_st = (np.concatenate(tri[st], axis=0) if tri[st]
+                      else np.zeros((0, 3), np.int64))
+            pairs = pairs_from_triplets(tri_st)
+            if lcfg.occurrence_frac > 0 and n_fp > 0:
+                pairs, excluded = host_occurrence_filter(pairs, n_fp, lcfg)
+                stats[f"station{st}_excluded"] = int(excluded.sum())
+            stats[f"station{st}_pairs"] = int(pairs.count())
+            stats[f"station{st}_fingerprints"] = n_fp
+            merged = align_mod.merge_channels(
+                [(pairs.dt, pairs.idx1, pairs.sim, pairs.valid)],
+                acfg.channel_threshold)
+            events = align_mod.cluster_station(merged, acfg)
+            stats[f"station{st}_events"] = int(events.count())
+            station_events.append(events)
+            station_pairs.append(pairs)
 
-    detections = align_mod.associate_network(station_events, acfg,
-                                             n_stations)
-    jax.block_until_ready(detections["valid"])
-    times.align_s += time.perf_counter() - t3
+        detections = align_mod.associate_network(station_events, acfg,
+                                                 n_stations)
+        jax.block_until_ready(detections["valid"])
+    times = StageTimes.from_spans(tracer)
     stats["detections"] = int(detections["valid"].sum())
+    if ctr:
+        stats["drops"] = {
+            name: int(qc_sum[:, k].sum())
+            for k, name in enumerate(index_mod.QC_FIELDS)}
+        for st in range(n_stations):
+            stats[f"station{st}_qc"] = {
+                name: int(qc_sum[st, k])
+                for k, name in enumerate(index_mod.QC_FIELDS)}
     if keep_pairs:
         stats["_station_pairs"] = station_pairs
     return detections, station_events, times, stats

@@ -38,12 +38,34 @@ Restartable service flags:
                           exact reference). Sizes its ring to the
                           sliding window (or the corpus when unwindowed).
 
+Live health surface (ISSUE 6 — the telemetry subsystem's serving tier):
+
+  ``--metrics-every N``   every N ingested chunks, print a ``HEARTBEAT``
+                          JSON line (uptime, real-time factor, per-station
+                          fingerprint throughput, per-guard drop rates,
+                          data-quality counters, straggler steps) built
+                          from the detector's :class:`StreamTelemetry`.
+  ``--metrics-file P``    at the same cadence (and once after ingest),
+                          atomically rewrite ``P`` with the Prometheus
+                          text exposition of the metrics registry — point
+                          a scraper or ``watch cat`` at it.
+  ``--trace-jsonl P``     span tracing: append structured JSONL spans of
+                          the ingest path (ingest → fused_step →
+                          host_tail, nested) to ``P``.
+  ``--dirty``             ingest the fault-injected scenario stream (gaps
+                          + duplicated blocks + a repeating glitch train)
+                          through the quality-hardened config instead of
+                          the clean synth trace — the demo where drop
+                          rates and quality counters are non-zero.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
   PYTHONPATH=src python -m repro.launch.serve_detect \
       --snapshot-every 4 --snapshot-dir /tmp/fast_snap     # then kill …
   PYTHONPATH=src python -m repro.launch.serve_detect \
       --restore --snapshot-dir /tmp/fast_snap              # … and resume
+  PYTHONPATH=src python -m repro.launch.serve_detect \
+      --dirty --metrics-every 4 --metrics-file /tmp/fast.prom
 """
 from __future__ import annotations
 
@@ -244,9 +266,23 @@ def main(argv=None):
                     help="rolling occurrence-filter window (0 = finalize)")
     ap.add_argument("--occ-limit", type=int, default=0,
                     help="in-dispatch §6.5 partner-collision cap (0 = off)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="heartbeat + exposition cadence in chunks (0=off)")
+    ap.add_argument("--metrics-file", default=None,
+                    help="Prometheus text exposition path (atomic rewrite)")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="append structured span records (JSONL) here")
+    ap.add_argument("--dirty", action="store_true",
+                    help="ingest the fault-injected scenario stream "
+                         "through the quality-hardened config")
     args = ap.parse_args(argv)
 
-    cfg, scfg = smoke_config(), stream_smoke_config()
+    cfg = smoke_config()
+    if args.dirty:
+        from repro.configs.fast_seismic import stream_dirty_smoke_config
+        scfg = stream_dirty_smoke_config()
+    else:
+        scfg = stream_smoke_config()
     if args.window_fp or args.filter_window_fp or args.occ_limit:
         import dataclasses
         icfg = scfg.index
@@ -261,10 +297,23 @@ def main(argv=None):
             scfg, window_fingerprints=args.window_fp,
             filter_window_fingerprints=args.filter_window_fp,
             occ_limit=args.occ_limit, index=icfg)
-    ds = make_dataset(SynthConfig(duration_s=args.duration_s,
-                                  n_stations=args.stations,
-                                  n_sources=2, events_per_source=5,
-                                  event_snr=3.0, seed=3))
+    base = SynthConfig(duration_s=args.duration_s,
+                       n_stations=args.stations,
+                       n_sources=2, events_per_source=5,
+                       event_snr=3.0, seed=3)
+    if args.dirty:
+        # the pinned pathology mix of the scenario benchmark: telemetry
+        # gaps, a duplicated block, one long repeating glitch train
+        from repro.core.synth import ScenarioConfig, make_scenario_dataset
+        scen = make_scenario_dataset(ScenarioConfig(
+            base=base, n_gaps=2, gap_dur_s=(2.0, 5.0),
+            n_dup_blocks=1, dup_block_dur_s=20.0, dup_spacing_s=60.0,
+            glitch_stations=(0,), glitch_trains=1,
+            glitch_train_dur_s=args.duration_s / 4.0, seed=1))
+        ds, ingest_wf = scen.clean, scen.waveforms
+    else:
+        ds = make_dataset(base)
+        ingest_wf = ds.waveforms
 
     # build the corpus index pool by streaming the stations in (resuming
     # from the latest snapshot when asked — only post-snapshot samples
@@ -276,9 +325,14 @@ def main(argv=None):
         print(f"# restored step {step}: {skip} samples already ingested")
     else:
         det = StreamingDetector(cfg, scfg, n_stations=args.stations)
-    ingest_chunks(det, ds.waveforms, n_chunks=16, skip=skip,
+    if args.trace_jsonl:
+        from repro.obsv.spans import SpanTracer
+        det.telemetry.tracer = SpanTracer(jsonl_path=args.trace_jsonl)
+    ingest_chunks(det, ingest_wf, n_chunks=16, skip=skip,
                   snapshot_every=args.snapshot_every,
-                  snapshot_dir=args.snapshot_dir)
+                  snapshot_dir=args.snapshot_dir,
+                  metrics_every=args.metrics_every,
+                  metrics_file=args.metrics_file)
     det.flush()
     assert all(st.stats_frozen for st in det.stations), \
         "ingest too short to freeze MAD statistics"
@@ -287,6 +341,13 @@ def main(argv=None):
     # of how dirty the ingested telemetry was
     quality = det.quality_summary()
     print("# ingest quality " + json.dumps(quality))
+    if args.metrics_every:
+        # final post-flush heartbeat + a last exposition rewrite so the
+        # scrape file reflects the completed ingest
+        print(det.telemetry.heartbeat_line(det))
+        if args.metrics_file:
+            det.telemetry.write_prometheus(args.metrics_file, det)
+    det.telemetry.tracer.flush()
     state, med, mad = det.pool_serving_state()
 
     # query windows centered on known event arrivals (+ random controls)
@@ -307,6 +368,8 @@ def main(argv=None):
     stats = eng.run(reqs)
     assert all(r.done for r in reqs)
     stats["ingest_quality"] = quality
+    if args.metrics_every:
+        stats["metrics"] = det.metrics_snapshot()
     print("RESULT " + json.dumps(stats))
     return stats
 

@@ -1,0 +1,89 @@
+"""Lightweight nested wall-clock spans with optional JSONL emission.
+
+A span is one stage of the detection path (``ingest`` → ``fused_step`` →
+``host_tail`` → ``merge`` → ``associate``). Entering/leaving is two
+clock reads and a dict update, so the tracer stays on in production;
+the JSONL event log is opt-in (pass ``jsonl_path``) and each record is
+one line::
+
+    {"ts": 1754660000.1, "name": "fused_step", "path": "chunk/fused_step",
+     "depth": 1, "dur_s": 0.0021, "station": 0}
+
+Per-name totals accumulate regardless of the sink, which is how the
+span layer *derives* stage attribution (``StageTimes`` in
+``core.detect`` reads them back instead of keeping its own stopwatch).
+
+``profile()`` is the optional ``jax.profiler`` hook: when the tracer was
+built with ``profile_dir`` it brackets the wrapped region with an XLA
+trace dump (viewable in TensorBoard/Perfetto); otherwise it is a no-op
+context.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Callable, IO
+
+
+class SpanTracer:
+    def __init__(self, jsonl_path: str | None = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 profile_dir: str | None = None):
+        self.clock = clock
+        self.jsonl_path = jsonl_path
+        self.profile_dir = profile_dir
+        self._fh: IO | None = None
+        self._stack: list[str] = []
+        # name -> [count, total_s]; insertion-ordered = first-entered order
+        self.totals: dict[str, list] = {}
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        self._stack.append(name)
+        t0 = self.clock()
+        try:
+            yield self
+        finally:
+            dt = self.clock() - t0
+            path = "/".join(self._stack)
+            self._stack.pop()
+            tot = self.totals.get(name)
+            if tot is None:
+                tot = self.totals[name] = [0, 0.0]
+            tot[0] += 1
+            tot[1] += dt
+            if self.jsonl_path is not None:
+                rec = {"ts": time.time(), "name": name, "path": path,
+                       "depth": len(self._stack), "dur_s": dt}
+                rec.update(attrs)
+                if self._fh is None:
+                    self._fh = open(self.jsonl_path, "a")
+                self._fh.write(json.dumps(rec) + "\n")
+
+    def total_s(self, name: str) -> float:
+        return self.totals.get(name, (0, 0.0))[1]
+
+    def summary(self) -> dict:
+        return {name: {"count": c, "total_s": t}
+                for name, (c, t) in self.totals.items()}
+
+    @contextlib.contextmanager
+    def profile(self):
+        """Bracket a region with a ``jax.profiler`` trace dump (no-op
+        unless the tracer was given a ``profile_dir``)."""
+        if self.profile_dir is None:
+            yield
+            return
+        import jax
+        with jax.profiler.trace(self.profile_dir):
+            yield
+
+    def flush(self):
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

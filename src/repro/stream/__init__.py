@@ -134,9 +134,50 @@ fault-injection substrate for ``tests/test_scenarios.py`` and
 ``BENCH_stream.json``); reconciliation and guard counters surface
 through ``StreamingDetector.quality_summary`` and ``serve_detect``.
 
+Observability path (ISSUE 6)
+----------------------------
+
+Telemetry follows the same discipline as the quality path: everything is
+either *inside* the already-traced program or on the host side of the
+pair stream — never an extra dispatch, never a change to detections.
+
+* **in-dispatch counters** (``index.QC_FIELDS``): every fused/unfused
+  step returns a per-station counter vector computed inside the traced
+  program — pairs emitted, fingerprints masked by validity, raw and
+  quarantined collisions, duplicate-suppressed fingerprints, limiter
+  drops. The guard counters are always live; the telemetry-only entries
+  are gated by the static ``StreamConfig.telemetry`` knob (default on)
+  and constant-fold to zero when off, so telemetry-off compiles the
+  exact pre-ISSUE-6 program and telemetry-on stays one dispatch with
+  bit-identical detections (both pinned in ``tests/test_telemetry.py``).
+  Counters only *read* the guard masks; they never feed back into pairs.
+* **host metrics registry** (``repro.obsv.metrics``): labeled counters,
+  gauges, and log-bucketed histograms (chunk-ingest / fused-dispatch /
+  host-tail walls, ``host_state_rows``, ring reorder+gap counters) with
+  O(1) memory per series; snapshots/restores alongside the detector so a
+  restarted service resumes its counters. Rendered as Prometheus text
+  exposition (``repro.obsv.metrics.render_prometheus``).
+* **span tracing** (``repro.obsv.spans.SpanTracer``): nested wall-clock
+  spans over ingest → fused_step → host_tail (and the batch replay's
+  stages — ``core.detect.StageTimes`` is *derived* from the span totals),
+  optional structured JSONL emission and a ``jax.profiler`` trace hook.
+* **watchdog**: the training loop's ``train/watchdog.StepWatchdog``
+  wraps every streaming dispatch — one step per pooled dispatch —
+  flagging stragglers into ``straggler_steps_total``.
+* **health surface**: ``StreamingDetector.metrics_snapshot()`` is the
+  single structured view (schema ``stream-metrics/v1``) consumed by
+  ``bench_stream`` / ``bench_e2e`` artifacts, the examples, and
+  ``serve_detect --metrics-every/--metrics-file`` (heartbeat JSON lines
+  with real-time factor + per-guard drop rates; atomically rewritten
+  Prometheus exposition). The hub tying these together is
+  ``stream.telemetry.StreamTelemetry`` (one per detector, shared by its
+  stations).
+
 ``launch/serve_detect.py`` wraps a shared index in a slot/refill request
 loop (the ``ServeEngine`` idiom) for concurrent query-window serving, with
-periodic snapshots (``--snapshot-every``) and restart (``--restore``).
+periodic snapshots (``--snapshot-every``), restart (``--restore``), and
+the live health surface above (``--metrics-every``, ``--metrics-file``,
+``--trace-jsonl``, ``--dirty``).
 
 Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
 the jitted step expires index entries beyond a sliding detection window,
@@ -160,8 +201,11 @@ from repro.stream.engine import (RollingPairFilter,  # noqa: F401
 from repro.stream.fused import (FusedState, init_pool_state,  # noqa: F401
                                 init_state, pool_step_advance,
                                 pool_step_block, step_advance, step_block)
-from repro.stream.index import (IndexState, StreamIndexConfig,  # noqa: F401
-                                expire, index_stats, init_index, init_pool,
-                                insert, query, slice_state, stack_states)
+from repro.stream.index import (IndexState, QC_FIELDS,  # noqa: F401
+                                StreamIndexConfig, expire, index_stats,
+                                init_index, init_pool, insert, query,
+                                slice_state, stack_states)
 from repro.stream.ingest import (StreamConfig, StreamingMAD,  # noqa: F401
                                  WaveformRing)
+from repro.stream.telemetry import (METRICS_SCHEMA,  # noqa: F401
+                                    StreamTelemetry, metrics_snapshot)

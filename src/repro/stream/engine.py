@@ -64,10 +64,13 @@ from repro.core.align import AlignConfig, Events
 from repro.core.detect import DetectConfig
 from repro.core.fingerprint import FingerprintConfig
 from repro.core.lsh import INVALID, LSHConfig, Pairs
+from repro.obsv.metrics import merge_counts
 from repro.stream import fused as fused_mod
 from repro.stream import index as index_mod
+from repro.stream import telemetry as tele_mod
 from repro.stream.index import IndexState
 from repro.stream.ingest import StreamConfig, StreamingMAD, WaveformRing
+from repro.stream.telemetry import StreamTelemetry
 from repro.train import checkpoint as ckpt_mod
 
 
@@ -87,13 +90,13 @@ def pool_block_coeffs(blocks: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window",
                                              "saturation", "dup_tables",
-                                             "occ_limit"),
+                                             "occ_limit", "counters"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
                 window: int = 0, saturation: int = 0, dup_tables: int = 0,
-                occ_limit: int = 0
+                occ_limit: int = 0, counters: int = 0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One fixed-shape streaming step: binarize → sign → expire → guards →
     insert → query. (The *unfused* half of the PR-1/2 chain — kept as the
@@ -120,7 +123,7 @@ def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
     return index_mod.guarded_step(state, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
                                   dup_tables=dup_tables,
-                                  occ_limit=occ_limit)
+                                  occ_limit=occ_limit, counters=counters)
 
 
 def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
@@ -395,6 +398,12 @@ class RollingPairFilter:
         self.peak_rows = int(scalars["peak_rows"])
 
 
+# per-chunk wall samples retained for the percentile view; older samples
+# fold into wall_total_s, so host memory is O(1) on unbounded streams
+# (the pre-ISSUE-6 list grew with the stream)
+WALL_WINDOW = 1024
+
+
 @dataclasses.dataclass
 class StreamStats:
     chunks: int = 0
@@ -402,11 +411,17 @@ class StreamStats:
     samples: int = 0
     fingerprints: int = 0
     pairs: int = 0
-    chunk_wall_s: list = dataclasses.field(default_factory=list)
+    wall_total_s: float = 0.0
+    chunk_wall_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=WALL_WINDOW))
+
+    def record_wall(self, dt: float) -> None:
+        self.wall_total_s += dt
+        self.chunk_wall_s.append(dt)
 
     def summary(self) -> dict:
         wall = np.asarray(self.chunk_wall_s or [0.0])
-        total = float(wall.sum())
+        total = float(self.wall_total_s)
         return {
             "chunks": self.chunks,
             "blocks": self.blocks,
@@ -414,6 +429,7 @@ class StreamStats:
             "fingerprints": self.fingerprints,
             "pairs": self.pairs,
             "wall_s": round(total, 4),
+            # percentiles over the rolling window (recent behavior)
             "chunk_ms_p50": round(float(np.percentile(wall, 50)) * 1e3, 3),
             "chunk_ms_p95": round(float(np.percentile(wall, 95)) * 1e3, 3),
             "chunks_per_s": round(self.chunks / max(total, 1e-9), 2),
@@ -432,9 +448,12 @@ class StationStream:
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig,
                  med_mad: tuple[np.ndarray, np.ndarray] | None = None,
-                 external: bool = False):
+                 external: bool = False,
+                 telemetry: StreamTelemetry | None = None):
         self.cfg = cfg
         self.scfg = scfg
+        # detector-shared telemetry hub; a standalone station gets its own
+        self.telemetry = telemetry or StreamTelemetry(1)
         fcfg, lcfg = cfg.fingerprint, cfg.lsh
         self.external = external
         self.fused = scfg.fused
@@ -514,10 +533,11 @@ class StationStream:
         return self.filter.buf_rows if self.rolling else self._tri_rows
 
     def quality_summary(self) -> dict:
-        """Ingest reconciliation + in-dispatch guard counters (ISSUE 4)."""
-        out = dict(self.ring.quality)
-        out.update(self.qc)
-        return out
+        """Ingest reconciliation + in-dispatch guard counters (ISSUE 4),
+        assembled on the shared telemetry aggregation path (key set is
+        the stable contract; the pooled detector sums these per-station
+        dicts through the same ``merge_counts``)."""
+        return tele_mod.quality_view(self.ring.quality, self.qc)
 
     # -- ingestion -----------------------------------------------------------
 
@@ -527,13 +547,18 @@ class StationStream:
         the ring); returns pairs emitted by its ready blocks."""
         assert not self.external, \
             "pooled stations are pushed through their StreamingDetector"
+        self.telemetry.start()
         t0 = time.perf_counter()
         emitted = 0
-        for base_id, block, mask in self.ring.push(chunk, offset):
-            emitted += self._ingest_block(base_id, block, mask)
+        with self.telemetry.tracer.span("ingest", station=self._pool_idx):
+            for base_id, block, mask in self.ring.push(chunk, offset):
+                emitted += self._ingest_block(base_id, block, mask)
+        n_samples = int(np.asarray(chunk).size)
         self.stats.chunks += 1
-        self.stats.samples += int(np.asarray(chunk).size)
-        self.stats.chunk_wall_s.append(time.perf_counter() - t0)
+        self.stats.samples += n_samples
+        wall = time.perf_counter() - t0
+        self.stats.record_wall(wall)
+        self.telemetry.record_chunk(self._pool_idx, wall, n_samples)
         return emitted
 
     def _flag_duplicates(self, base_id: int, block: np.ndarray,
@@ -648,6 +673,9 @@ class StationStream:
         # exact dup flags); qc[0] adds the in-dispatch dup_sig_tables
         # suppressions so the superset invariant holds either way
         self.qc["suppressed_fingerprints"] += int(n_masked) + int(qc[0])
+        # the telemetry tail of the vector (pairs emitted, device-masked
+        # fingerprints, collision counts) mirrors into registry counters
+        self.telemetry.record_step(self._pool_idx, qc)
 
     def _process(self, base_id: int, *, block: np.ndarray | None = None,
                  coeffs: jax.Array | None = None,
@@ -667,39 +695,55 @@ class StationStream:
         sat = self.scfg.saturation_limit
         dup = self.scfg.dup_sig_tables
         occ = self.scfg.occ_limit
+        ctr = 1 if self.scfg.telemetry else 0
         n = self.scfg.block_fingerprints
         vmask = (np.ones(n, bool) if valid is None
                  else np.asarray(valid, bool))
         if n_adv is None:
             n_adv = n
-        if self.fused:
-            if valid is None and self._halo_ok:
-                adv = np.asarray(block, np.float32)[-self.ring.advance:]
-                self.fstate, pairs, qc = fused_mod.step_advance(
-                    self.fstate, jnp.asarray(adv), self.mappings,
-                    jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ)
+        wd = self.telemetry.watchdog
+        wd.step_start()
+        with self.telemetry.tracer.span("fused_step",
+                                        station=self._pool_idx):
+            if self.fused:
+                if valid is None and self._halo_ok:
+                    adv = np.asarray(block, np.float32)[-self.ring.advance:]
+                    self.fstate, pairs, qc = fused_mod.step_advance(
+                        self.fstate, jnp.asarray(adv), self.mappings,
+                        jnp.int32(base_id), fcfg, lcfg, window, sat, dup,
+                        occ, ctr)
+                else:
+                    self.fstate, pairs, qc = fused_mod.step_block(
+                        self.fstate, jnp.asarray(block), self.mappings,
+                        jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
+                        window, sat, dup, occ, ctr)
+                    # a zero-padded tail leaves the device halo dirty and
+                    # the next block must re-seed through step_block; a
+                    # fully framed (gap-masked) block primes it clean
+                    self._halo_ok = valid is None or primed
             else:
-                self.fstate, pairs, qc = fused_mod.step_block(
-                    self.fstate, jnp.asarray(block), self.mappings,
+                if coeffs is None:
+                    coeffs = block_coeffs(jnp.asarray(block), fcfg)
+                med, mad = self._med_mad
+                self._state, pairs, qc = stream_step(
+                    self._state, coeffs, med, mad, self.mappings,
                     jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
-                    window, sat, dup, occ)
-                # a zero-padded tail leaves the device halo dirty and the
-                # next block must re-seed through step_block; a fully
-                # framed (gap-masked) block primes it like a clean one
-                self._halo_ok = valid is None or primed
-        else:
-            if coeffs is None:
-                coeffs = block_coeffs(jnp.asarray(block), fcfg)
-            med, mad = self._med_mad
-            self._state, pairs, qc = stream_step(
-                self._state, coeffs, med, mad, self.mappings,
-                jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg, window,
-                sat, dup, occ)
+                    window, sat, dup, occ, ctr)
+            # the np conversions block on the dispatch, so the watchdog
+            # step (and the fused-wall histogram) covers device time
+            # incl. sync
+            pairs_np = (np.asarray(pairs.idx1), np.asarray(pairs.idx2),
+                        np.asarray(pairs.sim), np.asarray(pairs.valid))
+            qc = np.asarray(qc)
+        self.telemetry.record_fused_wall(str(self._pool_idx), wd.step_end())
         self._absorb_qc(qc, n_adv - int(vmask[:n_adv].sum()))
-        return self._consume(
-            base_id, n_adv, int(vmask.sum()),
-            (np.asarray(pairs.idx1), np.asarray(pairs.idx2),
-             np.asarray(pairs.sim), np.asarray(pairs.valid)))
+        t_host = time.perf_counter()
+        with self.telemetry.tracer.span("host_tail",
+                                        station=self._pool_idx):
+            m = self._consume(base_id, n_adv, int(vmask.sum()), pairs_np)
+        self.telemetry.record_host_tail(self._pool_idx,
+                                        time.perf_counter() - t_host)
+        return m
 
     def _consume(self, base_id: int, n_adv: int, n_valid: int,
                  pairs_np: tuple[np.ndarray, ...]) -> int:
@@ -846,7 +890,8 @@ class StationStream:
                       "blocks": self.stats.blocks,
                       "samples": self.stats.samples,
                       "fingerprints": self.stats.fingerprints,
-                      "pairs": self.stats.pairs},
+                      "pairs": self.stats.pairs,
+                      "wall_total_s": self.stats.wall_total_s},
         }
         if self.stats_frozen:
             arrays["med"] = np.asarray(self._med_mad[0])
@@ -960,12 +1005,17 @@ class StationStream:
         self.processed_fp = int(extra["processed_fp"])
         self.peak_tri_rows = int(extra["peak_tri_rows"])
         s = extra["stats"]
+        wall = np.asarray(arrays["stats/chunk_wall_s"], np.float64)
         self.stats = StreamStats(
             chunks=int(s["chunks"]), blocks=int(s["blocks"]),
             samples=int(s["samples"]),
             fingerprints=int(s["fingerprints"]), pairs=int(s["pairs"]),
-            chunk_wall_s=np.asarray(arrays["stats/chunk_wall_s"],
-                                    np.float64).tolist())
+            # pre-ISSUE-6 snapshots carry the full per-chunk list and no
+            # running total: their window-truncated restore keeps the
+            # exact total via the stored sum
+            wall_total_s=float(s.get("wall_total_s", wall.sum())),
+            chunk_wall_s=collections.deque(wall.tolist(),
+                                           maxlen=WALL_WINDOW))
 
 
 class StreamingDetector:
@@ -992,8 +1042,10 @@ class StreamingDetector:
         self.scfg = scfg or StreamConfig()
         self.pooled = (self.scfg.fused and self.scfg.pooled
                        and n_stations >= 2)
+        self.telemetry = StreamTelemetry(n_stations)
         self.stations = [StationStream(cfg, self.scfg, med_mad=med_mad,
-                                       external=self.pooled)
+                                       external=self.pooled,
+                                       telemetry=self.telemetry)
                          for _ in range(n_stations)]
         self.pstate: fused_mod.FusedState | None = None
         self._halo_ok = False
@@ -1045,21 +1097,25 @@ class StreamingDetector:
 
     def _pool_push(self, chunk: np.ndarray, offset: int | None = None
                    ) -> int:
+        self.telemetry.start()
         t0 = time.perf_counter()
         per_st = [st.ring.push(chunk[i], offset)
                   for i, st in enumerate(self.stations)]
         emitted = 0
-        for k in range(len(per_st[0])):   # rings advance in lockstep
-            base_id = per_st[0][k][0]
-            blocks = np.stack([per_st[i][k][1]
-                               for i in range(len(self.stations))])
-            masks = [per_st[i][k][2] for i in range(len(self.stations))]
-            emitted += self._pool_ingest_block(base_id, blocks, masks)
+        with self.telemetry.tracer.span("ingest", station="pool"):
+            for k in range(len(per_st[0])):   # rings advance in lockstep
+                base_id = per_st[0][k][0]
+                blocks = np.stack([per_st[i][k][1]
+                                   for i in range(len(self.stations))])
+                masks = [per_st[i][k][2]
+                         for i in range(len(self.stations))]
+                emitted += self._pool_ingest_block(base_id, blocks, masks)
         wall = time.perf_counter() - t0
         for i, st in enumerate(self.stations):
             st.stats.chunks += 1
             st.stats.samples += int(chunk[i].size)
-            st.stats.chunk_wall_s.append(wall)  # stations share the dispatch
+            st.stats.record_wall(wall)  # stations share the dispatch
+            self.telemetry.record_chunk(i, wall, int(chunk[i].size))
         return emitted
 
     def _pool_ingest_block(self, base_id: int, blocks: np.ndarray,
@@ -1115,34 +1171,45 @@ class StreamingDetector:
         sat = self.scfg.saturation_limit
         dup = self.scfg.dup_sig_tables
         occ = self.scfg.occ_limit
+        ctr = 1 if self.scfg.telemetry else 0
         n = self.scfg.block_fingerprints
         s = len(self.stations)
         clean = masks is None or all(m is None for m in masks)
         if n_adv is None:
             n_adv = n
-        if clean and self._halo_ok and n_adv == n:
-            adv = blocks[:, -self.stations[0].ring.advance:]
-            self.pstate, pairs, qc = fused_mod.pool_step_advance(
-                self.pstate, jnp.asarray(adv), self.mappings,
-                jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ)
-            vm = np.ones((s, n), bool)
-        else:
-            vm = np.stack([
-                np.ones(n, bool) if (masks is None or masks[i] is None)
-                else np.asarray(masks[i], bool) for i in range(s)])
-            self.pstate, pairs, qc = fused_mod.pool_step_block(
-                self.pstate, jnp.asarray(blocks), self.mappings,
-                jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
-                sat, dup, occ)
-            self._halo_ok = clean or primed
-        i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
-        sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
-        qc = np.asarray(qc)
+        wd = self.telemetry.watchdog
+        wd.step_start()
+        with self.telemetry.tracer.span("fused_step", station="pool"):
+            if clean and self._halo_ok and n_adv == n:
+                adv = blocks[:, -self.stations[0].ring.advance:]
+                self.pstate, pairs, qc = fused_mod.pool_step_advance(
+                    self.pstate, jnp.asarray(adv), self.mappings,
+                    jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ,
+                    ctr)
+                vm = np.ones((s, n), bool)
+            else:
+                vm = np.stack([
+                    np.ones(n, bool) if (masks is None or masks[i] is None)
+                    else np.asarray(masks[i], bool) for i in range(s)])
+                self.pstate, pairs, qc = fused_mod.pool_step_block(
+                    self.pstate, jnp.asarray(blocks), self.mappings,
+                    jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
+                    sat, dup, occ, ctr)
+                self._halo_ok = clean or primed
+            i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
+            sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
+            qc = np.asarray(qc)
+        # one watchdog step per pooled dispatch (all stations share it)
+        self.telemetry.record_fused_wall("pool", wd.step_end())
+        t_host = time.perf_counter()
         emitted = 0
-        for i, st in enumerate(self.stations):
-            st._absorb_qc(qc[i], n_adv - int(vm[i, :n_adv].sum()))
-            emitted += st._consume(base_id, n_adv, int(vm[i].sum()),
-                                   (i1[i], i2[i], sim[i], pv[i]))
+        with self.telemetry.tracer.span("host_tail", station="pool"):
+            for i, st in enumerate(self.stations):
+                st._absorb_qc(qc[i], n_adv - int(vm[i, :n_adv].sum()))
+                emitted += st._consume(base_id, n_adv, int(vm[i].sum()),
+                                       (i1[i], i2[i], sim[i], pv[i]))
+        self.telemetry.record_host_tail("pool",
+                                        time.perf_counter() - t_host)
         return emitted
 
     def _pool_flush(self) -> int:
@@ -1285,12 +1352,19 @@ class StreamingDetector:
         return detections, station_events, stats
 
     def quality_summary(self) -> dict:
-        """Network-wide data-quality counters (summed over stations)."""
-        out: dict[str, int] = {}
-        for st in self.stations:
-            for k, v in st.quality_summary().items():
-                out[k] = out.get(k, 0) + int(v)
-        return out
+        """Network-wide data-quality counters — the per-station summaries
+        folded through the one shared aggregation path (same keys as
+        ``StationStream.quality_summary``)."""
+        return merge_counts(st.quality_summary() for st in self.stations)
+
+    def metrics_snapshot(self) -> dict:
+        """The single structured telemetry view of this detector (schema
+        ``stream-metrics/v1``): aggregate + per-station throughput, the
+        in-dispatch drop breakdown and rates, quality counters, wall-time
+        histograms, span totals, and watchdog state. Consumed by
+        ``serve_detect``, ``bench_stream``/``bench_e2e``, the examples,
+        and the tier-1 schema test."""
+        return tele_mod.metrics_snapshot(self)
 
     # -- snapshot / restore -------------------------------------------------
 
@@ -1317,6 +1391,7 @@ class StreamingDetector:
             if self.alerts else np.zeros((0, 4), np.int64))
         extra = {"n_stations": len(self.stations), "stations": st_extra,
                  "assoc_lo": self._assoc_lo,
+                 "telemetry": self.telemetry.snapshot(),
                  "scfg": {
                      "block_fingerprints": self.scfg.block_fingerprints,
                      "window_fingerprints": self.scfg.window_fingerprints,
@@ -1379,6 +1454,8 @@ class StreamingDetector:
                             np.int64).reshape(-1, 4)
         det.alerts = [alerts] if alerts.shape[0] else []
         det._assoc_lo = int(extra["assoc_lo"])
+        if "telemetry" in extra:    # pre-ISSUE-6 snapshots: fresh registry
+            det.telemetry.restore(extra["telemetry"])
         if det.rolling:
             det._polled_windows = sum(st.filter.windows_closed
                                       for st in det.stations)
@@ -1388,7 +1465,10 @@ class StreamingDetector:
 def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
                   n_chunks: int = 16, *, skip: int = 0,
                   warmup_chunks: int = 0, snapshot_every: int = 0,
-                  snapshot_dir: str | None = None) -> dict:
+                  snapshot_dir: str | None = None,
+                  metrics_every: int = 0,
+                  metrics_file: str | None = None,
+                  heartbeat=print) -> dict:
     """Push a trace through a detector in equal chunks — the one shared
     ingest loop behind serving, benchmarks, and examples.
 
@@ -1396,6 +1476,11 @@ def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
     (samples already ingested before a snapshot restore are not re-pushed;
     a partially-covered chunk is trimmed). ``warmup_chunks`` excludes the
     first chunks (trace compilation + stats freeze) from the timed span.
+    ``metrics_every`` > 0 turns on the live health surface: every N
+    pushed chunks a heartbeat line (real-time factor, throughput, drop
+    rates, quality counters) goes to ``heartbeat`` and, when
+    ``metrics_file`` is set, the Prometheus text exposition is rewritten
+    atomically at the same cadence (a scrape never sees a torn file).
     Returns {"chunks", "timed_chunks", "wall_s", "warmup_wall_s",
     "samples"}.
     """
@@ -1421,6 +1506,10 @@ def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
             samples += int(chunk.size)
         if snapshot_every and (ci + 1) % snapshot_every == 0:
             det.snapshot(snapshot_dir, step=ci + 1)
+        if metrics_every and pushed % metrics_every == 0:
+            heartbeat(det.telemetry.heartbeat_line(det))
+            if metrics_file:
+                det.telemetry.write_prometheus(metrics_file, det)
     t_end = time.perf_counter()
     if t_timed is None:
         t_timed = t_end

@@ -92,7 +92,7 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
                 wave: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array | None, fcfg: FingerprintConfig,
                 lcfg: LSHConfig, window: int, saturation: int = 0,
-                dup_tables: int = 0, occ_limit: int = 0
+                dup_tables: int = 0, occ_limit: int = 0, counters: int = 0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One station's block: fingerprint → hash → expire → guards →
     insert → query.
@@ -105,9 +105,9 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     quarantine, in-dispatch §6.5 occurrence limiter —
     ``index.guarded_step``) run inside this same traced program: with the
     knobs at 0 they compile away and the step is the pre-quality program
-    exactly. Returns the per-step quality counters ``qc =
-    [duplicates_suppressed, saturated_lookups, limited_pairs]`` alongside
-    pairs.
+    exactly. Returns the per-step counter vector ``qc`` (layout
+    ``index.QC_FIELDS``: guard counters + the ISSUE-6 telemetry counters,
+    the latter live only when ``counters`` is set) alongside pairs.
     """
     coeffs = fp_mod.coeffs_from_waveform(wave, fcfg)
     bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
@@ -118,11 +118,11 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     return index_mod.guarded_step(index, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
                                   dup_tables=dup_tables,
-                                  occ_limit=occ_limit)
+                                  occ_limit=occ_limit, counters=counters)
 
 
 _QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation",
-                    "dup_tables", "occ_limit")
+                    "dup_tables", "occ_limit", "counters")
 
 
 @functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
@@ -131,7 +131,7 @@ def step_advance(state: FusedState, new_samples: jax.Array,
                  mappings: jax.Array, base_id: jax.Array,
                  fcfg: FingerprintConfig, lcfg: LSHConfig,
                  window: int = 0, saturation: int = 0, dup_tables: int = 0,
-                 occ_limit: int = 0
+                 occ_limit: int = 0, counters: int = 0
                  ) -> tuple[FusedState, Pairs, jax.Array]:
     """Steady-state fused step: device halo + new samples → pairs.
 
@@ -143,7 +143,7 @@ def step_advance(state: FusedState, new_samples: jax.Array,
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, wave,
                                    mappings, base_id, None, fcfg, lcfg,
                                    window, saturation, dup_tables,
-                                   occ_limit)
+                                   occ_limit, counters)
     return FusedState(index=index, halo=wave[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -154,7 +154,7 @@ def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
                base_id: jax.Array, valid: jax.Array,
                fcfg: FingerprintConfig, lcfg: LSHConfig,
                window: int = 0, saturation: int = 0, dup_tables: int = 0,
-               occ_limit: int = 0
+               occ_limit: int = 0, counters: int = 0
                ) -> tuple[FusedState, Pairs, jax.Array]:
     """Re-seeding fused step: a whole framed block + fingerprint mask.
 
@@ -169,7 +169,7 @@ def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, block,
                                    mappings, base_id, valid, fcfg, lcfg,
                                    window, saturation, dup_tables,
-                                   occ_limit)
+                                   occ_limit, counters)
     return FusedState(index=index, halo=block[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -180,7 +180,8 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
                       mappings: jax.Array, base_id: jax.Array,
                       fcfg: FingerprintConfig, lcfg: LSHConfig,
                       window: int = 0, saturation: int = 0,
-                      dup_tables: int = 0, occ_limit: int = 0
+                      dup_tables: int = 0, occ_limit: int = 0,
+                      counters: int = 0
                       ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_advance`` over a station pool: state leaves and
     ``new_samples`` carry a leading (S,) axis; ids/base advance in
@@ -188,7 +189,8 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
     wave = jnp.concatenate([state.halo, new_samples], axis=-1)
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
-                             dup_tables=dup_tables, occ_limit=occ_limit)
+                             dup_tables=dup_tables, occ_limit=occ_limit,
+                             counters=counters)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None,
                                                None))(
         state.index, state.med, state.mad, wave, mappings, base_id, None)
@@ -202,14 +204,16 @@ def pool_step_block(state: FusedState, blocks: jax.Array,
                     mappings: jax.Array, base_id: jax.Array,
                     valid: jax.Array, fcfg: FingerprintConfig,
                     lcfg: LSHConfig, window: int = 0, saturation: int = 0,
-                    dup_tables: int = 0, occ_limit: int = 0
+                    dup_tables: int = 0, occ_limit: int = 0,
+                    counters: int = 0
                     ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_block`` over a station pool (blocks (S, block_samples),
     valid (S, block_fingerprints) — per-station gap masks differ when one
     station drops out while the others keep streaming)."""
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
-                             dup_tables=dup_tables, occ_limit=occ_limit)
+                             dup_tables=dup_tables, occ_limit=occ_limit,
+                             counters=counters)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
         state.index, state.med, state.mad, blocks, mappings, base_id, valid)
     return FusedState(index=index, halo=blocks[:, -state.halo.shape[-1]:],

@@ -35,6 +35,24 @@ from repro.core import lsh as lsh_mod
 from repro.core.lsh import INVALID, LSHConfig, Pairs, finalize_pairs
 from repro.utils import rank_in_run, run_lengths
 
+# Layout of the per-step quality/telemetry counter vector returned by
+# ``guarded_step`` (and therefore by every fused step entry). The first
+# three are the ISSUE-4/5 guard counters and are always live; the rest
+# are the ISSUE-6 telemetry extension, computed inside the same traced
+# program when ``counters`` is set and constant-folded to 0 otherwise.
+QC_FIELDS = (
+    "duplicate_fingerprints",    # fingerprints suppressed by the dup probe
+    "saturated_lookups",         # valid lookups landing in hot buckets
+    "limited_pairs",             # pairs dropped by the §6.5 occ ring
+    "pairs_emitted",             # finalized valid pairs leaving the step
+    "masked_fingerprints",       # fingerprints suppressed by the validity
+                                 # mask (gaps / dup samples / flush tails)
+    "raw_collisions",            # (table, slot) sig matches pre-guard —
+                                 # the §6.3 lookups-per-query skew signal
+    "quarantined_collisions",    # raw collisions killed by the bucket-
+                                 # saturation quarantine
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamIndexConfig:
@@ -146,10 +164,11 @@ def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
                       traffic=new_traffic, occ=state.occ, epoch=state.epoch)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "saturation"))
+@functools.partial(jax.jit, static_argnames=("cfg", "saturation", "counts"))
 def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
           cfg: LSHConfig, buckets: jax.Array | None = None,
-          qvalid: jax.Array | None = None, saturation: int = 0) -> Pairs:
+          qvalid: jax.Array | None = None, saturation: int = 0,
+          counts: int = 0):
     """Find stored partners of a signature batch → thresholded Pairs.
 
     Only partners with stored id < query id are emitted, so a batch that
@@ -166,6 +185,14 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     ``state.traffic``, which a sliding window decays (see ``expire``), so
     quarantined buckets recover once the offending channel is repaired.
     Both default off, leaving the traced program unchanged.
+
+    ``counts`` (static, telemetry) additionally returns
+    ``(pairs, [raw_collisions, quarantined_collisions])`` — the pre-guard
+    (table, slot) signature-match total (the §6.3 lookups-per-query skew
+    signal; dup-suppressed rows keep their real signatures so their
+    collisions are intentionally included) and the subset of it killed by
+    the saturation quarantine. Two reductions over masks the program
+    already materializes — no new dispatch, pair outputs untouched.
     """
     t, b, c = state.shape
     n = sigs.shape[0]
@@ -175,20 +202,29 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     def one_table(sig_tb, ids_tb, cur_tb, bkt, keys):
         occ_sig = sig_tb[bkt]                          # (N, C)
         occ_id = ids_tb[bkt]                           # (N, C)
-        hit = (occ_sig == keys[:, None]) & (occ_id != INVALID) \
+        raw = (occ_sig == keys[:, None]) & (occ_id != INVALID) \
             & (occ_id < qids[:, None])
+        hit = raw
+        n_quar = jnp.int32(0)
         if saturation > 0:
-            hit = hit & (cur_tb[bkt] <= jnp.int32(saturation))[:, None]
+            ok = (cur_tb[bkt] <= jnp.int32(saturation))[:, None]
+            hit = hit & ok
+            if counts:
+                n_quar = (raw & ~ok).sum(dtype=jnp.int32)
         if qvalid is not None:
             hit = hit & qvalid[:, None]
         lo = jnp.where(hit, occ_id, INVALID)
         hi = jnp.where(hit, qids[:, None], INVALID)
-        return lo, hi
+        n_raw = raw.sum(dtype=jnp.int32) if counts else jnp.int32(0)
+        return lo, hi, n_raw, n_quar
 
-    lo, hi = jax.vmap(one_table, in_axes=(0, 0, 0, 1, 1))(
+    lo, hi, n_raw, n_quar = jax.vmap(one_table, in_axes=(0, 0, 0, 1, 1))(
         state.sig, state.ids, state.traffic, buckets,
         sigs.astype(jnp.uint32))
-    return finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
+    pairs = finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
+    if not counts:
+        return pairs
+    return pairs, jnp.stack([n_raw.sum(), n_quar.sum()])
 
 
 @functools.partial(jax.jit, static_argnames=("half_life",))
@@ -337,7 +373,7 @@ def occurrence_limit_pairs(state: IndexState, sigs: jax.Array,
 def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
                  ids: jax.Array, valid: jax.Array | None, cfg: LSHConfig,
                  window: int, saturation: int = 0, dup_tables: int = 0,
-                 occ_limit: int = 0
+                 occ_limit: int = 0, counters: int = 0
                  ) -> tuple[IndexState, Pairs, jax.Array]:
     """expire → duplicate guard → insert → saturation-guarded query →
     occurrence limiter.
@@ -345,9 +381,15 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
     The one shared insert/query tail of EVERY detection path — the fused
     ``_chunk_core``, the unfused ``stream_step``, and the batch replay
     driver (``core.detect``) — so the guards are bit-identical in all of
-    them. Returns (state, pairs, qc) with ``qc = [duplicates_suppressed,
-    saturated_lookups, limited_pairs]`` (all 0 when the corresponding
-    knob is off — the program then matches the unguarded step exactly).
+    them. Returns (state, pairs, qc) where ``qc`` is the
+    ``len(QC_FIELDS)`` counter vector laid out by :data:`QC_FIELDS`: the
+    three guard counters (each 0 when the corresponding knob is off —
+    the program then matches the unguarded step exactly) followed by the
+    telemetry counters (pairs emitted, mask-suppressed fingerprints, raw
+    collisions, quarantined collisions), which are computed in the same
+    traced program when ``counters`` is set and constant 0 otherwise.
+    Counters never feed back into the pair outputs, so detections are
+    bit-identical with telemetry on or off (pinned).
 
     ``occ_limit`` > 0 enables the in-dispatch §6.5 occurrence limiter
     (``occurrence_limit_pairs``): per-fingerprint partner counts carried
@@ -387,13 +429,26 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
     qc_sat = (saturated_lookup_count(state, buckets, saturation,
                                      valid=ins_valid)
               if saturation > 0 else jnp.int32(0))
-    pairs = query(state, sigs, ids, cfg, buckets=buckets, qvalid=qvalid,
-                  saturation=saturation)
+    qc_raw = qc_quar = jnp.int32(0)
+    if counters:
+        pairs, qcounts = query(state, sigs, ids, cfg, buckets=buckets,
+                               qvalid=qvalid, saturation=saturation,
+                               counts=1)
+        qc_raw, qc_quar = qcounts[0], qcounts[1]
+    else:
+        pairs = query(state, sigs, ids, cfg, buckets=buckets, qvalid=qvalid,
+                      saturation=saturation)
     qc_occ = jnp.int32(0)
     if occ_limit > 0:
         state, pairs, qc_occ = occurrence_limit_pairs(
             state, sigs, buckets, ids, qvalid, cfg, pairs, occ_limit)
-    return state, pairs, jnp.stack([qc_dup, qc_sat, qc_occ])
+    qc_pairs = qc_masked = jnp.int32(0)
+    if counters:
+        qc_pairs = pairs.valid.sum(dtype=jnp.int32)
+        if valid is not None:
+            qc_masked = (~valid).sum(dtype=jnp.int32)
+    return state, pairs, jnp.stack([qc_dup, qc_sat, qc_occ, qc_pairs,
+                                    qc_masked, qc_raw, qc_quar])
 
 
 # ---------------------------------------------------------------------------

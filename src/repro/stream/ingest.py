@@ -135,6 +135,13 @@ class StreamConfig:
     dup_window_fingerprints: int = 0  # sample-exact repeat horizon
     dup_sig_tables: int = 0        # signature matches that flag a repeat
     occ_limit: int = 0             # in-dispatch §6.5 partner-count limiter
+    telemetry: bool = True         # in-dispatch step counters (ISSUE 6):
+                                   # the fused step also returns pairs-
+                                   # emitted / masked / collision counts,
+                                   # folded into the same traced program
+                                   # (no extra dispatch; detections are
+                                   # bit-identical on or off — pinned).
+                                   # False compiles the counters away.
 
     def __post_init__(self):
         if self.stats_warmup_blocks < 0:

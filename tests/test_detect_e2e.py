@@ -75,6 +75,11 @@ def test_unified_driver_matches_legacy_golden(dataset):
     det, events, times, stats = detect_events(dataset.waveforms, cfg,
                                               keep_pairs=True)
     pairs = stats.pop("_station_pairs")
+    # ISSUE-6 in-dispatch telemetry counters ride alongside the legacy
+    # stats; the golden pin covers the pre-telemetry key set
+    qc = {k: stats.pop(k) for k in list(stats)
+          if k == "drops" or k.endswith("_qc")}
+    assert qc["drops"]["pairs_emitted"] > 0  # counters actually ran
     assert stats == gold["stats"]
     rec = recall_against_truth(det, events, dataset, cfg.fingerprint)
     assert rec == gold["recall"]
@@ -85,8 +90,10 @@ def test_unified_driver_matches_legacy_golden(dataset):
                          np.asarray(p.sim)[v].tolist()))
         want = [tuple(t) for t in gold["station_pairs"][st]]
         assert got == want, (st, len(got), len(want))
-    # the replay attributed its stages (fused step once, to search_s)
+    # the replay attributed its stages via the span layer: the fused step
+    # is its own stage and search_s stays as a read-only alias of it
     assert times.search_s > 0 and times.total() > 0
+    assert times.fused_step_s == times.search_s
 
 
 def test_unified_driver_quality_knobs_in_batch(dataset):

@@ -369,7 +369,13 @@ def test_bench_scenario_schema(tmp_path, monkeypatch):
     assert point["schema"] == "bench-stream-scenario/v2"
     assert set(point) >= {"spurious_unguarded", "spurious_guarded",
                           "spurious_reduction", "clean_portion_recall",
-                          "guarded_chunks_per_s", "quality", "additive"}
+                          "guarded_chunks_per_s", "quality", "metrics",
+                          "additive"}
+    # the embedded telemetry snapshot (ISSUE 6) is the shared schema
+    m = point["metrics"]
+    assert m["schema"] == "stream-metrics/v1"
+    assert m["drops"]["pairs_emitted"] > 0
+    assert m["quality"] == point["quality"]
     assert point["spurious_reduction"] >= 10.0
     assert point["clean_portion_recall"] == 1.0
     # the ISSUE-5 additive-train acceptance rides in the same point

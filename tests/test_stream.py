@@ -919,7 +919,9 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     out = bench_e2e.main(["--quick"])
     assert out["schema"] == "bench-e2e/v2"
     assert set(out) >= {"config_hash", "backend", "step", "points",
-                        "offline_replay", "ratios"}
+                        "offline_replay", "ratios", "metrics"}
+    assert out["metrics"]["schema"] == "stream-metrics/v1"
+    assert out["metrics"]["stations"] == 4
     written = json.loads((tmp_path / "BENCH_e2e.json").read_text())
     assert written["config_hash"] == out["config_hash"]
     stations = sorted(p["stations"] for p in out["points"] if p["fused"])

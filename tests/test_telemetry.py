@@ -1,0 +1,418 @@
+"""Telemetry subsystem tests (ISSUE 6).
+
+Pins the observability contract end to end:
+
+  * ``repro.obsv`` primitives — registry counters/gauges/histograms,
+    snapshot/restore, Prometheus text exposition (parsed back by the
+    format guard), span tracer nesting + JSONL records;
+  * telemetry on/off **bit-parity** — the in-dispatch counter vector is
+    observation only: the same dirty trace streamed with
+    ``telemetry=False`` yields the identical pair set and quality
+    counters, with the counter tail compiled to zeros;
+  * device-vs-host **reconciliation** — the device's own step counters
+    (``step_<field>_total``) agree with the host-side accounting
+    (``StreamStats.pairs``, ``quality_summary``) on dirty scenarios;
+  * detector **snapshot/restore** carries the registry and watchdog EMA,
+    so a restored service resumes its counters instead of zeroing;
+  * ``metrics_snapshot`` schema (``stream-metrics/v1``) — the one
+    structured view serve_detect / bench_stream / bench_e2e embed;
+  * the ``StepWatchdog`` straggler path increments
+    ``straggler_steps_total`` while still honoring a caller's callback.
+"""
+import dataclasses
+import json
+import math
+import pathlib
+import re
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.fast_seismic import (smoke_config,
+                                        stream_dirty_smoke_config)
+from repro.core.synth import (ScenarioConfig, SynthConfig,
+                              make_scenario_dataset)
+from repro.obsv.metrics import (Histogram, MetricsRegistry, merge_counts,
+                                render_prometheus)
+from repro.obsv.spans import SpanTracer
+from repro.stream import (METRICS_SCHEMA, QC_FIELDS, StreamingDetector,
+                          metrics_snapshot)
+from repro.stream.telemetry import StreamTelemetry
+from repro.train.watchdog import StepWatchdog, WatchdogConfig
+
+ROOT = str(pathlib.Path(__file__).parent.parent)
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)             # the benchmarks package
+
+from benchmarks.common import frozen_smoke_stats as _frozen  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_labels_and_totals():
+    reg = MetricsRegistry()
+    reg.counter("pairs_total", station="0").inc(3)
+    reg.counter("pairs_total", station="1").inc(4)
+    reg.counter("pairs_total", station="0").inc()       # same instance
+    assert reg.counter("pairs_total", station="0").value == 4
+    assert reg.total("pairs_total") == 8
+    assert reg.total("absent_total") == 0
+    # set_total mirrors an external count and never goes backwards
+    c = reg.counter("quality_gaps_total")
+    c.set_total(7)
+    c.set_total(5)
+    assert c.value == 7
+    # one name, one kind
+    with pytest.raises(AssertionError):
+        reg.gauge("pairs_total")
+
+
+def test_gauge_point_in_time():
+    reg = MetricsRegistry()
+    g = reg.gauge("rtf")
+    g.set(3)
+    g.set(1.5)
+    assert reg.gauge("rtf").value == 1.5
+
+
+def test_histogram_buckets_summary_percentiles():
+    h = Histogram()
+    for v in [0.001] * 98 + [0.5, 1.0]:
+        h.record(v)
+    s = h.summary()
+    assert s["count"] == 100
+    assert s["sum"] == pytest.approx(98 * 0.001 + 1.5)
+    assert s["min"] == 0.001 and s["max"] == 1.0
+    # bucket-resolution percentiles: ≤ 2x overestimate, never below exact
+    assert 0.001 <= s["p50"] <= 0.002
+    assert 0.001 <= s["p95"] <= 0.002
+    # values clamp to the edge buckets instead of erroring
+    h.record(1e-12)
+    h.record(1e9)
+    assert h._bucket(1e-12) == 0
+    assert h._bucket(1e9) == Histogram.N_BUCKETS - 1
+    assert sum(h.counts) == h.count == 102
+    # empty histogram summarizes to zeros, not inf
+    assert Histogram().summary() == {"count": 0, "sum": 0.0, "min": 0.0,
+                                     "max": 0.0, "p50": 0.0, "p95": 0.0}
+
+
+def test_histogram_merged_across_labels():
+    reg = MetricsRegistry()
+    reg.histogram("wall_seconds", station="0").record(0.01)
+    reg.histogram("wall_seconds", station="1").record(0.04)
+    m = reg.histogram_merged("wall_seconds")
+    assert m.count == 2
+    assert m.total == pytest.approx(0.05)
+    assert m.vmin == 0.01 and m.vmax == 0.04
+
+
+def test_merge_counts_sums_and_order():
+    out = merge_counts([{"a": 1, "b": 2}, {"b": 3, "c": 4}])
+    assert out == {"a": 1, "b": 5, "c": 4}
+    assert list(out) == ["a", "b", "c"]      # first-seen key order
+
+
+def test_registry_snapshot_restore_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("pairs_total", station="0").inc(12)
+    reg.gauge("rtf").set(7.5)
+    reg.histogram("wall_seconds", station="0").record(0.02)
+    reg.histogram("empty_seconds")           # registered but never recorded
+    snap = reg.snapshot()
+    assert snap["schema"] == "metrics/v1"
+    json.dumps(snap)                         # JSON-able (rides checkpoints)
+    reg2 = MetricsRegistry()
+    reg2.restore(snap)
+    assert reg2.snapshot() == snap
+    assert reg2.render() == reg.render()
+    h = reg2.histogram("empty_seconds")
+    assert h.count == 0 and h.vmin == math.inf
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition format guard
+# ---------------------------------------------------------------------------
+
+_LINE = re.compile(r"^([a-zA-Z_][a-zA-Z0-9_]*)"
+                   r"(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""
+                   r"(,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})? (\S+)$")
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("pairs_total", station="0").inc(5)
+    reg.gauge("rtf").set(2.25)
+    h = reg.histogram("wall_seconds", station="0")
+    for v in (0.001, 0.002, 0.004, 1.0):
+        h.record(v)
+    text = render_prometheus(reg, namespace="repro")
+    lines = text.strip().split("\n")
+    # one TYPE comment per metric family, kinds as registered
+    types = {m.group(1): m.group(2) for ln in lines
+             if (m := re.match(r"# TYPE (\S+) (\S+)$", ln))}
+    assert types == {"repro_pairs_total": "counter", "repro_rtf": "gauge",
+                     "repro_wall_seconds": "histogram"}
+    samples = [ln for ln in lines if not ln.startswith("#")]
+    parsed = {}
+    for ln in samples:
+        m = _LINE.match(ln)
+        assert m, f"unparseable exposition line: {ln!r}"
+        float(m.group(4))                    # value is numeric
+        parsed[m.group(1) + (m.group(2) or "")] = float(m.group(4))
+    assert parsed['repro_pairs_total{station="0"}'] == 5
+    assert parsed["repro_rtf"] == 2.25
+    # histogram: cumulative non-decreasing buckets, +Inf == _count
+    buckets = [(ln, float(_LINE.match(ln).group(4))) for ln in samples
+               if ln.startswith("repro_wall_seconds_bucket")]
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts)
+    assert '+Inf' in buckets[-1][0]
+    assert buckets[-1][1] == 4
+    assert parsed['repro_wall_seconds_count{station="0"}'] == 4
+    assert parsed['repro_wall_seconds_sum{station="0"}'] == \
+        pytest.approx(1.007)
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_span_nesting_totals_and_jsonl(tmp_path):
+    clk = _FakeClock()
+    path = tmp_path / "spans.jsonl"
+    tr = SpanTracer(jsonl_path=str(path), clock=clk)
+    with tr.span("outer", station=0):
+        clk.t += 1.0
+        with tr.span("inner"):
+            clk.t += 0.25
+    with tr.span("inner"):
+        clk.t += 0.25
+    tr.close()
+    assert tr.total_s("outer") == pytest.approx(1.25)
+    assert tr.total_s("inner") == pytest.approx(0.5)
+    assert tr.total_s("absent") == 0.0
+    assert tr.summary() == {
+        "outer": {"count": 1, "total_s": pytest.approx(1.25)},
+        "inner": {"count": 2, "total_s": pytest.approx(0.5)}}
+    recs = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(recs) == 3                    # exit order: inner, outer, inner
+    assert recs[0]["path"] == "outer/inner" and recs[0]["depth"] == 1
+    assert recs[1]["path"] == "outer" and recs[1]["depth"] == 0
+    assert recs[1]["station"] == 0           # span attrs ride the record
+    assert recs[2]["path"] == "inner" and recs[2]["depth"] == 0
+    assert all(r["dur_s"] >= 0 and "ts" in r for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# watchdog integration
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_straggler_counts_and_callback_chain():
+    clk = _FakeClock()
+    seen = []
+    wd = StepWatchdog(WatchdogConfig(min_samples=2, straggler_factor=2.0,
+                                     hang_timeout_s=1000.0),
+                      on_straggler=seen.append, clock=clk)
+    tel = StreamTelemetry(1, watchdog=wd)    # chains, never replaces
+    for _ in range(5):                       # EMA settles at 0.1 s
+        wd.step_start()
+        clk.t += 0.1
+        wd.step_end()
+    assert tel.registry.total("straggler_steps_total") == 0
+    wd.step_start()
+    clk.t += 5.0                             # 50× EMA, below hang timeout
+    wd.step_end()
+    assert tel.registry.total("straggler_steps_total") == 1
+    assert len(seen) == 1                    # caller's policy still fired
+    assert seen[0]["reason"] == "straggler"
+    assert wd.events == seen
+
+
+# ---------------------------------------------------------------------------
+# streaming integration (dirty scenarios)
+# ---------------------------------------------------------------------------
+
+
+def _raw_pairs(st):
+    tri = (np.concatenate(st.triplets, axis=0) if st.triplets
+           else np.zeros((0, 3), np.int64))
+    return set(zip(tri[:, 0].tolist(), tri[:, 1].tolist()))
+
+
+def _stream(cfg, scfg, wf, med_mad, n_stations=1, n_chunks=10):
+    det = StreamingDetector(cfg, scfg, n_stations=n_stations,
+                            med_mad=med_mad)
+    wf = np.atleast_2d(np.asarray(wf, np.float32))
+    for chunk in np.array_split(wf, n_chunks, axis=1):
+        det.push(chunk if n_stations > 1 else chunk[0])
+    det.flush()
+    return [_raw_pairs(st) for st in det.stations], det
+
+
+def _base_synth(**over):
+    kw = dict(duration_s=600.0, n_stations=1, n_sources=2,
+              events_per_source=5, event_snr=3.0, seed=3)
+    kw.update(over)
+    return SynthConfig(**kw)
+
+
+def _dirty_scenario(**over):
+    kw = dict(base=_base_synth(), n_gaps=2, gap_dur_s=(2.0, 5.0),
+              glitch_stations=(0,), glitch_trains=1,
+              glitch_train_dur_s=150.0, seed=1)
+    kw.update(over)
+    return make_scenario_dataset(ScenarioConfig(**kw))
+
+
+def test_telemetry_off_bit_parity_on_dirty_trace():
+    """The counter tail is observation only: telemetry=False compiles it
+    away and the detections — pair set AND host quality counters — are
+    bit-identical on a gap+glitch trace."""
+    cfg = smoke_config()
+    scfg_on = stream_dirty_smoke_config()
+    assert scfg_on.telemetry                 # the production default
+    scfg_off = dataclasses.replace(scfg_on, telemetry=False)
+    scen = _dirty_scenario()
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    (on,), det_on = _stream(cfg, scfg_on, scen.waveforms[0], med_mad)
+    (off,), det_off = _stream(cfg, scfg_off, scen.waveforms[0], med_mad)
+    assert on == off
+    assert det_on.quality_summary() == det_off.quality_summary()
+    # with telemetry on, the full counter vector is live…
+    d_on = det_on.telemetry.drop_breakdown()
+    assert d_on["pairs_emitted"] > 0
+    assert d_on["masked_fingerprints"] > 0   # the gaps
+    assert d_on["raw_collisions"] >= d_on["pairs_emitted"]
+    # …with it off, the telemetry tail constant-folds to zero while the
+    # always-on guard fields keep counting
+    d_off = det_off.telemetry.drop_breakdown()
+    for name in ("pairs_emitted", "masked_fingerprints", "raw_collisions",
+                 "quarantined_collisions"):
+        assert d_off[name] == 0
+    for name in ("duplicate_fingerprints", "saturated_lookups",
+                 "limited_pairs"):
+        assert d_off[name] == d_on[name]
+
+
+def test_device_host_counter_reconciliation_pooled():
+    """The device's in-dispatch counters and the host-side accounting are
+    two independent views of the same stream — they must agree, per
+    station, on a dirty pooled run."""
+    cfg = smoke_config()
+    scfg = stream_dirty_smoke_config()
+    scen = _dirty_scenario(base=_base_synth(n_stations=2),
+                           glitch_stations=(1,))
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    _, det = _stream(cfg, scfg, scen.waveforms, med_mad, n_stations=2)
+    assert det.pooled
+    reg = det.telemetry.registry
+    drops = det.telemetry.drop_breakdown()
+    # device pairs_emitted == host StreamStats.pairs, station by station
+    for i, st in enumerate(det.stations):
+        dev = reg.counter("step_pairs_emitted_total", station=str(i)).value
+        assert dev == st.stats.pairs
+    assert drops["pairs_emitted"] == sum(st.stats.pairs
+                                         for st in det.stations)
+    # guard fields whose only source is the device vector surface
+    # identically in quality_summary…
+    q = det.quality_summary()
+    for name in ("saturated_lookups", "limited_pairs"):
+        assert drops[name] == q[name]
+    # …while duplicate_fingerprints also absorbs the host-side
+    # sample-exact guard, so the device view is a lower bound
+    assert drops["duplicate_fingerprints"] <= q["duplicate_fingerprints"]
+    assert drops["pairs_emitted"] > 0
+    assert drops["masked_fingerprints"] > 0  # the gaps masked in-dispatch
+    # rates are consistent with the breakdown they summarize
+    rates = det.telemetry.drop_rates()
+    denom = drops["pairs_emitted"] + drops["limited_pairs"]
+    assert rates["limited_pairs"] == \
+        pytest.approx(drops["limited_pairs"] / denom, abs=1e-6)
+    assert 0.0 <= rates["masked_fingerprints"] <= 1.0
+
+
+def test_detector_snapshot_restores_telemetry(tmp_path):
+    """A restored detector resumes its counters (and the watchdog EMA)
+    instead of zeroing the dashboards, and keeps counting on top."""
+    cfg = smoke_config()
+    scfg = stream_dirty_smoke_config()
+    scen = _dirty_scenario()
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    wf = np.atleast_2d(scen.waveforms[0])
+    chunks = np.array_split(wf, 10, axis=1)
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    for c in chunks[:6]:
+        det.push(c[0])
+    drops_mid = det.telemetry.drop_breakdown()
+    wd_mid = (det.telemetry.watchdog.ema, det.telemetry.watchdog.n)
+    det.snapshot(str(tmp_path))
+    det2, _ = StreamingDetector.restore(str(tmp_path), cfg, scfg)
+    assert det2.telemetry.drop_breakdown() == drops_mid
+    assert (det2.telemetry.watchdog.ema, det2.telemetry.watchdog.n) == wd_mid
+    assert det2.telemetry.uptime_s() > 0     # uptime carries over
+    for c in chunks[6:]:                     # counters keep growing
+        det2.push(c[0])
+    det2.flush()
+    drops_end = det2.telemetry.drop_breakdown()
+    assert drops_end["pairs_emitted"] >= drops_mid["pairs_emitted"]
+    assert drops_end["pairs_emitted"] == det2.stations[0].stats.pairs
+
+
+def test_metrics_snapshot_schema_and_prometheus_surface():
+    """``metrics_snapshot`` is the one structured view every consumer
+    (serve_detect, bench_stream, bench_e2e, examples) embeds — pin its
+    shape; and the Prometheus surface scrapes the same registry."""
+    cfg = smoke_config()
+    scfg = stream_dirty_smoke_config()
+    scen = _dirty_scenario()
+    med_mad = _frozen(cfg, scen.clean.waveforms[0])
+    _, det = _stream(cfg, scfg, scen.waveforms[0], med_mad)
+    m = det.metrics_snapshot()
+    m2 = metrics_snapshot(det)               # the method is the function
+    wall_keys = ("uptime_s", "rtf")          # live clock: not comparable
+    assert {k: v for k, v in m.items() if k not in wall_keys} == \
+        {k: v for k, v in m2.items() if k not in wall_keys}
+    json.dumps(m)                            # artifact-ready
+    assert m["schema"] == METRICS_SCHEMA == "stream-metrics/v1"
+    assert set(m) == {"schema", "stations", "uptime_s", "stream_s", "rtf",
+                      "stream", "per_station", "drops", "drop_rates",
+                      "quality", "histograms", "spans", "watchdog"}
+    assert m["stations"] == 1
+    assert set(m["drops"]) == set(QC_FIELDS)
+    assert m["quality"] == det.quality_summary()
+    assert len(m["per_station"]) == 1
+    ps = m["per_station"][0]
+    assert ps["station"] == 0 and "host_state_rows" in ps
+    assert set(m["histograms"]) == {"chunk_ingest_wall_seconds",
+                                    "fused_step_wall_seconds",
+                                    "host_tail_wall_seconds"}
+    assert m["histograms"]["fused_step_wall_seconds"]["count"] == \
+        m["watchdog"]["steps"] > 0
+    for name in ("ingest", "fused_step", "host_tail"):
+        assert m["spans"][name]["count"] > 0
+    assert m["stream"]["pairs"] == m["drops"]["pairs_emitted"]
+    # the scrape carries the same registry plus point-in-time gauges and
+    # the host quality counters, every line parseable
+    text = det.telemetry.prometheus(det)
+    for ln in text.strip().split("\n"):
+        assert ln.startswith("# TYPE ") or _LINE.match(ln), ln
+    assert 'repro_step_pairs_emitted_total{station="0"} ' \
+        f'{m["drops"]["pairs_emitted"]}' in text
+    assert "# TYPE repro_real_time_factor gauge" in text
+    assert 'repro_quality_suppressed_fingerprints_total{station="0"}' in text
+    assert 'repro_host_state_rows{station="0"}' in text
