@@ -2,7 +2,7 @@
 # repo root (the benchmarks package).
 PY := PYTHONPATH=src:. python
 
-.PHONY: test test-all bench bench-smoke bench-e2e
+.PHONY: test test-all bench bench-smoke bench-e2e bench-serve
 
 test:            ## tier-1 suite (what the driver verifies)
 	$(PY) -m pytest -x -q -m "not slow"
@@ -16,5 +16,8 @@ bench:           ## full benchmark suite (BENCH_*.json + csv lines)
 bench-e2e:       ## streaming hot-path benchmark only (BENCH_e2e.json)
 	$(PY) -m benchmarks.run --e2e
 
-bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream point
-	$(PY) -m benchmarks.run --e2e --quick --scenario
+bench-serve:     ## concurrent serving-tier benchmark (BENCH_serve.json)
+	$(PY) -m benchmarks.run --serve
+
+bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream + serve
+	$(PY) -m benchmarks.run --e2e --quick --scenario --serve

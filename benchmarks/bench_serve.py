@@ -1,0 +1,278 @@
+"""Serving-tier benchmark (ISSUE 7): BENCH_serve.json.
+
+Measures the concurrent query service built on the pooled fused hot path
+(``launch/serve_detect.ServeDetectEngine``) at the real-time latency
+configuration, the same regime as ``bench_e2e``:
+
+* **closed-loop load points**: N concurrent clients, each resubmitting a
+  fresh query window the moment its previous request completes, against
+  a corpus pool at 1 / 4 / 8 stations. Per point: sustained QPS, p50/p99
+  request latency with the admission-queue wait split out from in-slot
+  service time, and the shed rate at the bounded queue (overload answers
+  ``rejected`` immediately instead of queueing without bound).
+* **overload determinism**: a burst of B > max_queue submissions against
+  an idle engine must shed exactly B - max_queue — the admission bound
+  is a contract, not a heuristic (also pinned by ``tests/test_serve.py``).
+* **interleaved serving**: ingest and query ticks sharing one thread
+  (``ServeSession``) — corpus chunks keep growing the pool while
+  requests arrive spread over the stream, with the serving snapshot
+  refreshed at the configured cadence.
+
+Schema-stable output: ``BENCH_serve.json`` with ``schema:
+"bench-serve/v1"``, a config hash, and the detector's
+``metrics_snapshot()`` (whose ``serve`` section is fed by the engines
+through the shared telemetry registry). ``--quick`` shrinks the corpus
+and client rounds for the tier-1-safe smoke invocation
+(``make bench-smoke`` / the slow-marked pytest guard).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, frozen_smoke_stats
+from benchmarks.bench_e2e import config_hash
+from repro.configs.fast_seismic import (latency_config,
+                                        stream_latency_smoke_config)
+from repro.core.synth import SynthConfig, make_dataset
+from repro.launch.serve_detect import (QueryRequest, ServeDetectEngine,
+                                       ServeSession)
+from repro.stream.engine import StreamingDetector, ingest_chunks
+
+SCHEMA = "bench-serve/v1"
+
+STATIONS = (1, 4, 8)
+CLIENTS = (4, 16, 64)       # ≥3 concurrency levels per station count
+N_SLOTS = 4
+MAX_QUEUE = 8               # small enough that 64 clients shed
+
+
+def _windows(waveform: np.ndarray, n: int, win: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(11)
+    starts = rng.integers(0, waveform.size - win, size=n)
+    return [waveform[s: s + win] for s in starts]
+
+
+def closed_loop(eng: ServeDetectEngine, windows: list[np.ndarray],
+                clients: int, rounds: int) -> tuple[list, float]:
+    """N closed-loop clients: each resubmits the moment its in-flight
+    request completes (served *or* shed — a shed completes instantly),
+    until every client has issued ``rounds`` requests. Completions are
+    observed once per tick, so a shed client re-offers next tick against
+    a queue the tick just drained."""
+    reqs: list[QueryRequest] = []
+    inflight: list[QueryRequest] = [None] * clients
+    issued = [0] * clients
+
+    def launch(c: int) -> None:
+        r = QueryRequest(rid=len(reqs),
+                         window=windows[len(reqs) % len(windows)])
+        reqs.append(r)
+        issued[c] += 1
+        inflight[c] = r
+        eng.submit(r)
+
+    t0 = time.perf_counter()
+    for c in range(clients):    # the arrival burst
+        launch(c)
+    while True:
+        if eng.pending():
+            eng.tick()
+        relaunched = False
+        for c in range(clients):
+            if inflight[c].done and issued[c] < rounds:
+                launch(c)
+                relaunched = True
+        if not relaunched and not eng.pending():
+            break
+    return reqs, time.perf_counter() - t0
+
+
+def load_points(cfg, scfg, ds, med_mad, n_chunks: int, win: int,
+                rounds: int) -> tuple[list, dict]:
+    """The QPS/latency/shed grid: stations × concurrency levels."""
+    points = []
+    metrics = None
+    for s in STATIONS:
+        det = StreamingDetector(cfg, scfg, n_stations=s, med_mad=med_mad)
+        ingest_chunks(det, ds.waveforms[:s], n_chunks=n_chunks)
+        det.flush()
+        windows = _windows(ds.waveforms[0], 32, win)
+        warm = ServeDetectEngine.from_detector(det, n_slots=N_SLOTS,
+                                               max_queue=MAX_QUEUE)
+        warm.run([QueryRequest(rid=0, window=windows[0])])  # compile
+        for clients in CLIENTS:
+            eng = ServeDetectEngine.from_detector(
+                det, n_slots=N_SLOTS, max_queue=MAX_QUEUE)
+            reqs, wall = closed_loop(eng, windows, clients, rounds)
+            stats = eng.summary(reqs, wall)
+            point = {
+                "stations": s,
+                "clients": clients,
+                "slots": N_SLOTS,
+                "max_queue": MAX_QUEUE,
+                "requests": stats["requests"],
+                "served": stats["served"],
+                "shed": stats["shed"],
+                "shed_rate": round(
+                    stats["shed"] / max(stats["requests"], 1), 4),
+                "wall_s": stats["wall_s"],
+                "qps": stats["requests_per_s"],
+                "ticks": stats["ticks"],
+                "dispatches": stats["dispatches"],
+                "latency_ms": {"p50": stats["latency_ms_p50"],
+                               "p99": stats["latency_ms_p99"]},
+                "queue_wait_ms": {"p50": stats["queue_wait_ms_p50"],
+                                  "p99": stats["queue_wait_ms_p99"]},
+                "service_ms": {"p50": stats["service_ms_p50"],
+                               "p99": stats["service_ms_p99"]},
+            }
+            csv_line(f"serve.s{s}_c{clients}", wall * 1e6,
+                     f"qps={point['qps']} shed_rate={point['shed_rate']} "
+                     f"p99={point['latency_ms']['p99']}ms")
+            points.append(point)
+        if s == 4:      # flagship point carries the telemetry view
+            metrics = det.metrics_snapshot()
+    return points, metrics
+
+
+def overload(det, windows: list[np.ndarray], burst: int) -> dict:
+    """Deterministic shedding: an idle engine offered ``burst`` requests
+    before any tick accepts exactly ``max_queue`` and sheds the rest —
+    then serves everything it accepted."""
+    eng = ServeDetectEngine.from_detector(det, n_slots=N_SLOTS,
+                                          max_queue=MAX_QUEUE)
+    reqs = [QueryRequest(rid=i, window=windows[i % len(windows)])
+            for i in range(burst)]
+    for r in reqs:
+        eng.submit(r)
+    shed = sum(1 for r in reqs if r.outcome == "rejected")
+    eng.drain()
+    served = sum(1 for r in reqs if r.outcome == "served")
+    out = {
+        "burst": burst,
+        "max_queue": MAX_QUEUE,
+        "accepted": burst - shed,
+        "served": served,
+        "shed": shed,
+        "deterministic": shed == max(0, burst - MAX_QUEUE)
+        and served == min(burst, MAX_QUEUE),
+    }
+    csv_line("serve.overload", shed, f"burst={burst} "
+             f"deterministic={out['deterministic']}")
+    return out
+
+
+def interleaved_point(cfg, scfg, ds, med_mad, n_chunks: int, win: int,
+                      n_requests: int) -> dict:
+    """Ingest + serve on one thread: requests arrive spread over the
+    chunk stream and are answered against the refreshed pool snapshot."""
+    s = 4
+    det = StreamingDetector(cfg, scfg, n_stations=s, med_mad=med_mad)
+    eng = ServeDetectEngine(cfg, scfg, n_slots=N_SLOTS,
+                            max_queue=MAX_QUEUE, telemetry=det.telemetry)
+    session = ServeSession(det, eng, refresh_every_chunks=2)
+    windows = _windows(ds.waveforms[0], 32, win)
+    reqs = [QueryRequest(rid=i, window=windows[i % len(windows)])
+            for i in range(n_requests)]
+    arrival = [i * n_chunks // max(n_requests, 1) for i in range(n_requests)]
+    nxt = [0]
+
+    def on_chunk(ci: int) -> None:
+        while nxt[0] < len(reqs) and arrival[nxt[0]] <= ci:
+            session.submit(reqs[nxt[0]])
+            nxt[0] += 1
+        session.after_push()
+
+    t0 = time.perf_counter()
+    ingest_chunks(det, ds.waveforms[:s], n_chunks=n_chunks,
+                  on_chunk=on_chunk)
+    served_live = sum(1 for r in reqs if r.outcome == "served")
+    session.finish()
+    wall = time.perf_counter() - t0
+    stats = eng.summary(reqs, wall)
+    out = {
+        "stations": s,
+        "requests": n_requests,
+        "served": stats["served"],
+        "served_during_ingest": served_live,
+        "shed": stats["shed"],
+        "refreshes": session.refreshes,
+        "wall_s": round(wall, 3),
+        "qps": stats["requests_per_s"],
+        "latency_ms": {"p50": stats["latency_ms_p50"],
+                       "p99": stats["latency_ms_p99"]},
+        "queue_wait_ms": {"p50": stats["queue_wait_ms_p50"],
+                          "p99": stats["queue_wait_ms_p99"]},
+    }
+    csv_line("serve.interleaved", wall * 1e6,
+             f"served_live={served_live}/{n_requests} "
+             f"refreshes={session.refreshes}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-1-safe smoke run (short corpus, few rounds)")
+    ap.add_argument("--duration-s", type=float, default=0.0,
+                    help="override corpus length (0 = 120 normal/45 quick)")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="requests per closed-loop client (0 = 6/2 quick)")
+    args = ap.parse_args(argv)
+    duration = args.duration_s or (45.0 if args.quick else 120.0)
+    rounds = args.rounds or (2 if args.quick else 6)
+
+    cfg, scfg = latency_config(), stream_latency_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=duration, n_stations=8,
+                                  n_sources=2, events_per_source=4,
+                                  event_snr=3.0, seed=7))
+    med_mad = frozen_smoke_stats(cfg, ds.waveforms[0])
+    win = 8 * int(cfg.fingerprint.fs)       # 8 s → two blocks per request
+    n_chunks = max(4, int(ds.waveforms.shape[1]
+                          // (scfg.block_fingerprints
+                              * cfg.fingerprint.lag_samples) // 4))
+
+    points, metrics = load_points(cfg, scfg, ds, med_mad, n_chunks, win,
+                                  rounds)
+    det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=med_mad)
+    ingest_chunks(det, ds.waveforms[:1], n_chunks=n_chunks)
+    det.flush()
+    ovl = overload(det, _windows(ds.waveforms[0], 8, win),
+                   burst=MAX_QUEUE + 12)
+    inter = interleaved_point(cfg, scfg, ds, med_mad, n_chunks, win,
+                              n_requests=8 if args.quick else 24)
+
+    out = {
+        "schema": SCHEMA,
+        "config_hash": config_hash(cfg, scfg),
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "duration_s": duration,
+        "slots": N_SLOTS,
+        "max_queue": MAX_QUEUE,
+        "clients_levels": list(CLIENTS),
+        "points": points,
+        "overload": ovl,
+        "interleaved": inter,
+        "metrics": metrics,
+    }
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = os.path.join(out_dir, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    best = max(points, key=lambda p: p["qps"])
+    print(f"# wrote {path}")
+    print(f"# peak qps={best['qps']} at {best['stations']} stations / "
+          f"{best['clients']} clients; overload deterministic="
+          f"{ovl['deterministic']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,9 @@ Roofline reporting (from dry-run artifacts) appended when artifacts exist.
 ``--e2e`` runs only the streaming hot-path benchmark (BENCH_e2e.json);
 ``--quick`` shrinks it to the tier-1-safe smoke invocation
 (``make bench-smoke``). ``--scenario`` adds the dirty-stream robustness
-point (gap + glitch spurious suppression) to BENCH_stream.json.
+point (gap + glitch spurious suppression) to BENCH_stream.json, and
+``--serve`` the concurrent serving-tier benchmark (BENCH_serve.json:
+QPS / latency split / shed rate under closed-loop clients).
 """
 from __future__ import annotations
 
@@ -26,22 +28,30 @@ def main(argv=None) -> None:
     ap.add_argument("--scenario", action="store_true",
                     help="also record the dirty-stream robustness point "
                          "(BENCH_stream.json scenario key)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run the concurrent serving-tier benchmark "
+                         "(BENCH_serve.json)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
-    if args.e2e:
-        from benchmarks import bench_e2e
-        bench_e2e.main(["--quick"] if args.quick else [])
+    if args.e2e or args.serve:
+        if args.e2e:
+            from benchmarks import bench_e2e
+            bench_e2e.main(["--quick"] if args.quick else [])
         if args.scenario:
             from benchmarks import bench_stream
             bench_stream.main(["--scenario-only"])
+        if args.serve:
+            from benchmarks import bench_serve
+            bench_serve.main(["--quick"] if args.quick else [])
         print(f"# total bench time {time.time()-t0:.0f}s")
         return
 
     from benchmarks import (bench_alternatives, bench_bandpass, bench_e2e,
                             bench_factor_analysis, bench_lsh_params,
                             bench_mad_sampling, bench_occurrence_filter,
-                            bench_partitions, bench_scaling, bench_stream)
+                            bench_partitions, bench_scaling, bench_serve,
+                            bench_stream)
     # bench_stream / bench_e2e parse argv — hand them an explicit list so
     # the runner's own flags (--quick) never leak in via sys.argv; the
     # remaining mains take no arguments
@@ -58,6 +68,8 @@ def main(argv=None) -> None:
          lambda: bench_stream.main(["--scenario"])),
         ("stream_e2e(hot_path)",
          lambda: bench_e2e.main(["--quick"] if args.quick else [])),
+        ("serve(query_tier)",
+         lambda: bench_serve.main(["--quick"] if args.quick else [])),
     ]
     failures = 0
     for name, fn in suites:

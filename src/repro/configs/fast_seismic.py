@@ -209,6 +209,29 @@ def stream_latency_smoke_config() -> StreamConfig:
                         stats_warmup_blocks=4, reservoir_rows=512)
 
 
+def serve_config():
+    """Paper-scale serving tier (ISSUE 7): slots sized so one batched
+    ``_serve_step`` dispatch amortizes across a rack of concurrent
+    clients, with the admission queue bounded at ~2 s of queue wait at
+    the expected service rate — beyond it requests shed instead of
+    growing host state without bound. The serving pool refreshes every
+    ingest chunk (~9 min of stream per block at the paper lag), so a
+    served query never lags the corpus by more than one block.
+    """
+    from repro.launch.serve_detect import ServeConfig
+    return ServeConfig(n_slots=32, max_queue=1024, top_k=64,
+                       refresh_every_chunks=1)
+
+
+def serve_smoke_config():
+    """CPU-scale serving tier matching the smoke streaming configs: a
+    handful of slots and a queue bound small enough that the overload
+    tests/benches actually shed on smoke-sized bursts."""
+    from repro.launch.serve_detect import ServeConfig
+    return ServeConfig(n_slots=4, max_queue=8, top_k=32,
+                       refresh_every_chunks=4)
+
+
 # Dry-run shapes: (n_chunks, samples_per_chunk). ``station_year`` ≈ one
 # station-year of 100 Hz data (3.15e9 samples) in 512 shardable chunks.
 SHAPES = {

@@ -1,75 +1,97 @@
-"""Batched similarity-serving over a streaming LSH index pool.
+"""Concurrent, backpressured query serving over a streaming LSH index pool.
 
-The detection-side sibling of ``launch/serve.py``: a ``ServeEngine``-shaped
-slot/refill loop where requests are *query windows* of raw waveform
-("when did something like this happen?") answered against the per-station
-``StreamingIndex`` pool built by continuous ingestion. Each request's
-window is split into fingerprint blocks; every tick runs **one** jitted
-batched step that fingerprints each active slot once and queries it
-against *every* station's index (read-only — serving never mutates the
-pool), so concurrent requests share device dispatches exactly like decode
-slots share a decode step, and S stations cost one vmapped dispatch
-rather than S sequential queries (the ISSUE-3 index pool closing the
-ROADMAP "serving shares one station's index" gap). Matches come back as
-(station, corpus fingerprint id, collision count) triples.
+The detection-side sibling of ``launch/serve.py``, grown into a service
+tier (ISSUE 7): requests are *query windows* of raw waveform ("when did
+something like this happen?") answered against the per-station
+``StreamingIndex`` pool built by continuous ingestion. The tier has three
+layers:
+
+* **admission queue** (``ServeDetectEngine.submit``): a bounded FIFO in
+  front of the slots. Depth past ``max_queue`` load-sheds the request —
+  it completes immediately with ``outcome="rejected"`` instead of growing
+  host state without bound under overload. Every request carries
+  arrival-time accounting: queue wait (submit → slot admission) and
+  service time (admission → completion) are split so the latency
+  histograms say *where* time went.
+* **batched ticks** (``ServeDetectEngine.tick``): each tick admits queued
+  requests into free slots and runs **one** jitted ``_serve_step``
+  dispatch that fingerprints every active slot once and queries it
+  against *every* station's index (read-only — serving never mutates the
+  pool). Concurrent requests share device dispatches exactly like decode
+  slots share a decode step; S stations cost one vmapped dispatch, not S.
+  Idle ticks (no active slots) return without assembling a batch or
+  dispatching at all.
+* **interleaved ingestion** (``ServeSession``): the cooperative
+  single-process service loop — ingest chunks keep growing the corpus
+  while query ticks run between them, against a read-only
+  ``pool_serving_state()`` snapshot refreshed at a configurable cadence
+  (``refresh_every_chunks``; version-gated, so an unchanged detector
+  costs nothing). The shape is qseek's asyncio search loop without the
+  event loop: two duties, one thread, explicit yield points.
+
+Telemetry publishes through the PR-6 substrate, never ad-hoc counters:
+``serve_requests_total{outcome=accepted|shed|served}``, per-tick
+``serve_queue_depth``/``serve_active_slots`` gauges,
+``serve_{latency,queue_wait,service}_seconds`` histograms and
+``serve_state_refreshes_total`` all land in the detector's
+``repro.obsv`` registry, so the heartbeat, the Prometheus exposition and
+``metrics_snapshot()["serve"]`` carry the serving tier for free.
 
 Restartable service flags:
 
-  ``--stations N``        stations ingested and served (the pool's S axis).
-  ``--snapshot-every N``  checkpoint the ingesting detector (index pool,
-                          waveform rings, MAD reservoirs) every N chunks
-                          via ``train/checkpoint.py`` into
+  ``--stations N``        stations ingested and served (the pool's S
+                          axis). With ``--restore`` it must match the
+                          snapshot's pool width — a mismatched width is
+                          rejected up front instead of silently serving
+                          the wrong pool.
+  ``--snapshot-every N``  checkpoint the ingesting detector every N
+                          chunks via ``train/checkpoint.py`` into
                           ``--snapshot-dir``.
-  ``--restore``           instead of re-streaming the corpus from scratch,
-                          restore the latest snapshot from
-                          ``--snapshot-dir`` and ingest only the samples
-                          that arrived after it — a killed service resumes
-                          where it left off and serves the same pool.
-  ``--window-fp N``       sliding detection window: the jitted step expires
-                          index entries more than N fingerprints behind the
-                          newest id, bounding what queries can match.
-  ``--filter-window-fp N``  rolling occurrence-filter window: candidate
-                          pairs are retired per closed window, bounding
-                          host pair state for unbounded ingestion.
-  ``--occ-limit N``       in-dispatch §6.5 occurrence limiter: cap raw
-                          partner collisions per fingerprint inside the
-                          traced ingest step (suppresses additive glitch
-                          trains; the host rolling filter remains the
-                          exact reference). Sizes its ring to the
-                          sliding window (or the corpus when unwindowed).
+  ``--restore``           resume ingestion from the latest snapshot in
+                          ``--snapshot-dir`` (only post-snapshot samples
+                          re-ingest).
+  ``--window-fp N``       sliding detection window (index expiry).
+  ``--filter-window-fp N``  rolling occurrence-filter window.
+  ``--occ-limit N``       in-dispatch §6.5 partner-collision cap.
 
-Live health surface (ISSUE 6 — the telemetry subsystem's serving tier):
+Service-tier flags (ISSUE 7):
+
+  ``--slots N``           concurrent request slots per batched dispatch.
+  ``--max-queue N``       admission-queue bound; requests beyond it shed
+                          with ``outcome="rejected"``.
+  ``--interleave``        serve queries *while* ingesting (requests
+                          arrive spread over the stream) instead of the
+                          two-phase ingest-then-serve default.
+  ``--refresh-every N``   chunks between serving-state refreshes in
+                          interleaved mode.
+
+Live health surface (ISSUE 6):
 
   ``--metrics-every N``   every N ingested chunks, print a ``HEARTBEAT``
-                          JSON line (uptime, real-time factor, per-station
-                          fingerprint throughput, per-guard drop rates,
-                          data-quality counters, straggler steps) built
-                          from the detector's :class:`StreamTelemetry`.
-  ``--metrics-file P``    at the same cadence (and once after ingest),
-                          atomically rewrite ``P`` with the Prometheus
-                          text exposition of the metrics registry — point
-                          a scraper or ``watch cat`` at it.
-  ``--trace-jsonl P``     span tracing: append structured JSONL spans of
-                          the ingest path (ingest → fused_step →
-                          host_tail, nested) to ``P``.
-  ``--dirty``             ingest the fault-injected scenario stream (gaps
-                          + duplicated blocks + a repeating glitch train)
-                          through the quality-hardened config instead of
-                          the clean synth trace — the demo where drop
-                          rates and quality counters are non-zero.
+                          JSON line built from ``StreamTelemetry``.
+  ``--metrics-file P``    atomically rewrite ``P`` with the Prometheus
+                          text exposition — at the heartbeat cadence when
+                          ``--metrics-every`` is set, and always once
+                          after ingest (a bare ``--metrics-file`` does a
+                          final write instead of silently nothing).
+  ``--trace-jsonl P``     append structured JSONL spans of the ingest
+                          path to ``P``.
+  ``--dirty``             ingest the fault-injected scenario stream
+                          through the quality-hardened config.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
   PYTHONPATH=src python -m repro.launch.serve_detect \
+      --interleave --requests 16 --max-queue 8      # backpressured live
+  PYTHONPATH=src python -m repro.launch.serve_detect \
       --snapshot-every 4 --snapshot-dir /tmp/fast_snap     # then kill …
   PYTHONPATH=src python -m repro.launch.serve_detect \
       --restore --snapshot-dir /tmp/fast_snap              # … and resume
-  PYTHONPATH=src python -m repro.launch.serve_detect \
-      --dirty --metrics-every 4 --metrics-file /tmp/fast.prom
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import functools
 import json
 import time
@@ -90,6 +112,22 @@ from repro.stream import index as index_mod
 from repro.stream.engine import StreamingDetector, ingest_chunks
 from repro.stream.index import IndexState
 from repro.stream.ingest import StreamConfig
+from repro.stream.telemetry import StreamTelemetry
+
+# completed-request latency samples retained for exact percentiles; the
+# registry histograms keep the full-lifetime (bucketed) view, so the
+# engine's own memory stays O(1) on an unbounded request stream
+LATENCY_WINDOW = 65536
+
+
+@dataclass
+class ServeConfig:
+    """Serving-tier knobs (see ``configs.fast_seismic.serve_smoke_config``
+    / ``serve_config`` for the smoke and paper-scale instantiations)."""
+    n_slots: int = 4            # concurrent slots per batched dispatch
+    max_queue: int = 64         # admission bound; beyond it requests shed
+    top_k: int = 32             # matches returned per (station, block)
+    refresh_every_chunks: int = 4   # interleaved serving-state cadence
 
 
 @dataclass
@@ -99,11 +137,31 @@ class QueryRequest:
     matches: list = field(default_factory=list)  # (station, fp_id, sim)
     ticks: int = 0
     done: bool = False
+    outcome: str = "pending"      # pending | active | served | rejected
     t_submit: float = 0.0
+    t_admit: float = 0.0          # dequeued into a slot
     t_done: float = 0.0
 
     @property
+    def queue_wait_s(self) -> float:
+        """Submit → slot admission (0.0 while still queued or shed)."""
+        if self.t_admit <= 0.0:
+            return 0.0
+        return self.t_admit - self.t_submit
+
+    @property
+    def service_s(self) -> float:
+        """Slot admission → completion (0.0 while in flight)."""
+        if self.t_done <= 0.0 or self.t_admit <= 0.0:
+            return 0.0
+        return self.t_done - self.t_admit
+
+    @property
     def latency_s(self) -> float:
+        """Submit → completion; 0.0 for unfinished requests (an unset
+        ``t_done`` used to yield a negative wall-clock delta)."""
+        if self.t_done <= 0.0:
+            return 0.0
         return self.t_done - self.t_submit
 
 
@@ -142,31 +200,131 @@ def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
 
 
 class ServeDetectEngine:
-    """Static-slot continuous serving against a shared streaming index
-    pool: ``state``/``med``/``mad`` carry a leading station axis
-    (``StreamingDetector.pool_serving_state``)."""
+    """Admission queue + static slots + one batched dispatch per tick.
+
+    ``state``/``med``/``mad`` carry a leading station axis
+    (``StreamingDetector.pool_serving_state``). The state may start
+    ``None`` (interleaved serving before the detector's statistics
+    freeze): requests queue, and ticks are idle until the first
+    ``refresh``/``refresh_from`` installs a pool.
+    """
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig,
-                 state: IndexState, med_mad, n_slots: int = 4,
-                 top_k: int = 32):
+                 state: IndexState | None = None, med_mad=None,
+                 n_slots: int = 4, top_k: int = 32, max_queue: int = 64,
+                 telemetry: StreamTelemetry | None = None,
+                 clock=time.perf_counter):
         self.cfg = cfg
         self.scfg = scfg
-        self.state = state
-        self.med = jnp.asarray(med_mad[0])
-        self.mad = jnp.asarray(med_mad[1])
-        assert self.med.ndim == 2 and state.sig.ndim == 4, \
-            "serving state must be pooled (leading station axis)"
-        self.n_stations = self.med.shape[0]
+        self.telemetry = telemetry or StreamTelemetry(0)
+        self.clock = clock
+        self.state: IndexState | None = None
+        self.med = self.mad = None
+        self.n_stations = 0
+        self.serving_version = -1   # detector version the pool mirrors
         self.mappings = lsh_mod.hash_mappings(cfg.fingerprint.fp_dim,
                                               cfg.lsh)
         self.n_slots = n_slots
         self.top_k = top_k
+        self.max_queue = max_queue
         self.block_samples = cfg.fingerprint.block_samples(
             scfg.block_fingerprints)
+        # cached filler rows: idle slots never allocate per tick
+        self._zero_block = np.zeros(self.block_samples, np.float32)
+        self._zero_mask = np.zeros(scfg.block_fingerprints, bool)
         self.slot_req: list[QueryRequest | None] = [None] * n_slots
-        self.slot_blocks: list[list[np.ndarray]] = [[] for _ in
-                                                    range(n_slots)]
+        self.slot_blocks: list[list] = [[] for _ in range(n_slots)]
+        self.queue: collections.deque[QueryRequest] = collections.deque()
         self.ticks = 0
+        self.dispatches = 0
+        self.slot_ticks = 0         # Σ active slots over dispatches
+        self.submitted = self.served = self.shed = 0
+        self.lat = {k: collections.deque(maxlen=LATENCY_WINDOW)
+                    for k in ("queue_wait_s", "service_s", "latency_s")}
+        if state is not None:
+            self._install(state, med_mad)
+
+    @classmethod
+    def from_detector(cls, det: StreamingDetector, **kw
+                      ) -> "ServeDetectEngine":
+        """Engine over a detector's current pool, sharing its telemetry
+        registry (one health surface for ingest + serving)."""
+        eng = cls(det.cfg, det.scfg, telemetry=det.telemetry, **kw)
+        eng.refresh_from(det)
+        return eng
+
+    # -- serving state -------------------------------------------------------
+
+    def _install(self, state: IndexState, med_mad) -> None:
+        med = jnp.asarray(med_mad[0])
+        assert med.ndim == 2 and state.sig.ndim == 4, \
+            "serving state must be pooled (leading station axis)"
+        if self.n_stations and med.shape[0] != self.n_stations:
+            raise ValueError(
+                f"refresh changed the pool width: serving {self.n_stations}"
+                f" stations, refresh has {med.shape[0]}")
+        self.state = state
+        self.med = med
+        self.mad = jnp.asarray(med_mad[1])
+        self.n_stations = med.shape[0]
+
+    def refresh(self, state: IndexState, med_mad, version: int = -1) -> None:
+        """Install a new read-only pool snapshot (queries from the next
+        tick on see the grown corpus)."""
+        self._install(state, med_mad)
+        self.serving_version = version
+        self.telemetry.record_serve_refresh()
+
+    def refresh_from(self, det: StreamingDetector) -> bool:
+        """Version-gated refresh from an ingesting detector: a no-op
+        until its statistics freeze, and when no chunk arrived since the
+        pool snapshot this engine already serves."""
+        if not all(st.stats_frozen for st in det.stations):
+            return False
+        if det.serving_version == self.serving_version:
+            return False
+        state, med, mad = det.pool_serving_state()
+        self.refresh(state, (med, mad), version=det.serving_version)
+        return True
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: QueryRequest) -> bool:
+        """Admission control: enqueue, or load-shed past ``max_queue``.
+
+        A shed request completes immediately with ``outcome="rejected"``
+        — bounded queue depth is the overload contract (the service
+        answers *something* fast rather than queueing without bound).
+        """
+        now = self.clock()
+        req.t_submit = now
+        self.submitted += 1
+        if len(self.queue) >= self.max_queue:
+            req.done = True
+            req.outcome = "rejected"
+            req.t_done = now
+            self.shed += 1
+            self.telemetry.record_serve_admission(False)
+            return False
+        self.queue.append(req)
+        self.telemetry.record_serve_admission(True)
+        return True
+
+    def active(self) -> bool:
+        return any(r is not None for r in self.slot_req)
+
+    def pending(self) -> int:
+        """Requests not yet completed (queued + in slots)."""
+        return len(self.queue) + sum(r is not None for r in self.slot_req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req.t_admit = self.clock()
+                req.outcome = "active"
+                self.slot_req[slot] = req
+                self.slot_blocks[slot] = self._split_blocks(req.window)
 
     def _split_blocks(self, window: np.ndarray
                       ) -> list[tuple[np.ndarray, np.ndarray]]:
@@ -190,67 +348,174 @@ class ServeDetectEngine:
             start += adv
         return blocks
 
+    # -- the batched tick ----------------------------------------------------
+
+    def tick(self) -> int:
+        """One service tick: admit queued requests into free slots, run at
+        most ONE batched ``_serve_step`` dispatch over every active slot,
+        and complete requests whose last block was answered. Returns the
+        number of slots served; an idle tick (nothing active) returns 0
+        without assembling a batch or dispatching.
+        """
+        if self.state is not None:
+            self._admit()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        self.ticks += 1
+        self.telemetry.record_serve_tick(len(active), len(self.queue))
+        if not active:
+            return 0
+        batch = np.stack([
+            self.slot_blocks[s][0][0] if self.slot_req[s] is not None
+            else self._zero_block for s in range(self.n_slots)])
+        slot_valid = jnp.asarray(np.stack([
+            self.slot_blocks[s][0][1] if self.slot_req[s] is not None
+            else self._zero_mask for s in range(self.n_slots)]))
+        ids, sims = _serve_step(
+            self.state, jnp.asarray(batch), self.med, self.mad,
+            self.mappings, slot_valid, self.cfg.fingerprint,
+            self.cfg.lsh, self.top_k)
+        self.dispatches += 1
+        self.slot_ticks += len(active)
+        ids_h, sims_h = np.asarray(ids), np.asarray(sims)  # (S, slots, k)
+        for slot in active:
+            req = self.slot_req[slot]
+            for station in range(self.n_stations):
+                keep = sims_h[station, slot] > 0
+                req.matches.extend(
+                    (station, int(i), int(s))
+                    for i, s in zip(ids_h[station, slot][keep],
+                                    sims_h[station, slot][keep]))
+            req.ticks += 1
+            self.slot_blocks[slot].pop(0)
+            if not self.slot_blocks[slot]:
+                self._complete(slot)
+        return len(active)
+
+    def _complete(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.outcome = "served"
+        req.t_done = self.clock()
+        self.slot_req[slot] = None
+        self.served += 1
+        self.lat["queue_wait_s"].append(req.queue_wait_s)
+        self.lat["service_s"].append(req.service_s)
+        self.lat["latency_s"].append(req.latency_s)
+        self.telemetry.record_serve_done(req.queue_wait_s, req.service_s,
+                                         req.latency_s)
+
+    def drain(self) -> None:
+        """Tick until every admitted request completes."""
+        assert self.state is not None or not self.pending(), \
+            "cannot drain before a serving state is installed"
+        while self.pending():
+            self.tick()
+
+    # -- summaries -----------------------------------------------------------
+
     def run(self, requests: list[QueryRequest]) -> dict:
-        queue = list(requests)
-        for r in queue:
-            r.t_submit = time.perf_counter()
-        active = lambda: any(r is not None for r in self.slot_req)
-        t0 = time.perf_counter()
-        while queue or active():
-            for slot in range(self.n_slots):      # refill empty slots
-                if self.slot_req[slot] is None and queue:
-                    req = queue.pop(0)
-                    self.slot_req[slot] = req
-                    self.slot_blocks[slot] = self._split_blocks(req.window)
-            n_fp = self.scfg.block_fingerprints
-            batch = np.stack([
-                self.slot_blocks[s][0][0] if self.slot_req[s] is not None
-                else np.zeros(self.block_samples, np.float32)
-                for s in range(self.n_slots)])
-            slot_valid = jnp.asarray(np.stack([
-                self.slot_blocks[s][0][1] if self.slot_req[s] is not None
-                else np.zeros(n_fp, bool)
-                for s in range(self.n_slots)]))
-            ids, sims = _serve_step(
-                self.state, jnp.asarray(batch), self.med, self.mad,
-                self.mappings, slot_valid, self.cfg.fingerprint,
-                self.cfg.lsh, self.top_k)
-            self.ticks += 1
-            ids_h, sims_h = np.asarray(ids), np.asarray(sims)  # (S, slots, k)
-            for slot in range(self.n_slots):
-                req = self.slot_req[slot]
-                if req is None:
-                    continue
-                for station in range(self.n_stations):
-                    keep = sims_h[station, slot] > 0
-                    req.matches.extend(
-                        (station, int(i), int(s))
-                        for i, s in zip(ids_h[station, slot][keep],
-                                        sims_h[station, slot][keep]))
-                req.ticks += 1
-                self.slot_blocks[slot].pop(0)
-                if not self.slot_blocks[slot]:
-                    req.done = True
-                    req.t_done = time.perf_counter()
-                    self.slot_req[slot] = None
-        wall = time.perf_counter() - t0
-        lats = [r.latency_s for r in requests]
+        """Two-phase convenience path: submit everything at once (the
+        all-requests-arrive-together burst), drain, summarize."""
+        t0 = self.clock()
+        for r in requests:
+            self.submit(r)
+        self.drain()
+        return self.summary(requests, self.clock() - t0)
+
+    def summary(self, requests: list[QueryRequest], wall_s: float) -> dict:
+        served = [r for r in requests if r.outcome == "served"]
+
+        def pct(vals, q):
+            if not vals:        # empty request list / everything shed
+                return 0.0
+            return round(float(np.percentile(vals, q)) * 1e3, 2)
+
+        lats = [r.latency_s for r in served]
+        waits = [r.queue_wait_s for r in served]
+        svc = [r.service_s for r in served]
         return {
             "requests": len(requests),
+            "served": len(served),
+            "shed": sum(1 for r in requests if r.outcome == "rejected"),
             "stations": self.n_stations,
             "ticks": self.ticks,
-            "wall_s": round(wall, 3),
-            "requests_per_s": round(len(requests) / max(wall, 1e-9), 1),
-            "latency_ms_p50": round(float(np.percentile(lats, 50)) * 1e3, 1),
-            "latency_ms_p95": round(float(np.percentile(lats, 95)) * 1e3, 1),
-            "hit_requests": sum(1 for r in requests if r.matches),
+            "dispatches": self.dispatches,
+            "wall_s": round(wall_s, 3),
+            "requests_per_s": round(len(served) / max(wall_s, 1e-9), 1),
+            "latency_ms_p50": pct(lats, 50),
+            "latency_ms_p95": pct(lats, 95),
+            "latency_ms_p99": pct(lats, 99),
+            "queue_wait_ms_p50": pct(waits, 50),
+            "queue_wait_ms_p99": pct(waits, 99),
+            "service_ms_p50": pct(svc, 50),
+            "service_ms_p99": pct(svc, 99),
+            "hit_requests": sum(1 for r in served if r.matches),
         }
+
+
+class ServeSession:
+    """Cooperative ingest + serve loop (qseek's asyncio search-loop shape
+    on one thread): chunks keep growing the corpus while query ticks run
+    between them against a refreshed read-only pool snapshot.
+
+    ``after_push()`` is the per-chunk duty cycle — refresh the engine's
+    serving state at the configured cadence (version-gated; a no-op until
+    the detector's statistics freeze) and pump up to ``ticks_per_chunk``
+    query ticks. ``finish()`` flushes the detector, takes the final
+    refresh, and drains the queue.
+    """
+
+    def __init__(self, det: StreamingDetector, engine: ServeDetectEngine,
+                 refresh_every_chunks: int = 4, ticks_per_chunk: int = 2):
+        self.det = det
+        self.engine = engine
+        self.refresh_every_chunks = max(1, refresh_every_chunks)
+        self.ticks_per_chunk = ticks_per_chunk
+        self.chunks = 0
+        self.refreshes = 0
+
+    def submit(self, req: QueryRequest) -> bool:
+        return self.engine.submit(req)
+
+    def ingest(self, chunk: np.ndarray, offset: int | None = None) -> None:
+        self.det.push(chunk, offset)
+        self.after_push()
+
+    def after_push(self) -> None:
+        self.chunks += 1
+        if self.chunks % self.refresh_every_chunks == 0:
+            self.refreshes += int(self.engine.refresh_from(self.det))
+        self.pump(self.ticks_per_chunk)
+
+    def pump(self, max_ticks: int) -> int:
+        """Run up to ``max_ticks`` query ticks; stops early when nothing
+        is pending or no serving state exists yet."""
+        n = 0
+        while (n < max_ticks and self.engine.state is not None
+               and self.engine.pending()):
+            self.engine.tick()
+            n += 1
+        return n
+
+    def finish(self) -> None:
+        self.det.flush()
+        self.refreshes += int(self.engine.refresh_from(self.det))
+        self.engine.drain()
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission-queue bound (beyond it requests shed)")
+    ap.add_argument("--interleave", action="store_true",
+                    help="serve queries while ingesting (requests arrive "
+                         "spread over the stream) instead of after it")
+    ap.add_argument("--refresh-every", type=int, default=4,
+                    help="chunks between serving-state refreshes "
+                         "(interleaved mode)")
     ap.add_argument("--stations", type=int, default=2,
                     help="stations ingested + served (index pool S axis)")
     ap.add_argument("--duration-s", type=float, default=600.0)
@@ -321,6 +586,13 @@ def main(argv=None):
     skip = 0
     if args.restore:
         det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg)
+        if len(det.stations) != args.stations:
+            raise SystemExit(
+                f"--restore: the snapshot holds a {len(det.stations)}-"
+                f"station index pool but --stations {args.stations} was "
+                f"requested; the pool width is fixed at snapshot time — "
+                f"rerun with --stations {len(det.stations)} (or take a "
+                f"fresh snapshot at the new width)")
         skip = det.stations[0].ring.samples_in
         print(f"# restored step {step}: {skip} samples already ingested")
     else:
@@ -328,27 +600,6 @@ def main(argv=None):
     if args.trace_jsonl:
         from repro.obsv.spans import SpanTracer
         det.telemetry.tracer = SpanTracer(jsonl_path=args.trace_jsonl)
-    ingest_chunks(det, ingest_wf, n_chunks=16, skip=skip,
-                  snapshot_every=args.snapshot_every,
-                  snapshot_dir=args.snapshot_dir,
-                  metrics_every=args.metrics_every,
-                  metrics_file=args.metrics_file)
-    det.flush()
-    assert all(st.stats_frozen for st in det.stations), \
-        "ingest too short to freeze MAD statistics"
-    # data-quality reconciliation + guard counters (gaps spliced/dropped,
-    # duplicates suppressed, saturated buckets hit) — the operational view
-    # of how dirty the ingested telemetry was
-    quality = det.quality_summary()
-    print("# ingest quality " + json.dumps(quality))
-    if args.metrics_every:
-        # final post-flush heartbeat + a last exposition rewrite so the
-        # scrape file reflects the completed ingest
-        print(det.telemetry.heartbeat_line(det))
-        if args.metrics_file:
-            det.telemetry.write_prometheus(args.metrics_file, det)
-    det.telemetry.tracer.flush()
-    state, med, mad = det.pool_serving_state()
 
     # query windows centered on known event arrivals (+ random controls)
     wf = ds.waveforms[0]
@@ -363,9 +614,67 @@ def main(argv=None):
         lo = max(0, min(t0, wf.size - win))
         reqs.append(QueryRequest(rid=i, window=wf[lo: lo + win]))
 
-    eng = ServeDetectEngine(cfg, scfg, state, (med, mad),
-                            n_slots=args.slots)
-    stats = eng.run(reqs)
+    eng = ServeDetectEngine(cfg, scfg, n_slots=args.slots,
+                            max_queue=args.max_queue,
+                            telemetry=det.telemetry)
+    n_chunks = 16
+    t_serve = time.perf_counter()
+    if args.interleave:
+        # the service loop: requests arrive spread over ingestion and are
+        # answered against the refreshed pool while the corpus grows
+        session = ServeSession(det, eng,
+                               refresh_every_chunks=args.refresh_every)
+        arrival_chunk = [min(n_chunks - 1, i * n_chunks // max(
+            len(reqs), 1)) for i in range(len(reqs))]
+        next_req = [0]
+
+        def on_chunk(ci: int) -> None:
+            while (next_req[0] < len(reqs)
+                   and arrival_chunk[next_req[0]] <= ci):
+                session.submit(reqs[next_req[0]])
+                next_req[0] += 1
+            session.after_push()
+
+        ingest_chunks(det, ingest_wf, n_chunks=n_chunks, skip=skip,
+                      snapshot_every=args.snapshot_every,
+                      snapshot_dir=args.snapshot_dir,
+                      metrics_every=args.metrics_every,
+                      metrics_file=args.metrics_file,
+                      on_chunk=on_chunk)
+        for r in reqs[next_req[0]:]:
+            session.submit(r)
+        session.finish()
+    else:
+        ingest_chunks(det, ingest_wf, n_chunks=n_chunks, skip=skip,
+                      snapshot_every=args.snapshot_every,
+                      snapshot_dir=args.snapshot_dir,
+                      metrics_every=args.metrics_every,
+                      metrics_file=args.metrics_file)
+        det.flush()
+    assert all(st.stats_frozen for st in det.stations), \
+        "ingest too short to freeze MAD statistics"
+    # data-quality reconciliation + guard counters (gaps spliced/dropped,
+    # duplicates suppressed, saturated buckets hit) — the operational view
+    # of how dirty the ingested telemetry was
+    quality = det.quality_summary()
+    print("# ingest quality " + json.dumps(quality))
+    if args.metrics_every:
+        # final post-flush heartbeat so the log reflects the completed
+        # ingest
+        print(det.telemetry.heartbeat_line(det))
+    if args.metrics_file:
+        # the final exposition rewrite runs whenever a scrape file was
+        # asked for — a bare --metrics-file used to write nothing
+        det.telemetry.write_prometheus(args.metrics_file, det)
+    det.telemetry.tracer.flush()
+
+    if args.interleave:
+        stats = eng.summary(reqs, time.perf_counter() - t_serve)
+        stats["refreshes"] = int(eng.telemetry.registry.total(
+            "serve_state_refreshes_total"))
+    else:
+        eng.refresh_from(det)
+        stats = eng.run(reqs)
     assert all(r.done for r in reqs)
     stats["ingest_quality"] = quality
     if args.metrics_every:

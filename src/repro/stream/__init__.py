@@ -173,11 +173,50 @@ pair stream — never an extra dispatch, never a change to detections.
   ``stream.telemetry.StreamTelemetry`` (one per detector, shared by its
   stations).
 
-``launch/serve_detect.py`` wraps a shared index in a slot/refill request
-loop (the ``ServeEngine`` idiom) for concurrent query-window serving, with
-periodic snapshots (``--snapshot-every``), restart (``--restore``), and
-the live health surface above (``--metrics-every``, ``--metrics-file``,
-``--trace-jsonl``, ``--dirty``).
+Serving tier (ISSUE 7)
+----------------------
+
+``launch/serve_detect.py`` grows the slot/refill idiom into a
+concurrent, backpressured query service over the index pool; the flow
+per request is **admission queue → batched ``_serve_step`` → refresh
+cadence → shed path**:
+
+* **admission** (``ServeDetectEngine.submit``): a bounded FIFO in front
+  of the slots. Depth past ``max_queue`` load-sheds — the request
+  completes immediately with ``outcome="rejected"`` (the overload
+  contract: answer *something* fast instead of queueing without bound;
+  a burst of B > max_queue sheds exactly B − max_queue, pinned by
+  ``tests/test_serve.py``). Every request carries arrival-time
+  accounting: queue wait (submit → slot) and service time (slot →
+  done) are split in the latency records.
+* **batched ticks** (``ServeDetectEngine.tick``): each tick admits
+  queued requests into free slots and runs **one** jitted dispatch that
+  fingerprints all active slots once and queries every station's index
+  read-only — concurrent requests share device dispatches exactly like
+  decode slots share a decode step, and the answers are pinned
+  identical to sequential single-slot serving. Idle ticks (no active
+  slots) return without assembling a batch or dispatching.
+* **refresh cadence** (``refresh_from`` / ``ServeSession``): serving
+  runs against a *copied* ``pool_serving_state()`` snapshot (donation
+  safety), refreshed at a configured chunk cadence and gated on
+  ``StreamingDetector.serving_version`` so an unchanged corpus costs
+  nothing. ``ServeSession`` is the cooperative single-thread loop —
+  ingest chunks keep growing the pool while query ticks run between
+  them (``ingest_chunks(..., on_chunk=...)``), so the corpus grows
+  under live queries (``serve_detect --interleave``).
+* **telemetry**: the engine publishes through the shared PR-6 registry
+  (``serve_requests_total{outcome}``, queue-depth/slot-occupancy
+  gauges, queue-wait/service/latency histograms,
+  ``serve_state_refreshes_total``), surfaced in the heartbeat,
+  the Prometheus exposition, and ``metrics_snapshot()["serve"]``;
+  ``benchmarks/bench_serve.py`` records sustained QPS, the p50/p99
+  latency split, and shed rates under closed-loop concurrent clients
+  (``BENCH_serve.json``).
+
+Snapshots (``--snapshot-every``), restart (``--restore``, which
+validates the restored pool width against ``--stations``), and the live
+health surface (``--metrics-every``, ``--metrics-file``,
+``--trace-jsonl``, ``--dirty``) ride the same CLI.
 
 Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
 the jitted step expires index entries beyond a sliding detection window,

@@ -1059,6 +1059,10 @@ class StreamingDetector:
         self._emitted = np.zeros((0, 2), np.int64)  # alerted (dt, onset)
         self._assoc_lo = 0
         self._polled_windows = 0  # window closes seen by the last poll
+        # monotonic corpus version: bumps whenever ingestion may have
+        # changed the index pool, so a serving engine can gate its
+        # pool_serving_state() refreshes on "did anything arrive?"
+        self.serving_version = 0
 
     def push(self, chunk: np.ndarray, offset: int | None = None) -> int:
         """Ingest one network chunk; ``offset`` places it at an absolute
@@ -1080,6 +1084,7 @@ class StreamingDetector:
             new = self.poll_detections()
             if new.shape[0]:
                 self.alerts.append(new)
+        self.serving_version += 1
         return emitted
 
     # -- pooled stepping ----------------------------------------------------
@@ -1255,6 +1260,7 @@ class StreamingDetector:
 
     def flush(self) -> int:
         """Process buffered tails on every station (pool-aware)."""
+        self.serving_version += 1
         if self.pooled:
             return self._pool_flush()
         return sum(st.flush() for st in self.stations)
@@ -1468,7 +1474,7 @@ def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
                   snapshot_dir: str | None = None,
                   metrics_every: int = 0,
                   metrics_file: str | None = None,
-                  heartbeat=print) -> dict:
+                  heartbeat=print, on_chunk=None) -> dict:
     """Push a trace through a detector in equal chunks — the one shared
     ingest loop behind serving, benchmarks, and examples.
 
@@ -1481,6 +1487,9 @@ def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
     rates, quality counters) goes to ``heartbeat`` and, when
     ``metrics_file`` is set, the Prometheus text exposition is rewritten
     atomically at the same cadence (a scrape never sees a torn file).
+    ``on_chunk(ci)`` runs after each pushed chunk — the interleave hook
+    the serving tier uses to admit arrivals, refresh its pool snapshot,
+    and pump query ticks between ingest chunks (``ServeSession``).
     Returns {"chunks", "timed_chunks", "wall_s", "warmup_wall_s",
     "samples"}.
     """
@@ -1510,6 +1519,8 @@ def ingest_chunks(det: StreamingDetector, waveforms: np.ndarray,
             heartbeat(det.telemetry.heartbeat_line(det))
             if metrics_file:
                 det.telemetry.write_prometheus(metrics_file, det)
+        if on_chunk is not None:
+            on_chunk(ci)
     t_end = time.perf_counter()
     if t_timed is None:
         t_timed = t_end

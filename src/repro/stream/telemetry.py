@@ -25,6 +25,12 @@ detection hot path:
   dict (real-time factor, throughput, drop-rate breakdown, quality
   counters) and ``prometheus(det)`` the text exposition, both consumed by
   ``serve_detect --metrics-every/--metrics-file``.
+* **serving tier** (ISSUE 7) — ``ServeDetectEngine`` publishes through
+  the same registry via the ``record_serve_*`` hooks: admission outcomes
+  (``serve_requests_total{outcome=accepted|served|shed}``), per-tick
+  queue-depth/slot-occupancy gauges, and the queue-wait/service/latency
+  histogram split; ``serve_view()`` is the derived summary carried by
+  the heartbeat and ``metrics_snapshot``.
 
 The registry (and the watchdog's EMA) snapshot/restore alongside the
 detector, so a restored service resumes its counters instead of zeroing
@@ -103,6 +109,38 @@ class StreamTelemetry:
         self.registry.histogram("host_tail_wall_seconds",
                                 station=str(station)).record(wall_s)
 
+    # -- serving-tier hooks (called from ServeDetectEngine) ------------------
+
+    def record_serve_admission(self, accepted: bool) -> None:
+        """One admission decision: queued, or load-shed at the bound."""
+        outcome = "accepted" if accepted else "shed"
+        self.registry.counter("serve_requests_total", outcome=outcome).inc()
+        if not accepted:
+            self.registry.counter("serve_shed_total").inc()
+
+    def record_serve_tick(self, active_slots: int, queue_depth: int) -> None:
+        """One service tick: occupancy + backlog gauges, dispatch count
+        (idle ticks — zero active slots — don't dispatch)."""
+        self.registry.counter("serve_ticks_total").inc()
+        if active_slots:
+            self.registry.counter("serve_dispatches_total").inc()
+            self.registry.counter("serve_slot_ticks_total").inc(active_slots)
+        self.registry.gauge("serve_active_slots").set(active_slots)
+        self.registry.gauge("serve_queue_depth").set(queue_depth)
+
+    def record_serve_done(self, queue_wait_s: float, service_s: float,
+                          latency_s: float) -> None:
+        """One served request's arrival-time accounting: where the
+        latency went (admission-queue wait vs. in-slot service)."""
+        self.registry.counter("serve_requests_total", outcome="served").inc()
+        self.registry.histogram("serve_queue_wait_seconds").record(
+            queue_wait_s)
+        self.registry.histogram("serve_service_seconds").record(service_s)
+        self.registry.histogram("serve_latency_seconds").record(latency_s)
+
+    def record_serve_refresh(self) -> None:
+        self.registry.counter("serve_state_refreshes_total").inc()
+
     # -- derived views -------------------------------------------------------
 
     def drop_breakdown(self) -> dict:
@@ -123,6 +161,39 @@ class StreamTelemetry:
             "masked_fingerprints": round(
                 d["masked_fingerprints"]
                 / max(d["masked_fingerprints"] + emitted, 1), 6),
+        }
+
+    def serve_view(self) -> dict:
+        """Serving-tier summary from the registry: admission outcomes,
+        tick/dispatch counts, live occupancy gauges, and the (bucketed)
+        latency split. All-zero when no serving engine shares this hub.
+        """
+        reg = self.registry
+
+        def hist_ms(name):
+            h = reg.histogram_merged(name)
+            return {"count": h.count,
+                    "p50_ms": round(h.percentile(0.50) * 1e3, 3),
+                    "p95_ms": round(h.percentile(0.95) * 1e3, 3)}
+
+        def tot(name, **labels):
+            if labels:
+                return int(reg.counter(name, **labels).value)
+            return int(reg.total(name))
+
+        return {
+            "accepted": tot("serve_requests_total", outcome="accepted"),
+            "served": tot("serve_requests_total", outcome="served"),
+            "shed": tot("serve_requests_total", outcome="shed"),
+            "ticks": tot("serve_ticks_total"),
+            "dispatches": tot("serve_dispatches_total"),
+            "slot_ticks": tot("serve_slot_ticks_total"),
+            "refreshes": tot("serve_state_refreshes_total"),
+            "queue_depth": int(reg.gauge("serve_queue_depth").value),
+            "active_slots": int(reg.gauge("serve_active_slots").value),
+            "latency": hist_ms("serve_latency_seconds"),
+            "queue_wait": hist_ms("serve_queue_wait_seconds"),
+            "service": hist_ms("serve_service_seconds"),
         }
 
     def stream_seconds(self, det) -> float:
@@ -154,6 +225,7 @@ class StreamTelemetry:
                 for st in det.stations],
             "drop_rates": self.drop_rates(),
             "quality": det.quality_summary(),
+            "serve": self.serve_view(),
             "stragglers": int(self.registry.total("straggler_steps_total")),
         }
 
@@ -242,7 +314,10 @@ def metrics_snapshot(det) -> dict:
             name: reg.histogram_merged(name).summary()
             for name in ("chunk_ingest_wall_seconds",
                          "fused_step_wall_seconds",
-                         "host_tail_wall_seconds")},
+                         "host_tail_wall_seconds",
+                         "serve_latency_seconds",
+                         "serve_queue_wait_seconds")},
+        "serve": tel.serve_view(),
         "spans": tel.tracer.summary(),
         "watchdog": {"steps": tel.watchdog.n,
                      "stragglers": len(tel.watchdog.events)},

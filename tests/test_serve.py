@@ -1,0 +1,283 @@
+"""Serving-tier tests (ISSUE 7): the concurrent, backpressured query
+service over the pooled streaming index.
+
+Pins the tentpole semantics — batched ticks answer exactly what
+sequential single-slot serving answers, the admission bound sheds
+deterministically, idle ticks never dispatch — plus the three serving
+bugfixes (empty-run percentiles, unfinished-request latency, restore
+pool-width validation, bare ``--metrics-file``) and the interleaved
+ingest/serve session. A slow-marked guard mirrors the ``bench_e2e``
+pattern for ``BENCH_serve.json``.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.fast_seismic import (latency_config,
+                                        stream_latency_smoke_config)
+from repro.core.synth import SynthConfig, make_dataset
+from repro.launch import serve_detect
+from repro.launch.serve_detect import (QueryRequest, ServeDetectEngine,
+                                       ServeSession)
+from repro.stream.engine import StreamingDetector
+
+_CACHE = {}
+
+
+def _corpus():
+    """One ingested 2-station detector (latency config — tiny blocks)
+    shared by the engine tests; engines built from its *copied* serving
+    state never mutate it."""
+    if "det" not in _CACHE:
+        cfg, scfg = latency_config(), stream_latency_smoke_config()
+        ds = make_dataset(SynthConfig(duration_s=60.0, n_stations=2,
+                                      n_sources=2, events_per_source=4,
+                                      event_snr=3.0, seed=7))
+        det = StreamingDetector(cfg, scfg, n_stations=2)
+        for start in range(0, ds.waveforms.shape[1], 1000):
+            det.push(ds.waveforms[:, start: start + 1000])
+        det.flush()
+        assert all(st.stats_frozen for st in det.stations)
+        _CACHE.update(cfg=cfg, scfg=scfg, ds=ds, det=det,
+                      serving=det.pool_serving_state())
+    return _CACHE
+
+
+def _engine(n_slots=4, max_queue=64, **kw) -> ServeDetectEngine:
+    """Fresh engine (own telemetry registry) over the shared corpus."""
+    c = _corpus()
+    state, med, mad = c["serving"]
+    return ServeDetectEngine(c["cfg"], c["scfg"], state, (med, mad),
+                             n_slots=n_slots, max_queue=max_queue, **kw)
+
+
+def _requests(n, win_s=8.0, seed=5) -> list:
+    c = _corpus()
+    wf = c["ds"].waveforms[0]
+    win = int(win_s * c["cfg"].fingerprint.fs)
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, wf.size - win, size=n)
+    return [QueryRequest(rid=i, window=wf[s: s + win])
+            for i, s in enumerate(starts)]
+
+
+# ---------------------------------------------------------------------------
+# tentpole semantics
+# ---------------------------------------------------------------------------
+
+
+def test_batched_ticks_match_sequential_single_slot():
+    """Concurrent slots change the packing, never the answers: every
+    request returns the identical match set whether it shared a batched
+    dispatch with three neighbours or had the engine to itself."""
+    reqs_a = _requests(6)
+    reqs_b = _requests(6)
+    stats_a = _engine(n_slots=4).run(reqs_a)
+    stats_b = _engine(n_slots=1).run(reqs_b)
+    assert stats_a["served"] == stats_b["served"] == 6
+    for ra, rb in zip(reqs_a, reqs_b):
+        assert ra.outcome == rb.outcome == "served"
+        assert sorted(ra.matches) == sorted(rb.matches)
+    assert stats_a["hit_requests"] == stats_b["hit_requests"] >= 1
+    # 6 requests (one block each at this window) pack into 2 four-slot
+    # dispatches vs 6 single-slot dispatches
+    assert stats_a["dispatches"] < stats_b["dispatches"]
+
+
+def test_load_shedding_is_deterministic():
+    """The admission bound is a contract: a burst of B > max_queue
+    submissions sheds exactly B - max_queue, and everything accepted is
+    served (the queue never grows past the bound)."""
+    eng = _engine(n_slots=2, max_queue=3)
+    reqs = _requests(10)
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted.count(True) == 3 and accepted.count(False) == 7
+    shed = [r for r in reqs if r.outcome == "rejected"]
+    assert len(shed) == 7 and all(r.done for r in shed)
+    assert all(r.latency_s >= 0.0 for r in shed)        # completed at once
+    assert len(eng.queue) == 3                          # bounded, always
+    eng.drain()
+    assert sum(1 for r in reqs if r.outcome == "served") == 3
+    # the shared-registry view agrees
+    reg = eng.telemetry.registry
+    assert reg.total("serve_shed_total") == 7
+    assert reg.counter("serve_requests_total", outcome="served").value == 3
+    summary = eng.summary(reqs, 1.0)
+    assert summary["shed"] == 7 and summary["served"] == 3
+
+
+def test_idle_ticks_do_no_host_work(monkeypatch):
+    """A tick with no active slots must not assemble a batch or reach the
+    device dispatch at all."""
+    eng = _engine(n_slots=4)
+
+    def boom(*a, **k):
+        raise AssertionError("idle tick reached the device dispatch")
+
+    monkeypatch.setattr(serve_detect, "_serve_step", boom)
+    for _ in range(3):
+        assert eng.tick() == 0
+    assert eng.ticks == 3 and eng.dispatches == 0
+    reg = eng.telemetry.registry
+    assert reg.total("serve_ticks_total") == 3
+    assert reg.total("serve_dispatches_total") == 0
+
+
+def test_lazy_state_queues_until_first_refresh():
+    """An engine can start before the detector's statistics freeze:
+    requests queue, ticks stay idle, and the first version-gated refresh
+    unblocks serving."""
+    c = _corpus()
+    eng = ServeDetectEngine(c["cfg"], c["scfg"], n_slots=2, max_queue=8)
+    reqs = _requests(3)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.tick() == 0 and eng.pending() == 3       # idle: no state
+    assert eng.refresh_from(c["det"]) is True
+    assert eng.serving_version == c["det"].serving_version
+    assert eng.refresh_from(c["det"]) is False          # version-gated
+    eng.drain()
+    assert all(r.outcome == "served" for r in reqs)
+    assert eng.telemetry.registry.total("serve_state_refreshes_total") == 1
+
+
+def test_interleaved_session_serves_while_ingesting():
+    """The cooperative loop: corpus chunks and query ticks share one
+    thread, the pool snapshot refreshes mid-stream, and requests that
+    arrived early are answered against the grown corpus."""
+    c = _corpus()
+    cfg, scfg, ds = c["cfg"], c["scfg"], c["ds"]
+    det = StreamingDetector(cfg, scfg, n_stations=2)
+    eng = ServeDetectEngine(cfg, scfg, n_slots=2, max_queue=16,
+                            telemetry=det.telemetry)
+    session = ServeSession(det, eng, refresh_every_chunks=2)
+    reqs = _requests(6)
+    chunks = np.array_split(ds.waveforms, 12, axis=1)
+    for ci, chunk in enumerate(chunks):
+        if ci % 2 == 0 and reqs[ci // 2:]:
+            session.submit(reqs[ci // 2])
+        session.ingest(chunk)
+    served_live = sum(1 for r in reqs if r.outcome == "served")
+    session.finish()
+    assert all(r.done for r in reqs)
+    assert sum(1 for r in reqs if r.outcome == "served") == 6
+    assert session.refreshes >= 2            # pool grew under the engine
+    assert eng.serving_version == det.serving_version
+    assert served_live >= 1                  # answered while still ingesting
+    # queue wait vs service split is populated and consistent
+    for r in reqs:
+        assert r.latency_s >= r.service_s >= 0.0
+        assert abs(r.latency_s - (r.queue_wait_s + r.service_s)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes
+# ---------------------------------------------------------------------------
+
+
+def test_empty_request_list_summary():
+    """`run([])` used to crash in np.percentile over an empty list."""
+    eng = _engine(n_slots=2)
+    stats = eng.run([])
+    assert stats["requests"] == 0 and stats["served"] == 0
+    assert stats["latency_ms_p50"] == 0.0
+    assert stats["latency_ms_p99"] == 0.0
+
+
+def test_all_shed_summary_has_no_percentile_crash():
+    """Percentiles are over *served* requests only — an all-shed burst
+    (nothing served) must still summarize."""
+    eng = _engine(n_slots=2, max_queue=0)
+    reqs = _requests(4)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.summary(reqs, 1.0)
+    assert stats["shed"] == 4 and stats["served"] == 0
+    assert stats["latency_ms_p50"] == 0.0
+
+
+def test_unfinished_request_latency_is_guarded():
+    """`latency_s` used to return a negative number while a request was
+    in flight (t_done=0.0 minus a live t_submit)."""
+    r = QueryRequest(rid=0, window=np.zeros(16, np.float32))
+    r.t_submit = 123.456
+    assert r.latency_s == 0.0
+    assert r.queue_wait_s == 0.0 and r.service_s == 0.0
+    r.t_admit = 124.0
+    assert r.service_s == 0.0                # admitted but not done
+    r.t_done = 125.0
+    assert r.latency_s > 0.0 and r.service_s > 0.0
+
+
+def test_restore_validates_station_count(tmp_path):
+    """`--restore` with a `--stations` that contradicts the snapshot's
+    pool width must fail loudly instead of serving a mismatched pool."""
+    from repro.configs.fast_seismic import (smoke_config,
+                                            stream_smoke_config)
+    det = StreamingDetector(smoke_config(), stream_smoke_config(),
+                            n_stations=3)
+    det.snapshot(str(tmp_path), step=1)
+    with pytest.raises(SystemExit, match="3-station.*--stations 2"):
+        serve_detect.main(["--restore", "--snapshot-dir", str(tmp_path),
+                           "--stations", "2", "--duration-s", "400"])
+
+
+def test_metrics_file_written_without_metrics_every(tmp_path):
+    """A bare ``--metrics-file`` (no ``--metrics-every``) used to gate
+    the exposition rewrite on the heartbeat cadence and silently write
+    nothing; it now always does a final write."""
+    prom = tmp_path / "serve.prom"
+    stats = serve_detect.main(["--requests", "2", "--slots", "2",
+                               "--duration-s", "400",
+                               "--metrics-file", str(prom)])
+    assert stats["served"] == 2
+    text = prom.read_text()
+    assert "repro_chunks_total" in text
+    assert "repro_real_time_factor" in text
+
+
+# ---------------------------------------------------------------------------
+# bench guard (mirrors test_bench_e2e_smoke)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_bench_serve_schema(tmp_path, monkeypatch):
+    """``make bench-smoke`` contract for the serving tier: the quick
+    benchmark runs, emits a schema-stable BENCH_serve.json with QPS /
+    latency-split / shed-rate points at ≥3 concurrency levels per
+    station count, and overload sheds deterministically."""
+    import sys
+    root = str(pathlib.Path(__file__).parent.parent)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    from benchmarks import bench_serve
+    out = bench_serve.main(["--quick"])
+    assert out["schema"] == "bench-serve/v1"
+    assert set(out) >= {"config_hash", "backend", "points", "overload",
+                        "interleaved", "metrics"}
+    written = json.loads((tmp_path / "BENCH_serve.json").read_text())
+    assert written["config_hash"] == out["config_hash"]
+    assert sorted({p["stations"] for p in out["points"]}) == [1, 4, 8]
+    assert len(out["clients_levels"]) >= 3
+    for p in out["points"]:
+        assert {"qps", "shed_rate", "latency_ms", "queue_wait_ms",
+                "service_ms"} <= set(p)
+        assert {"p50", "p99"} <= set(p["latency_ms"])
+        assert {"p50", "p99"} <= set(p["queue_wait_ms"])
+        assert p["served"] + p["shed"] == p["requests"]
+    # every station count sees at least one overloaded level shedding
+    for s in (1, 4, 8):
+        assert any(p["shed_rate"] > 0 for p in out["points"]
+                   if p["stations"] == s)
+    assert out["overload"]["deterministic"] is True
+    assert out["overload"]["shed"] == \
+        out["overload"]["burst"] - out["overload"]["max_queue"]
+    inter = out["interleaved"]
+    assert inter["served"] + inter["shed"] == inter["requests"]
+    assert inter["refreshes"] >= 1
+    # the serving engines publish into the detector's telemetry hub
+    assert out["metrics"]["serve"]["served"] > 0
