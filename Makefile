@@ -2,7 +2,7 @@
 # repo root (the benchmarks package).
 PY := PYTHONPATH=src:. python
 
-.PHONY: test test-all bench bench-smoke bench-e2e bench-serve
+.PHONY: test test-all bench bench-smoke bench-e2e bench-serve bench-emit
 
 test:            ## tier-1 suite (what the driver verifies)
 	$(PY) -m pytest -x -q -m "not slow"
@@ -18,6 +18,9 @@ bench-e2e:       ## streaming hot-path benchmark only (BENCH_e2e.json)
 
 bench-serve:     ## concurrent serving-tier benchmark (BENCH_serve.json)
 	$(PY) -m benchmarks.run --serve
+
+bench-emit:      ## emission-compaction A/B only (BENCH_e2e.json emission key)
+	$(PY) -m benchmarks.bench_e2e --emit
 
 bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream + serve
 	$(PY) -m benchmarks.run --e2e --quick --scenario --serve

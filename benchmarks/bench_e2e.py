@@ -31,13 +31,25 @@ throughput), at three granularities:
   ``core/detect.py``), at 1/4/8 stations. Records batch blocks/sec and
   the legacy-vs-unified speedup (acceptance: unified ≥ legacy at 4
   stations on the quick run).
+* **emission** (ISSUE 8): the device-side pair-compaction A/B at the
+  paper-scale table count (t=100), compaction+verify on vs the dense
+  t × N × cap emission, at 1 / 4 / 8 stations. Every point records the
+  chunk-wall p50 *split* — fused device step vs host tail — plus the
+  device→host pair bytes per block, so the O(T·N·C) → O(P) emission-
+  pipe shrink is measured, not asserted. The stream is seeded with
+  grid-aligned repeating events (``common.seed_repeating_events``) so
+  every point emits real pairs; the v2 benchmark's streaming points all
+  recorded ``pairs: 0`` and never exercised the path they timed.
+  ``--emit`` refreshes only this section (``make bench-emit``).
 
-Schema-stable output: ``BENCH_e2e.json`` with ``schema: "bench-e2e/v2"``,
-a config hash, per-point chunks/sec, and the headline ratios
-(fused speedup vs the unfused chain; 4-/8-station pool wall vs
-1-station; unified-batch speedup vs the legacy loop). ``--quick``
-shrinks the stream for the tier-1-safe smoke invocation
-(``make bench-smoke`` / the slow-marked pytest guard).
+Schema-stable output: ``BENCH_e2e.json`` with ``schema: "bench-e2e/v3"``
+(v3: pairs > 0 on streaming points, per-point device-step/host-tail/
+transfer-bytes split, the ``emission`` A/B section), a config hash,
+per-point chunks/sec, and the headline ratios (fused speedup vs the
+unfused chain; 4-/8-station pool wall vs 1-station; unified-batch
+speedup vs the legacy loop; emission byte reduction + host-tail
+speedup). ``--quick`` shrinks the stream for the tier-1-safe smoke
+invocation (``make bench-smoke`` / the slow-marked pytest guard).
 """
 from __future__ import annotations
 
@@ -53,7 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_line, frozen_smoke_stats
+from benchmarks.common import (csv_line, frozen_smoke_stats,
+                               seed_repeating_events)
 from repro.configs.fast_seismic import (latency_config, smoke_config,
                                         stream_latency_smoke_config)
 from repro.core import align as A
@@ -66,10 +79,38 @@ from repro.stream import fused as FU
 from repro.stream import index as SI
 from repro.stream.engine import StreamingDetector
 
-SCHEMA = "bench-e2e/v2"
+SCHEMA = "bench-e2e/v3"
 
 # (stations, fused) points; (1, False) is the unfused e2e reference
 SPECS = [(1, True), (1, False), (4, True), (8, True)]
+
+
+def pair_bytes_per_block(lcfg, scfg) -> int:
+    """Device→host bytes one station's per-block pair emission costs.
+
+    Dense: t × block × cap slots of (idx1, idx2, sim) int32/float32 +
+    a valid byte = 13 B/slot. Compacted: ``max_pairs_per_block`` slots,
+    +4 B/slot for the exact-Jaccard channel when verify is on."""
+    if getattr(scfg, "max_pairs_per_block", 0) > 0:
+        per = 13 + (4 if scfg.verify_jaccard else 0)
+        return scfg.max_pairs_per_block * per
+    return (lcfg.n_tables * scfg.block_fingerprints
+            * scfg.index.bucket_cap) * 13
+
+
+def _wall_split(det) -> dict:
+    """p50 of the fused-dispatch and host-tail wall histograms the
+    detector's telemetry recorded over the run (warmup pushes included —
+    medians are robust to the handful of compile-adjacent outliers)."""
+    reg = det.telemetry.registry
+    return {
+        "device_step_ms_p50": round(
+            reg.histogram_merged("fused_step_wall_seconds")
+            .percentile(0.5) * 1e3, 4),
+        "host_tail_ms_p50": round(
+            reg.histogram_merged("host_tail_wall_seconds")
+            .percentile(0.5) * 1e3, 4),
+    }
 
 
 def config_hash(cfg, scfg) -> str:
@@ -269,16 +310,18 @@ def _wall(fn) -> float:
 # ---------------------------------------------------------------------------
 
 
-def interleaved_walls(cfg, scfg, ds, med_mad, n_chunks: int,
-                      warmup: int) -> tuple[dict, dict]:
+def interleaved_walls(cfg, scfg, wf, med_mad, n_chunks: int,
+                      warmup: int) -> tuple[dict, dict, dict]:
     """Per-spec median ``push`` wall, measured round-robin per chunk.
 
-    Also returns the flagship 4-station pooled detector's
-    ``metrics_snapshot()`` (ISSUE 6) — the structured telemetry view of
-    the timed stream, embedded in ``BENCH_e2e.json`` so a perf regression
-    comes with its drop/quality/wall-histogram context attached."""
+    Also returns each spec's device-step/host-tail wall split (from the
+    detector's own telemetry histograms) and the flagship 4-station
+    pooled detector's ``metrics_snapshot()`` (ISSUE 6) — the structured
+    telemetry view of the timed stream, embedded in ``BENCH_e2e.json``
+    so a perf regression comes with its drop/quality/wall-histogram
+    context attached."""
     dets = {k: _detector(cfg, scfg, k[0], k[1], med_mad) for k in SPECS}
-    split = {k: np.array_split(ds.waveforms[:k[0]], n_chunks, axis=1)
+    split = {k: np.array_split(wf[:k[0]], n_chunks, axis=1)
              for k in SPECS}
     for k, det in dets.items():
         for c in split[k][:warmup]:
@@ -290,10 +333,12 @@ def interleaved_walls(cfg, scfg, ds, med_mad, n_chunks: int,
             det.push(split[k][i])
             walls[k].append(time.perf_counter() - t0)
     metrics = dets[(4, True)].metrics_snapshot()
-    return {k: float(np.median(w)) for k, w in walls.items()}, metrics
+    splits = {k: _wall_split(det) for k, det in dets.items()}
+    return {k: float(np.median(w)) for k, w in walls.items()}, splits, \
+        metrics
 
 
-def memory_point(cfg, scfg, ds, med_mad, n_stations: int, fused: bool,
+def memory_point(cfg, scfg, wf, med_mad, n_stations: int, fused: bool,
                  n_chunks: int, warmup: int) -> dict:
     """Retained-bytes + host-peak pass for one point (untimed).
 
@@ -303,7 +348,7 @@ def memory_point(cfg, scfg, ds, med_mad, n_stations: int, fused: bool,
     delta on this point."""
     import gc
     det = _detector(cfg, scfg, n_stations, fused, med_mad)
-    chunks = np.array_split(ds.waveforms[:n_stations], n_chunks, axis=1)
+    chunks = np.array_split(wf[:n_stations], n_chunks, axis=1)
     tracemalloc.start()
     for c in chunks[:warmup]:
         det.push(c)
@@ -323,6 +368,96 @@ def memory_point(cfg, scfg, ds, med_mad, n_stations: int, fused: bool,
     }
 
 
+# ---------------------------------------------------------------------------
+# emission A/B: device-side compaction + verify vs the dense pipe (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def emission_points(duration_s: float) -> dict:
+    """Compaction on/off A/B at the paper-scale table count (t=100).
+
+    Same latency-regime fingerprints, LSH widened to t=100 (the §6.3
+    setting whose dense emission the compaction targets): one station's
+    dense pipe is 100 × 4 × 8 = 3 200 slots per block; compacted it is
+    ``max_pairs=128``. Both variants stream the same repeat-seeded
+    waveforms through fused pooled detectors at 1 / 4 / 8 stations,
+    interleaved per chunk (each sextet of detectors sees chunk k before
+    any sees k+1); every point records the chunk p50 plus its device-
+    step / host-tail split and the computed transfer bytes per block.
+    """
+    cfg = latency_config()
+    cfg = dataclasses.replace(
+        cfg, lsh=dataclasses.replace(cfg.lsh, n_tables=100))
+    base = stream_latency_smoke_config()
+    dense = dataclasses.replace(
+        base, index=dataclasses.replace(base.index, bucket_cap=8))
+    compact = dataclasses.replace(
+        dense, max_pairs_per_block=128, verify_jaccard=True,
+        index=dataclasses.replace(dense.index, bucket_cap=8,
+                                  pk_slots=8192))
+    ds = make_dataset(SynthConfig(duration_s=duration_s, n_stations=8,
+                                  n_sources=2, events_per_source=4,
+                                  event_snr=3.0, seed=7))
+    wf = seed_repeating_events(np.asarray(ds.waveforms),
+                               cfg.fingerprint.lag_samples)
+    med_mad = frozen_smoke_stats(cfg, wf[0])
+    n_chunks = int(wf.shape[1] // (dense.block_fingerprints
+                                   * cfg.fingerprint.lag_samples))
+    warmup = max(4, n_chunks // 10)
+
+    specs = [(s, v) for s in (1, 4, 8) for v in ("dense", "compact")]
+    scfgs = {"dense": dense, "compact": compact}
+    dets = {k: _detector(cfg, scfgs[k[1]], k[0], True, med_mad)
+            for k in specs}
+    split = {k: np.array_split(wf[:k[0]], n_chunks, axis=1) for k in specs}
+    for k, det in dets.items():
+        for c in split[k][:warmup]:
+            det.push(c)
+    walls = {k: [] for k in specs}
+    for i in range(warmup, n_chunks):
+        for k, det in dets.items():
+            t0 = time.perf_counter()
+            det.push(split[k][i])
+            walls[k].append(time.perf_counter() - t0)
+
+    points = []
+    for k in specs:
+        s, variant = k
+        det, scfg_v = dets[k], scfgs[variant]
+        point = {"stations": s, "variant": variant,
+                 "chunk_ms_p50": round(float(np.median(walls[k])) * 1e3, 4),
+                 "pairs": int(sum(st.stats.pairs for st in det.stations)),
+                 "overflow_pairs": int(det.telemetry.drop_breakdown()
+                                       .get("overflow_pairs", 0)),
+                 "pair_bytes_per_block":
+                     pair_bytes_per_block(cfg.lsh, scfg_v)}
+        point.update(_wall_split(det))
+        csv_line(f"e2e.emission_s{s}_{variant}",
+                 float(np.median(walls[k])) * 1e6,
+                 f"pairs={point['pairs']} "
+                 f"bytes/block={point['pair_bytes_per_block']} "
+                 f"host_tail_p50={point['host_tail_ms_p50']}ms")
+        points.append(point)
+
+    def pt(s, v):
+        return next(p for p in points if p["stations"] == s
+                    and p["variant"] == v)
+
+    return {
+        "duration_s": duration_s,
+        "n_tables": cfg.lsh.n_tables,
+        "block_fingerprints": dense.block_fingerprints,
+        "max_pairs_per_block": compact.max_pairs_per_block,
+        "points": points,
+        "pair_byte_reduction_t100": round(
+            pt(1, "dense")["pair_bytes_per_block"]
+            / pt(1, "compact")["pair_bytes_per_block"], 2),
+        "host_tail_speedup_8st": round(
+            pt(8, "dense")["host_tail_ms_p50"]
+            / max(pt(8, "compact")["host_tail_ms_p50"], 1e-6), 3),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -330,34 +465,70 @@ def main(argv=None):
     ap.add_argument("--duration-s", type=float, default=0.0,
                     help="override stream length (0 = 240 normal/60 quick)")
     ap.add_argument("--step-repeats", type=int, default=0)
+    ap.add_argument("--emit", action="store_true",
+                    help="refresh only the emission A/B section of an "
+                         "existing BENCH_e2e.json (make bench-emit)")
     args = ap.parse_args(argv)
     duration = args.duration_s or (60.0 if args.quick else 240.0)
     repeats = args.step_repeats or (50 if args.quick else 250)
+
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = os.path.join(out_dir, "BENCH_e2e.json")
+
+    if args.emit:
+        emission = emission_points(duration)
+        out = {"schema": SCHEMA}
+        if os.path.exists(path):
+            with open(path) as f:
+                out = json.load(f)
+            out["schema"] = SCHEMA
+        out["emission"] = emission
+        out.setdefault("ratios", {})
+        out["ratios"]["emission_pair_byte_reduction_t100"] = \
+            emission["pair_byte_reduction_t100"]
+        out["ratios"]["emission_host_tail_speedup_8st"] = \
+            emission["host_tail_speedup_8st"]
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {path} (emission section)")
+        print(f"# emission bytes/block t=100: "
+              f"{emission['pair_byte_reduction_t100']}x smaller; "
+              f"host tail @8st: {emission['host_tail_speedup_8st']}x")
+        return out
 
     cfg, scfg = latency_config(), stream_latency_smoke_config()
     ds = make_dataset(SynthConfig(duration_s=duration, n_stations=8,
                                   n_sources=2, events_per_source=4,
                                   event_snr=3.0, seed=7))
-    med_mad = frozen_smoke_stats(cfg, ds.waveforms[0])
+    # grid-aligned repeating events: streaming points emit real pairs,
+    # so the timed path includes actual emission/host-tail work (the v2
+    # points all recorded pairs: 0)
+    wf = seed_repeating_events(np.asarray(ds.waveforms),
+                               cfg.fingerprint.lag_samples)
+    med_mad = frozen_smoke_stats(cfg, wf[0])
 
     # one chunk per block advance: the per-arrival serving cadence
-    n_chunks = int(ds.waveforms.shape[1]
+    n_chunks = int(wf.shape[1]
                    // (scfg.block_fingerprints
                        * cfg.fingerprint.lag_samples))
     warmup = max(4, n_chunks // 10)
 
     step = step_points(cfg, scfg, repeats)
     replay = offline_replay_points(duration)
-    walls, metrics = interleaved_walls(cfg, scfg, ds, med_mad, n_chunks,
-                                       warmup)
+    emission = emission_points(duration)
+    walls, splits, metrics = interleaved_walls(cfg, scfg, wf, med_mad,
+                                               n_chunks, warmup)
     points = []
     for k in SPECS:
         n_stations, fused = k
         point = {"stations": n_stations, "fused": fused,
                  "chunks": n_chunks - warmup,
                  "chunk_ms_p50": round(walls[k] * 1e3, 4),
-                 "chunks_per_s": round(1.0 / max(walls[k], 1e-9), 2)}
-        point.update(memory_point(cfg, scfg, ds, med_mad, n_stations,
+                 "chunks_per_s": round(1.0 / max(walls[k], 1e-9), 2),
+                 "pair_bytes_per_block":
+                     pair_bytes_per_block(cfg.lsh, scfg)}
+        point.update(splits[k])
+        point.update(memory_point(cfg, scfg, wf, med_mad, n_stations,
                                   fused, n_chunks, warmup))
         csv_line(f"e2e.push_s{n_stations}_{'fused' if fused else 'unfused'}",
                  walls[k] * 1e6,
@@ -378,6 +549,10 @@ def main(argv=None):
             walls[(8, True)] / walls[(1, True)], 3),
         "offline_replay_speedup_vs_legacy_4st":
             replay["speedup_vs_legacy_4st"],
+        "emission_pair_byte_reduction_t100":
+            emission["pair_byte_reduction_t100"],
+        "emission_host_tail_speedup_8st":
+            emission["host_tail_speedup_8st"],
     }
     out = {
         "schema": SCHEMA,
@@ -388,11 +563,10 @@ def main(argv=None):
         "step": step,
         "points": points,
         "offline_replay": replay,
+        "emission": emission,
         "ratios": ratios,
         "metrics": metrics,
     }
-    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
-    path = os.path.join(out_dir, "BENCH_e2e.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {path}")
@@ -400,7 +574,8 @@ def main(argv=None):
           f"{ratios['fused_speedup_vs_unfused_chain']}x; "
           f"8-station pool wall: {ratios['pool_wall_x_8st_vs_1st']}x "
           f"1-station; offline replay vs legacy loop @4st: "
-          f"{replay['speedup_vs_legacy_4st']}x")
+          f"{replay['speedup_vs_legacy_4st']}x; emission pipe @t=100: "
+          f"{emission['pair_byte_reduction_t100']}x fewer bytes/block")
     return out
 
 

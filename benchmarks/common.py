@@ -94,6 +94,35 @@ def stream_smoke_dataset(duration_s: float = 600.0, n_stations: int = 1, *,
         events_per_source=events_per_source, event_snr=3.0, seed=seed))
 
 
+def seed_repeating_events(waveforms: np.ndarray, lag_samples: int, *,
+                          amp: float = 6.0, period_samples: int = 400,
+                          start_sample: int = 500) -> np.ndarray:
+    """Inject grid-aligned repeating bursts so pair emission is nonzero.
+
+    The synthetic sources place events at arbitrary sample offsets, but a
+    repeat only hash-collides when it lands at the same phase of the
+    fingerprint frame grid — at the tiny latency-benchmark fingerprints a
+    sub-lag misalignment shifts the whole spectral image, so the e2e
+    streaming benchmarks historically recorded ``pairs: 0`` and never
+    exercised the emission/host-tail path they claim to measure. This
+    adds the Figure-7 three-spike template at offsets snapped to
+    ``lag_samples``, on every station: sample-aligned repeats with
+    Jaccard high enough to pair under the latency LSH config. Returns a
+    seeded copy; period/start are in samples and both snap to the grid.
+    """
+    from repro.core.synth import _repeating_noise_template
+    wf = np.array(waveforms, np.float32, copy=True)
+    rng = np.random.default_rng(11)
+    tpl = _repeating_noise_template(
+        rng, SynthConfig(duration_s=1.0)) * amp
+    period = max(lag_samples, (period_samples // lag_samples) * lag_samples)
+    start = (start_sample // lag_samples) * lag_samples
+    for st in range(wf.shape[0]):
+        for i0 in range(start, wf.shape[1] - tpl.size, period):
+            wf[st, i0:i0 + tpl.size] += tpl
+    return wf
+
+
 def frozen_smoke_stats(cfg, waveform) -> tuple[np.ndarray, np.ndarray]:
     """Offline §5.2 median/MAD for a trace (pre-frozen detector stats, so
     benches measure the steady state rather than the warmup path)."""

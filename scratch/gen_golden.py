@@ -31,10 +31,15 @@ med_mad = F.mad_stats(F.coeffs_from_waveform(jnp.asarray(wf), fcfg), 1.0,
 med_mad = (np.asarray(med_mad[0]), np.asarray(med_mad[1]))
 
 
-def stream_pairs(mm):
+def stream_pairs(mm, compact=False):
     scfg = StreamConfig(block_fingerprints=64,
-                        index=StreamIndexConfig(n_buckets=2048, bucket_cap=8),
-                        stats_warmup_blocks=2)
+                        index=StreamIndexConfig(n_buckets=2048, bucket_cap=8,
+                                                pk_slots=4096)
+                        if compact else
+                        StreamIndexConfig(n_buckets=2048, bucket_cap=8),
+                        stats_warmup_blocks=2,
+                        max_pairs_per_block=512 if compact else 0,
+                        verify_jaccard=compact)
     det = StreamingDetector(cfg, scfg, n_stations=1, med_mad=mm)
     for chunk in np.array_split(wf, N_CHUNKS):
         det.push(chunk)
@@ -46,6 +51,11 @@ def stream_pairs(mm):
 
 two = stream_pairs(med_mad)
 self_ = stream_pairs(None)
+# ISSUE 8 guard: the golden pair set must be compaction-invariant — the
+# emission epilogue (compact + verify at the smoke knobs) may not change
+# the pairs this file pins
+assert stream_pairs(med_mad, compact=True) == two, \
+    "compacted emission diverged from dense — do not regenerate goldens"
 offs, twos, selfs = set(off), set(two), set(self_)
 r2 = len(offs & twos) / len(offs)
 rs = len(offs & selfs) / len(offs)

@@ -82,6 +82,25 @@ def main():
                          np.asarray(p.idx2)[v].tolist(),
                          np.asarray(p.sim)[v].tolist()))
         per_station.append([list(t) for t in tri])
+    # ISSUE 8 guard: the replay with the emission epilogue on (compaction
+    # sized above the true pair rate + exact-Jaccard verify) must still
+    # reproduce the legacy pair set this golden pins
+    import dataclasses
+    from repro.core.detect import detect_events, replay_config
+    scfg = replay_config(cfg.lsh)
+    scfg = dataclasses.replace(
+        scfg, max_pairs_per_block=4096, verify_jaccard=True,
+        index=dataclasses.replace(scfg.index, pk_slots=8192))
+    _, _, _, cstats = detect_events(ds.waveforms, cfg, scfg=scfg,
+                                    keep_pairs=True)
+    for st, p in enumerate(cstats.pop("_station_pairs")):
+        v = np.asarray(p.valid)
+        tri = sorted(zip(np.asarray(p.idx1)[v].tolist(),
+                         np.asarray(p.idx2)[v].tolist(),
+                         np.asarray(p.sim)[v].tolist()))
+        assert [list(t) for t in tri] == per_station[st], \
+            f"compacted replay diverged from legacy at station {st} — " \
+            "do not regenerate goldens"
     out = {
         "synth": SYNTH,
         "station_pairs": per_station,

@@ -78,10 +78,25 @@ def stream_config() -> StreamConfig:
     # (the paper's occurrence fraction applied to a day), with the
     # partner-count ring sized to the 3-day detection window; the host
     # rolling filter stays on as the exact §6.5 reference.
+    # Emission epilogue (ISSUE 8): the dense pair stream at this scale is
+    # t=100 × 256 × cap 8 ≈ 205k slots (~2.7 MB) per station per block,
+    # nearly all masked; max_pairs_per_block=4096 bounds the device→host
+    # pipe at ~50× fewer slots while sitting far above the occurrence-
+    # limited per-block pair budget (256 fingerprints × occ_limit would
+    # need a pathological block to overflow — and overflow is counted in
+    # the overflow_pairs QC field, so a saturated bound is visible, not
+    # silent). verify_jaccard keeps a packed-fingerprint ring spanning
+    # the 3-day window (129 600 rows × fp_dim/32 words ≈ 133 MB — ~2×
+    # the signature tables, the price of exact similarity) and scores
+    # every surviving candidate with exact Jaccard in the same dispatch;
+    # verify_min_jaccard=0.0 keeps the pair set identical to the dense
+    # path and just adds the true-similarity channel. verify_pallas is a
+    # deployment knob: flip it on TPU for the fused popcount kernel.
     return StreamConfig(block_fingerprints=256,
                         index=StreamIndexConfig(n_buckets=16384,
                                                 bucket_cap=8,
-                                                occ_slots=3 * day),
+                                                occ_slots=3 * day,
+                                                pk_slots=3 * day),
                         stats_warmup_blocks=2, reservoir_rows=4096,
                         window_fingerprints=3 * day,
                         filter_window_fingerprints=day,
@@ -89,7 +104,9 @@ def stream_config() -> StreamConfig:
                         max_gap_samples=360_000,
                         dup_window_fingerprints=day,
                         saturation_limit=200,
-                        occ_limit=day // 100)
+                        occ_limit=day // 100,
+                        max_pairs_per_block=4096,
+                        verify_jaccard=True)
 
 
 def stream_smoke_config() -> StreamConfig:
@@ -102,6 +119,28 @@ def stream_smoke_config() -> StreamConfig:
                         index=StreamIndexConfig(n_buckets=2048,
                                                 bucket_cap=8),
                         stats_warmup_blocks=2, reservoir_rows=1024)
+
+
+def stream_compact_smoke_config() -> StreamConfig:
+    """``stream_smoke_config`` + the ISSUE-8 emission epilogue.
+
+    Same index shape and warmup as the parity smoke config, with the
+    dense t=20 × 64 × cap 8 = 10 240-slot emission compacted to 512 and
+    every surviving candidate scored with exact Jaccard from a 4096-row
+    packed ring (covers the longest smoke trace; the smoke configs run
+    unwindowed, so the ring must span the whole stream). 512 sits well
+    above any smoke trace's real per-block pair count, so the pair set
+    is bit-identical to ``stream_smoke_config`` — the golden parity test
+    pins exactly that. ``verify_min_jaccard`` stays 0.0 here for the
+    same reason; thresholding tests set it explicitly.
+    """
+    return StreamConfig(block_fingerprints=64,
+                        index=StreamIndexConfig(n_buckets=2048,
+                                                bucket_cap=8,
+                                                pk_slots=4096),
+                        stats_warmup_blocks=2, reservoir_rows=1024,
+                        max_pairs_per_block=512,
+                        verify_jaccard=True)
 
 
 def stream_deferred_smoke_config() -> StreamConfig:

@@ -187,9 +187,14 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     # fused replay: ONE pooled dispatch per block for all S stations;
     # counters ride inside the same dispatch when telemetry is on
     ctr = 1 if getattr(scfg, "telemetry", True) else 0
+    mp = getattr(scfg, "max_pairs_per_block", 0)
+    ver = getattr(scfg, "verify_code", 0)
+    mj = getattr(scfg, "verify_min_jaccard", 0.0)
+    icfg = (scfg.effective_index(fcfg.fp_dim)
+            if hasattr(scfg, "effective_index") else scfg.index)
     qc_sum = np.zeros((n_stations, len(index_mod.QC_FIELDS)), np.int64)
     state = fused_mod.init_pool_state(
-        [index_mod.init_index(lcfg, scfg.index) for _ in range(n_stations)],
+        [index_mod.init_index(lcfg, icfg) for _ in range(n_stations)],
         fcfg.halo_samples, meds, mads)
     b = scfg.block_fingerprints
     bs = fcfg.block_samples(b)
@@ -207,9 +212,10 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
                 state, jnp.asarray(block), mappings, jnp.int32(base),
                 jnp.asarray(vmask), fcfg, lcfg, scfg.window_fingerprints,
                 scfg.saturation_limit, scfg.dup_sig_tables, scfg.occ_limit,
-                ctr)
-            i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
-            sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
+                ctr, mp, ver, mj)
+            # one transfer + one sync for the whole pooled step output
+            (i1, i2, sim, pv), qc = jax.device_get(
+                ((pairs.idx1, pairs.idx2, pairs.sim, pairs.valid), qc))
             qc_sum += np.asarray(qc, np.int64)
             for st in range(n_stations):
                 m = pv[st]

@@ -71,6 +71,34 @@ class Pairs:
         return self.valid.sum()
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class VerifiedPairs:
+    """Compacted pair emission with the exact-similarity verify channel.
+
+    Same masked-pair contract as ``Pairs`` (idx1 < idx2 where valid;
+    ``sim`` = number of hash tables matched — the paper's similarity
+    proxy), plus ``jac``: exact Jaccard similarity of the two bit-packed
+    fingerprints, scored in-dispatch from the index's packed ring
+    (ISSUE 8 verify epilogue; all-zero when verification is disabled).
+    The arrays are O(max_pairs_per_block), not O(t * N * cap) — this is
+    the shape that actually crosses the device→host boundary.
+    """
+
+    idx1: jax.Array
+    idx2: jax.Array
+    sim: jax.Array
+    jac: jax.Array
+    valid: jax.Array
+
+    @property
+    def dt(self) -> jax.Array:
+        return jnp.where(self.valid, self.idx2 - self.idx1, INVALID)
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+
 # ---------------------------------------------------------------------------
 # hash mappings + signatures (§6.1–6.2)
 # ---------------------------------------------------------------------------

@@ -165,10 +165,12 @@ class QueryRequest:
         return self.t_done - self.t_submit
 
 
-@functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "top_k"))
+@functools.partial(jax.jit,
+                   static_argnames=("fcfg", "lcfg", "top_k", "max_pairs"))
 def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, slot_valid: jax.Array,
-                fcfg: FingerprintConfig, lcfg: LSHConfig, top_k: int = 32):
+                fcfg: FingerprintConfig, lcfg: LSHConfig, top_k: int = 32,
+                max_pairs: int = 0):
     """(n_slots, block_samples) slot blocks × (S,)-pooled index state →
     per-(station, slot) (ids, sims) match tables, each (S, n_slots, top_k).
 
@@ -178,6 +180,13 @@ def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
     vmap. Query fingerprints get ids above any corpus id, so the index's
     id-ordered emission returns every stored partner; invalid slots get
     filler signatures and match nothing.
+
+    ``max_pairs`` > 0 (ISSUE 8) compacts each slot's emission in-dispatch
+    before ranking: the ``top_k`` reduction then runs over ``max_pairs``
+    candidate rows instead of the dense t * N * C slot tensor. Sized
+    comfortably above the expected per-query match count (config default:
+    several × top_k × n_tables) the match tables are identical — overflow
+    past the bound drops lexicographically-largest candidates first.
     """
     coeffs = jax.vmap(lambda b: fp_mod.coeffs_from_waveform(b, fcfg))(blocks)
 
@@ -189,7 +198,8 @@ def _serve_step(state: IndexState, blocks: jax.Array, med: jax.Array,
             # distinct ids above every corpus id → each window fingerprint
             # pairs with all of its stored partners
             qids = jnp.int32(INVALID - 1 - n) + jnp.arange(n, dtype=jnp.int32)
-            pairs = index_mod.query(st_state, sigs, qids, lcfg)
+            pairs = index_mod.query(st_state, sigs, qids, lcfg,
+                                    max_pairs=max_pairs)
             sims = jnp.where(pairs.valid, pairs.sim, 0)
             top = jax.lax.top_k(sims, k=min(top_k, sims.shape[0]))[1]
             return pairs.idx1[top], sims[top]
@@ -226,6 +236,10 @@ class ServeDetectEngine:
                                               cfg.lsh)
         self.n_slots = n_slots
         self.top_k = top_k
+        # compacted slot queries (0 = dense): never below top_k, or the
+        # (S, slots, top_k) match-table shape itself would shrink
+        self.max_pairs = (0 if scfg.max_pairs_per_block == 0
+                          else max(scfg.max_pairs_per_block, top_k))
         self.max_queue = max_queue
         self.block_samples = cfg.fingerprint.block_samples(
             scfg.block_fingerprints)
@@ -374,7 +388,7 @@ class ServeDetectEngine:
         ids, sims = _serve_step(
             self.state, jnp.asarray(batch), self.med, self.mad,
             self.mappings, slot_valid, self.cfg.fingerprint,
-            self.cfg.lsh, self.top_k)
+            self.cfg.lsh, self.top_k, self.max_pairs)
         self.dispatches += 1
         self.slot_ticks += len(active)
         ids_h, sims_h = np.asarray(ids), np.asarray(sims)  # (S, slots, k)

@@ -41,7 +41,8 @@ device dispatch per block, per detector. The traced program is::
     index  = insert(expire(index), sig, bk)     # sliding window + decay
     pairs  = query(index, sig, bk)              # id-ordered emission
     pairs  = occurrence_limit(index, pairs)     # in-dispatch §6.5 limiter
-    return FusedState{index', wave[-halo:], med, mad}, pairs, qc
+    pairs  = verify(compact(pairs))             # bounded emission + exact
+    return FusedState{index', wave[-halo:], med, mad}, pairs, qc  # Jaccard
 
 (the expire/guards/insert/query/limit tail is ``index.guarded_step``; the
 duplicate probe and saturation quarantine run inside it, and with every
@@ -218,6 +219,44 @@ validates the restored pool width against ``--stations``), and the live
 health surface (``--metrics-every``, ``--metrics-file``,
 ``--trace-jsonl``, ``--dirty``) ride the same CLI.
 
+Emission path (ISSUE 8)
+-----------------------
+
+The dense pair emission is O(t · N · cap) slots per block — at the paper
+configuration (t=100, cap=8) that is ~205k candidate slots per station
+per 256-fingerprint block, nearly all invalid, every one transferred to
+the host and scanned there. Two in-dispatch epilogue stages shrink the
+pipe to O(max_pairs):
+
+* **compaction** (``index.compact_pairs``, ``max_pairs_per_block`` > 0):
+  after the m-of-t reduction, surviving pairs are gathered into a
+  bounded static-shape ``(max_pairs,)`` buffer via a ``top_k`` over
+  stream position — deterministic (first ``max_pairs`` valid positions
+  = lexicographically smallest (idx1, idx2) survive; re-running a block
+  drops the *same* pairs), donation-safe, and counted: overflow drops
+  land in the ``overflow_pairs`` slot of ``QC_FIELDS`` and surface
+  through ``drop_breakdown()`` / ``step_overflow_pairs_total``.
+* **exact-Jaccard verify** (``index.verify_pairs``,
+  ``verify_jaccard``): the binarizer's bit-packed fingerprints are
+  stashed in a window-sized device ring (``IndexState.pk``, keyed by
+  id % pk_slots, carried through snapshot/restore) and every compacted
+  candidate is scored with exact Jaccard via
+  ``kernels.jaccard_popcount`` — the jnp oracle, or the Pallas popcount
+  kernel with ``verify_pallas`` (interpret-mode parity pinned in
+  ``tests/test_kernels.py``). Pairs then emit as
+  ``core.lsh.VerifiedPairs`` (idx1, idx2, hash matches, jaccard), and
+  ``verify_min_jaccard`` drops false LSH collisions in-dispatch so
+  downstream thresholds act on true similarity, not the hash proxy.
+
+Both stages run inside the same traced program (one dispatch, donated
+buffers), in every driver — solo and pooled streaming, batch replay,
+and the serving tier's read-only slot queries. With the knobs at 0 the
+dense emission and the traced program are exactly as before; with
+compaction sized above the true pair rate the emitted pair set is
+bit-identical to dense (golden-pinned). ``benchmarks/bench_e2e.py``
+records the A/B (``emission`` section: pair bytes per block, device-
+step vs host-tail wall split) and ``make bench-emit`` refreshes it.
+
 Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
 the jitted step expires index entries beyond a sliding detection window,
 and with ``filter_window_fingerprints`` the ``RollingPairFilter`` retires
@@ -241,9 +280,10 @@ from repro.stream.fused import (FusedState, init_pool_state,  # noqa: F401
                                 init_state, pool_step_advance,
                                 pool_step_block, step_advance, step_block)
 from repro.stream.index import (IndexState, QC_FIELDS,  # noqa: F401
-                                StreamIndexConfig, expire, index_stats,
-                                init_index, init_pool, insert, query,
-                                slice_state, stack_states)
+                                StreamIndexConfig, compact_pairs, expire,
+                                index_stats, init_index, init_pool, insert,
+                                query, slice_state, stack_states,
+                                verify_pairs)
 from repro.stream.ingest import (StreamConfig, StreamingMAD,  # noqa: F401
                                  WaveformRing)
 from repro.stream.telemetry import (METRICS_SCHEMA,  # noqa: F401

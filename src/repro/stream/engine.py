@@ -90,13 +90,16 @@ def pool_block_coeffs(blocks: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("fcfg", "lcfg", "window",
                                              "saturation", "dup_tables",
-                                             "occ_limit", "counters"),
+                                             "occ_limit", "counters",
+                                             "max_pairs", "verify",
+                                             "min_jac"),
                    donate_argnums=(0,))
 def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
                 mad: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array, fcfg: FingerprintConfig, lcfg: LSHConfig,
                 window: int = 0, saturation: int = 0, dup_tables: int = 0,
-                occ_limit: int = 0, counters: int = 0
+                occ_limit: int = 0, counters: int = 0, max_pairs: int = 0,
+                verify: int = 0, min_jac: float = 0.0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One fixed-shape streaming step: binarize → sign → expire → guards →
     insert → query. (The *unfused* half of the PR-1/2 chain — kept as the
@@ -116,14 +119,17 @@ def stream_step(state: IndexState, coeffs: jax.Array, med: jax.Array,
     the fused path, so the two hot paths stay bit-identical with the
     quality guards on or off.
     """
-    bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
+    bits, packed = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
     sigs, buckets = lsh_mod.signatures_and_buckets(
         bits, mappings, lcfg, state.shape[1], valid=valid)
     ids = base_id + jnp.arange(sigs.shape[0], dtype=jnp.int32)
     return index_mod.guarded_step(state, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
                                   dup_tables=dup_tables,
-                                  occ_limit=occ_limit, counters=counters)
+                                  occ_limit=occ_limit, counters=counters,
+                                  packed=packed if verify > 0 else None,
+                                  max_pairs=max_pairs, verify=verify,
+                                  min_jac=min_jac)
 
 
 def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
@@ -462,8 +468,11 @@ class StationStream:
                                  max_gap=scfg.max_gap_samples)
         self.mad = StreamingMAD(scfg.reservoir_rows, fcfg.n_coeff,
                                 seed=scfg.seed)
+        # pk_words resolved against this detector's fingerprint dim so
+        # the verify ring rows match what the binarizer packs
+        self.icfg = scfg.effective_index(fcfg.fp_dim)
         self._state: IndexState | None = index_mod.init_index(lcfg,
-                                                              scfg.index)
+                                                              self.icfg)
         self.mappings = lsh_mod.hash_mappings(fcfg.fp_dim, lcfg)
         self.fstate: fused_mod.FusedState | None = None
         self._halo_ok = False
@@ -696,6 +705,9 @@ class StationStream:
         dup = self.scfg.dup_sig_tables
         occ = self.scfg.occ_limit
         ctr = 1 if self.scfg.telemetry else 0
+        mp = self.scfg.max_pairs_per_block
+        ver = self.scfg.verify_code
+        mj = self.scfg.verify_min_jaccard
         n = self.scfg.block_fingerprints
         vmask = (np.ones(n, bool) if valid is None
                  else np.asarray(valid, bool))
@@ -711,12 +723,12 @@ class StationStream:
                     self.fstate, pairs, qc = fused_mod.step_advance(
                         self.fstate, jnp.asarray(adv), self.mappings,
                         jnp.int32(base_id), fcfg, lcfg, window, sat, dup,
-                        occ, ctr)
+                        occ, ctr, mp, ver, mj)
                 else:
                     self.fstate, pairs, qc = fused_mod.step_block(
                         self.fstate, jnp.asarray(block), self.mappings,
                         jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
-                        window, sat, dup, occ, ctr)
+                        window, sat, dup, occ, ctr, mp, ver, mj)
                     # a zero-padded tail leaves the device halo dirty and
                     # the next block must re-seed through step_block; a
                     # fully framed (gap-masked) block primes it clean
@@ -728,13 +740,14 @@ class StationStream:
                 self._state, pairs, qc = stream_step(
                     self._state, coeffs, med, mad, self.mappings,
                     jnp.int32(base_id), jnp.asarray(vmask), fcfg, lcfg,
-                    window, sat, dup, occ, ctr)
-            # the np conversions block on the dispatch, so the watchdog
-            # step (and the fused-wall histogram) covers device time
-            # incl. sync
-            pairs_np = (np.asarray(pairs.idx1), np.asarray(pairs.idx2),
-                        np.asarray(pairs.sim), np.asarray(pairs.valid))
-            qc = np.asarray(qc)
+                    window, sat, dup, occ, ctr, mp, ver, mj)
+            # one device_get over the whole step output (ISSUE 8: a
+            # single transfer+sync, not four) blocks on the dispatch, so
+            # the watchdog step (and the fused-wall histogram) covers
+            # device time incl. sync. With compaction on, the pulled
+            # pair arrays are O(max_pairs), not O(t·N·cap).
+            pairs_np, qc = jax.device_get(
+                ((pairs.idx1, pairs.idx2, pairs.sim, pairs.valid), qc))
         self.telemetry.record_fused_wall(str(self._pool_idx), wd.step_end())
         self._absorb_qc(qc, n_adv - int(vmask[:n_adv].sum()))
         t_host = time.perf_counter()
@@ -872,6 +885,7 @@ class StationStream:
             "index/traffic": np.asarray(jax.device_get(state.traffic)),
             "index/occ": np.asarray(jax.device_get(state.occ)),
             "index/epoch": np.asarray(jax.device_get(state.epoch)),
+            "index/pk": np.asarray(jax.device_get(state.pk)),
         }
         ring_a, ring_s = self.ring.snapshot()
         arrays["ring/buf"] = ring_a["buf"]
@@ -927,7 +941,7 @@ class StationStream:
         return arrays, extra
 
     def restore_state(self, arrays: dict, extra: dict) -> None:
-        init = index_mod.init_index(self.cfg.lsh, self.scfg.index)
+        init = index_mod.init_index(self.cfg.lsh, self.icfg)
         restored = IndexState(
             sig=jnp.asarray(arrays["index/sig"], jnp.uint32),
             ids=jnp.asarray(arrays["index/ids"], jnp.int32),
@@ -948,10 +962,17 @@ class StationStream:
             if "index/epoch" in arrays else jnp.asarray(
                 max(0, int(extra["processed_fp"])
                     - self.scfg.window_fingerprints)
-                // max(self.scfg.window_fingerprints, 1), jnp.int32))
+                // max(self.scfg.window_fingerprints, 1), jnp.int32),
+            # pre-verify snapshots lack the packed-fingerprint ring; an
+            # empty ring only costs already-inserted ids their exact
+            # Jaccard (scored 0) until the window rolls over
+            pk=jnp.asarray(arrays["index/pk"], jnp.uint32)
+            if "index/pk" in arrays else init.pk)
         assert restored.shape == init.shape, (restored.shape, init.shape)
         assert restored.occ.shape == init.occ.shape, \
             (restored.occ.shape, init.occ.shape)
+        assert restored.pk.shape == init.pk.shape, \
+            (restored.pk.shape, init.pk.shape)
         self._state = restored
         self.fstate = None
         self._halo_ok = False
@@ -1177,6 +1198,9 @@ class StreamingDetector:
         dup = self.scfg.dup_sig_tables
         occ = self.scfg.occ_limit
         ctr = 1 if self.scfg.telemetry else 0
+        mp = self.scfg.max_pairs_per_block
+        ver = self.scfg.verify_code
+        mj = self.scfg.verify_min_jaccard
         n = self.scfg.block_fingerprints
         s = len(self.stations)
         clean = masks is None or all(m is None for m in masks)
@@ -1190,7 +1214,7 @@ class StreamingDetector:
                 self.pstate, pairs, qc = fused_mod.pool_step_advance(
                     self.pstate, jnp.asarray(adv), self.mappings,
                     jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ,
-                    ctr)
+                    ctr, mp, ver, mj)
                 vm = np.ones((s, n), bool)
             else:
                 vm = np.stack([
@@ -1199,11 +1223,11 @@ class StreamingDetector:
                 self.pstate, pairs, qc = fused_mod.pool_step_block(
                     self.pstate, jnp.asarray(blocks), self.mappings,
                     jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
-                    sat, dup, occ, ctr)
+                    sat, dup, occ, ctr, mp, ver, mj)
                 self._halo_ok = clean or primed
-            i1, i2 = np.asarray(pairs.idx1), np.asarray(pairs.idx2)
-            sim, pv = np.asarray(pairs.sim), np.asarray(pairs.valid)
-            qc = np.asarray(qc)
+            # one transfer + one sync for the whole pooled step output
+            (i1, i2, sim, pv), qc = jax.device_get(
+                ((pairs.idx1, pairs.idx2, pairs.sim, pairs.valid), qc))
         # one watchdog step per pooled dispatch (all stations share it)
         self.telemetry.record_fused_wall("pool", wd.step_end())
         t_host = time.perf_counter()
@@ -1410,6 +1434,8 @@ class StreamingDetector:
                          self.scfg.dup_window_fingerprints,
                      "dup_sig_tables": self.scfg.dup_sig_tables,
                      "occ_limit": self.scfg.occ_limit,
+                     "max_pairs_per_block": self.scfg.max_pairs_per_block,
+                     "verify_jaccard": int(self.scfg.verify_jaccard),
                  }}
         if step is None:
             step = self.stations[0].stats.chunks
@@ -1440,7 +1466,11 @@ class StreamingDetector:
                 ("dup_window_fingerprints",
                  det.scfg.dup_window_fingerprints),
                 ("dup_sig_tables", det.scfg.dup_sig_tables),
-                ("occ_limit", det.scfg.occ_limit)):
+                ("occ_limit", det.scfg.occ_limit),
+                # verify toggles the packed-fingerprint ring, which is
+                # part of the station state layout (max_pairs is not —
+                # it only shapes the per-step output, so it may differ)
+                ("verify_jaccard", det.scfg.verify_jaccard)):
             if key in saved and int(saved[key]) != int(have):
                 raise ValueError(
                     f"snapshot was taken with {key}={saved[key]} but the "

@@ -92,7 +92,8 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
                 wave: jax.Array, mappings: jax.Array, base_id: jax.Array,
                 valid: jax.Array | None, fcfg: FingerprintConfig,
                 lcfg: LSHConfig, window: int, saturation: int = 0,
-                dup_tables: int = 0, occ_limit: int = 0, counters: int = 0
+                dup_tables: int = 0, occ_limit: int = 0, counters: int = 0,
+                max_pairs: int = 0, verify: int = 0, min_jac: float = 0.0
                 ) -> tuple[IndexState, Pairs, jax.Array]:
     """One station's block: fingerprint → hash → expire → guards →
     insert → query.
@@ -108,9 +109,16 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     exactly. Returns the per-step counter vector ``qc`` (layout
     ``index.QC_FIELDS``: guard counters + the ISSUE-6 telemetry counters,
     the latter live only when ``counters`` is set) alongside pairs.
+
+    ``max_pairs``/``verify``/``min_jac`` (ISSUE 8) enable the emission
+    epilogue inside the same dispatch: the dense pair stream is compacted
+    to ``(max_pairs,)`` and, with ``verify``, scored with exact Jaccard —
+    the bit-packed fingerprints the binarizer already produces feed the
+    ``IndexState.pk`` ring, so fingerprint → hash → bucket → query →
+    verify → compact is literally one fused device program.
     """
     coeffs = fp_mod.coeffs_from_waveform(wave, fcfg)
-    bits, _ = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
+    bits, packed = fp_mod.binarize_coeffs(coeffs, fcfg, (med, mad))
     n = bits.shape[0]
     sigs, buckets = lsh_mod.signatures_and_buckets(
         bits, mappings, lcfg, index.shape[1], valid=valid)
@@ -118,11 +126,15 @@ def _chunk_core(index: IndexState, med: jax.Array, mad: jax.Array,
     return index_mod.guarded_step(index, sigs, buckets, ids, valid, lcfg,
                                   window, saturation=saturation,
                                   dup_tables=dup_tables,
-                                  occ_limit=occ_limit, counters=counters)
+                                  occ_limit=occ_limit, counters=counters,
+                                  packed=packed if verify > 0 else None,
+                                  max_pairs=max_pairs, verify=verify,
+                                  min_jac=min_jac)
 
 
 _QUALITY_STATICS = ("fcfg", "lcfg", "window", "saturation",
-                    "dup_tables", "occ_limit", "counters")
+                    "dup_tables", "occ_limit", "counters",
+                    "max_pairs", "verify", "min_jac")
 
 
 @functools.partial(jax.jit, static_argnames=_QUALITY_STATICS,
@@ -131,7 +143,8 @@ def step_advance(state: FusedState, new_samples: jax.Array,
                  mappings: jax.Array, base_id: jax.Array,
                  fcfg: FingerprintConfig, lcfg: LSHConfig,
                  window: int = 0, saturation: int = 0, dup_tables: int = 0,
-                 occ_limit: int = 0, counters: int = 0
+                 occ_limit: int = 0, counters: int = 0, max_pairs: int = 0,
+                 verify: int = 0, min_jac: float = 0.0
                  ) -> tuple[FusedState, Pairs, jax.Array]:
     """Steady-state fused step: device halo + new samples → pairs.
 
@@ -143,7 +156,8 @@ def step_advance(state: FusedState, new_samples: jax.Array,
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, wave,
                                    mappings, base_id, None, fcfg, lcfg,
                                    window, saturation, dup_tables,
-                                   occ_limit, counters)
+                                   occ_limit, counters, max_pairs, verify,
+                                   min_jac)
     return FusedState(index=index, halo=wave[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -154,7 +168,8 @@ def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
                base_id: jax.Array, valid: jax.Array,
                fcfg: FingerprintConfig, lcfg: LSHConfig,
                window: int = 0, saturation: int = 0, dup_tables: int = 0,
-               occ_limit: int = 0, counters: int = 0
+               occ_limit: int = 0, counters: int = 0, max_pairs: int = 0,
+               verify: int = 0, min_jac: float = 0.0
                ) -> tuple[FusedState, Pairs, jax.Array]:
     """Re-seeding fused step: a whole framed block + fingerprint mask.
 
@@ -169,7 +184,8 @@ def step_block(state: FusedState, block: jax.Array, mappings: jax.Array,
     index, pairs, qc = _chunk_core(state.index, state.med, state.mad, block,
                                    mappings, base_id, valid, fcfg, lcfg,
                                    window, saturation, dup_tables,
-                                   occ_limit, counters)
+                                   occ_limit, counters, max_pairs, verify,
+                                   min_jac)
     return FusedState(index=index, halo=block[-state.halo.shape[-1]:],
                       med=state.med, mad=state.mad), pairs, qc
 
@@ -181,7 +197,8 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
                       fcfg: FingerprintConfig, lcfg: LSHConfig,
                       window: int = 0, saturation: int = 0,
                       dup_tables: int = 0, occ_limit: int = 0,
-                      counters: int = 0
+                      counters: int = 0, max_pairs: int = 0,
+                      verify: int = 0, min_jac: float = 0.0
                       ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_advance`` over a station pool: state leaves and
     ``new_samples`` carry a leading (S,) axis; ids/base advance in
@@ -190,7 +207,8 @@ def pool_step_advance(state: FusedState, new_samples: jax.Array,
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
                              dup_tables=dup_tables, occ_limit=occ_limit,
-                             counters=counters)
+                             counters=counters, max_pairs=max_pairs,
+                             verify=verify, min_jac=min_jac)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None,
                                                None))(
         state.index, state.med, state.mad, wave, mappings, base_id, None)
@@ -205,7 +223,8 @@ def pool_step_block(state: FusedState, blocks: jax.Array,
                     valid: jax.Array, fcfg: FingerprintConfig,
                     lcfg: LSHConfig, window: int = 0, saturation: int = 0,
                     dup_tables: int = 0, occ_limit: int = 0,
-                    counters: int = 0
+                    counters: int = 0, max_pairs: int = 0,
+                    verify: int = 0, min_jac: float = 0.0
                     ) -> tuple[FusedState, Pairs, jax.Array]:
     """``step_block`` over a station pool (blocks (S, block_samples),
     valid (S, block_fingerprints) — per-station gap masks differ when one
@@ -213,7 +232,8 @@ def pool_step_block(state: FusedState, blocks: jax.Array,
     core = functools.partial(_chunk_core, fcfg=fcfg, lcfg=lcfg,
                              window=window, saturation=saturation,
                              dup_tables=dup_tables, occ_limit=occ_limit,
-                             counters=counters)
+                             counters=counters, max_pairs=max_pairs,
+                             verify=verify, min_jac=min_jac)
     index, pairs, qc = jax.vmap(core, in_axes=(0, 0, 0, 0, None, None, 0))(
         state.index, state.med, state.mad, blocks, mappings, base_id, valid)
     return FusedState(index=index, halo=blocks[:, -state.halo.shape[-1]:],

@@ -32,7 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lsh as lsh_mod
-from repro.core.lsh import INVALID, LSHConfig, Pairs, finalize_pairs
+from repro.core.lsh import (INVALID, LSHConfig, Pairs, VerifiedPairs,
+                            finalize_pairs)
+from repro.kernels import ops
 from repro.utils import rank_in_run, run_lengths
 
 # Layout of the per-step quality/telemetry counter vector returned by
@@ -51,6 +53,9 @@ QC_FIELDS = (
                                  # the §6.3 lookups-per-query skew signal
     "quarantined_collisions",    # raw collisions killed by the bucket-
                                  # saturation quarantine
+    "overflow_pairs",            # valid pairs dropped by the emission
+                                 # compaction bound (ISSUE 8; 0 when the
+                                 # compacted buffer fit every pair)
 )
 
 
@@ -62,16 +67,24 @@ class StreamIndexConfig:
     bucket_cap: int = 8       # slots per bucket (ring, oldest evicted)
     occ_slots: int = 0        # per-fingerprint partner-count ring (ISSUE 5:
                               # the in-dispatch §6.5 limiter; 0 = no ring)
+    pk_slots: int = 0         # bit-packed fingerprint ring rows (ISSUE 8:
+                              # the in-dispatch verify epilogue; 0 = none)
+    pk_words: int = 0         # uint32 words per packed row (fp_dim // 32;
+                              # 0 lets the engine derive it from the
+                              # fingerprint config)
 
     def __post_init__(self):
         assert self.n_buckets & (self.n_buckets - 1) == 0, \
             f"n_buckets must be a power of two, got {self.n_buckets}"
         assert self.occ_slots >= 0, self.occ_slots
+        assert self.pk_slots >= 0, self.pk_slots
+        assert self.pk_words >= 0, self.pk_words
 
     def state_bytes(self, n_tables: int) -> int:
         slots = n_tables * self.n_buckets * self.bucket_cap
         return (slots * (4 + 4) + 2 * n_tables * self.n_buckets * 4
-                + max(self.occ_slots, 1) * 4)
+                + max(self.occ_slots, 1) * 4
+                + max(self.pk_slots, 1) * max(self.pk_words, 1) * 4)
 
 
 @jax.tree_util.register_dataclass
@@ -88,6 +101,8 @@ class IndexState:
     occ: jax.Array      # (L,) int32 per-fingerprint emitted-partner counts
                         # (ring keyed by id % L; L = occ_slots or 1)
     epoch: jax.Array    # () int32 last traffic-decay epoch (expire)
+    pk: jax.Array       # (P, W) uint32 bit-packed fingerprint ring keyed
+                        # by id % P (ISSUE 8 verify; P = pk_slots or 1)
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -104,6 +119,8 @@ def init_index(lcfg: LSHConfig, icfg: StreamIndexConfig) -> IndexState:
         traffic=jnp.zeros((t, b), jnp.int32),
         occ=jnp.zeros((max(icfg.occ_slots, 1),), jnp.int32),
         epoch=jnp.zeros((), jnp.int32),
+        pk=jnp.zeros((max(icfg.pk_slots, 1), max(icfg.pk_words, 1)),
+                     jnp.uint32),
     )
 
 
@@ -161,14 +178,16 @@ def insert(state: IndexState, sigs: jax.Array, ids: jax.Array,
         sigs.astype(jnp.uint32), ids, valid)
     return IndexState(sig=new_sig, ids=new_ids, cursor=new_cursor,
                       inserted=state.inserted + valid.sum(dtype=jnp.int32),
-                      traffic=new_traffic, occ=state.occ, epoch=state.epoch)
+                      traffic=new_traffic, occ=state.occ, epoch=state.epoch,
+                      pk=state.pk)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "saturation", "counts"))
+@functools.partial(jax.jit, static_argnames=("cfg", "saturation", "counts",
+                                              "max_pairs"))
 def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
           cfg: LSHConfig, buckets: jax.Array | None = None,
           qvalid: jax.Array | None = None, saturation: int = 0,
-          counts: int = 0):
+          counts: int = 0, max_pairs: int = 0):
     """Find stored partners of a signature batch → thresholded Pairs.
 
     Only partners with stored id < query id are emitted, so a batch that
@@ -193,6 +212,13 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
     collisions are intentionally included) and the subset of it killed by
     the saturation quarantine. Two reductions over masks the program
     already materializes — no new dispatch, pair outputs untouched.
+
+    ``max_pairs`` (static, ISSUE 8) > 0 compacts the dense emission
+    through :func:`compact_pairs` so the returned ``Pairs`` has static
+    size ``max_pairs`` instead of t * N * C — the O(P) shape serving-tier
+    callers reduce over. Overflow past the bound drops deterministically
+    (see ``compact_pairs``); callers needing the overflow count use
+    ``guarded_step``, which also appends it to the QC vector.
     """
     t, b, c = state.shape
     n = sigs.shape[0]
@@ -222,6 +248,8 @@ def query(state: IndexState, sigs: jax.Array, qids: jax.Array,
         state.sig, state.ids, state.traffic, buckets,
         sigs.astype(jnp.uint32))
     pairs = finalize_pairs(lo.reshape(-1), hi.reshape(-1), cfg)
+    if max_pairs > 0:
+        pairs, _ = compact_pairs(pairs, max_pairs)
     if not counts:
         return pairs
     return pairs, jnp.stack([n_raw.sum(), n_quar.sum()])
@@ -251,7 +279,8 @@ def expire(state: IndexState, min_id: jax.Array,
     return IndexState(sig=state.sig,
                       ids=jnp.where(keep, state.ids, INVALID),
                       cursor=state.cursor, inserted=state.inserted,
-                      traffic=traffic, occ=state.occ, epoch=epoch)
+                      traffic=traffic, occ=state.occ, epoch=epoch,
+                      pk=state.pk)
 
 
 # ---------------------------------------------------------------------------
@@ -370,13 +399,69 @@ def occurrence_limit_pairs(state: IndexState, sigs: jax.Array,
     return dataclasses.replace(state, occ=occ), limited, dropped
 
 
+# ---------------------------------------------------------------------------
+# emission epilogue (ISSUE 8): compaction + exact-Jaccard verify
+# ---------------------------------------------------------------------------
+
+
+def compact_pairs(pairs: Pairs, max_pairs: int
+                  ) -> tuple[Pairs, jax.Array]:
+    """Validity compaction of the dense emission stream (ISSUE 8).
+
+    The dense stream leaving ``finalize_pairs`` is t * N * C slots,
+    almost all masked; this gathers the surviving pairs into a bounded
+    ``(max_pairs,)`` buffer so only real pairs cross the device→host
+    boundary. The drop rule on overflow is deterministic: the stream is
+    (idx1, idx2)-sorted (valid pairs sit at segment starts of the
+    ``lax.sort`` in ``count_pair_multiplicity``), and the compaction
+    keeps the *first* ``max_pairs`` valid positions — i.e. the
+    lexicographically smallest (idx1, idx2) pairs — independent of
+    backend reduction order. Returns (compacted pairs, overflow count).
+    """
+    m = pairs.valid.shape[0]
+    k = min(max_pairs, m)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    # valid rows outrank invalid ones; within each class earlier stream
+    # positions outrank later ones, so top_k takes the first k valid
+    # positions (padding from the stream head when fewer are valid)
+    score = jnp.where(pairs.valid, 2 * m - pos, m - pos)
+    _, take = jax.lax.top_k(score, k)
+    kept = pairs.valid[take]
+    overflow = (pairs.valid.sum(dtype=jnp.int32)
+                - kept.sum(dtype=jnp.int32))
+    return Pairs(idx1=pairs.idx1[take], idx2=pairs.idx2[take],
+                 sim=pairs.sim[take], valid=kept), overflow
+
+
+def verify_pairs(state: IndexState, pairs: Pairs,
+                 use_pallas: bool = False) -> jax.Array:
+    """Exact Jaccard of compacted candidates from the packed ring.
+
+    Gathers both endpoints' bit-packed fingerprints out of the
+    ``IndexState.pk`` ring (keyed by id % pk_slots — valid as long as the
+    ring spans the detection window, which config validation enforces)
+    and scores them with ``kernels.jaccard_popcount`` (the jnp oracle, or
+    the interpret-parity-tested Pallas kernel when ``use_pallas``).
+    O(max_pairs) work — call on the *compacted* emission, never the dense
+    stream. Invalid rows score 0.
+    """
+    ring = state.pk.shape[0]
+    i1 = jnp.where(pairs.valid, pairs.idx1, 0) % jnp.int32(ring)
+    i2 = jnp.where(pairs.valid, pairs.idx2, 0) % jnp.int32(ring)
+    jac = ops.jaccard_popcount(state.pk[i1], state.pk[i2],
+                               use_pallas=use_pallas)
+    return jnp.where(pairs.valid, jac, jnp.float32(0.0))
+
+
 def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
                  ids: jax.Array, valid: jax.Array | None, cfg: LSHConfig,
                  window: int, saturation: int = 0, dup_tables: int = 0,
-                 occ_limit: int = 0, counters: int = 0
+                 occ_limit: int = 0, counters: int = 0,
+                 packed: jax.Array | None = None, max_pairs: int = 0,
+                 verify: int = 0, min_jac: float = 0.0
                  ) -> tuple[IndexState, Pairs, jax.Array]:
     """expire → duplicate guard → insert → saturation-guarded query →
-    occurrence limiter.
+    occurrence limiter → emission compaction + exact-Jaccard verify.
 
     The one shared insert/query tail of EVERY detection path — the fused
     ``_chunk_core``, the unfused ``stream_step``, and the batch replay
@@ -399,6 +484,21 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
     dispatch. ``window`` > 0 with ``saturation`` > 0 also switches the
     saturation quarantine to the window-relative decaying traffic counter
     (see ``expire``).
+
+    ``max_pairs`` > 0 (static, ISSUE 8) enables the emission epilogue:
+    the dense t * N * C pair stream is compacted to a bounded
+    ``(max_pairs,)`` buffer (``compact_pairs``; deterministic drop on
+    overflow, counted in ``overflow_pairs``), and with ``verify`` > 0
+    the compacted candidates are scored with exact Jaccard from the
+    bit-packed fingerprint ring (``verify_pairs``; ``packed`` supplies
+    this block's (N, pk_words) uint32 rows, written into ``state.pk`` at
+    id % pk_slots before the query; ``verify == 2`` routes the scoring
+    through the Pallas kernel). The step then returns a
+    ``lsh.VerifiedPairs`` — (idx1, idx2, hash matches, jaccard) — and
+    ``min_jac`` > 0 drops pairs whose *true* similarity falls below the
+    threshold in-dispatch, so downstream thresholds can act on exact
+    Jaccard instead of the hash-match proxy. All knobs at 0 leave the
+    dense emission and the traced program exactly as before.
     """
     if occ_limit > 0:
         # recycle the incoming ids' partner-count slots (window decay:
@@ -425,6 +525,17 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
         ins_valid = v & ~dup
         qvalid = ins_valid
         qc_dup = dup.sum(dtype=jnp.int32)
+    if verify > 0:
+        # stash this block's bit-packed fingerprints in the ring so the
+        # verify epilogue can gather both endpoints of any within-window
+        # pair (suppressed rows never pair, so their slots stay stale)
+        assert max_pairs > 0, "verify requires max_pairs (compaction)"
+        ring = state.pk.shape[0]
+        wv = (jnp.ones(ids.shape, bool) if ins_valid is None else ins_valid)
+        slot = jnp.where(wv, ids % jnp.int32(ring), jnp.int32(ring))
+        state = dataclasses.replace(
+            state, pk=state.pk.at[slot].set(packed.astype(jnp.uint32),
+                                            mode="drop"))
     state = insert(state, sigs, ids, cfg, valid=ins_valid, buckets=buckets)
     qc_sat = (saturated_lookup_count(state, buckets, saturation,
                                      valid=ins_valid)
@@ -442,13 +553,28 @@ def guarded_step(state: IndexState, sigs: jax.Array, buckets: jax.Array,
     if occ_limit > 0:
         state, pairs, qc_occ = occurrence_limit_pairs(
             state, sigs, buckets, ids, qvalid, cfg, pairs, occ_limit)
+    qc_overflow = jnp.int32(0)
+    if max_pairs > 0:
+        pairs, qc_overflow = compact_pairs(pairs, max_pairs)
+        jac = jnp.zeros(pairs.valid.shape, jnp.float32)
+        if verify > 0:
+            jac = verify_pairs(state, pairs, use_pallas=(verify == 2))
+            if min_jac > 0.0:
+                keep = pairs.valid & (jac >= jnp.float32(min_jac))
+                pairs = Pairs(idx1=pairs.idx1, idx2=pairs.idx2,
+                              sim=jnp.where(keep, pairs.sim, 0),
+                              valid=keep)
+                jac = jnp.where(keep, jac, jnp.float32(0.0))
+        pairs = VerifiedPairs(idx1=pairs.idx1, idx2=pairs.idx2,
+                              sim=pairs.sim, jac=jac, valid=pairs.valid)
     qc_pairs = qc_masked = jnp.int32(0)
     if counters:
         qc_pairs = pairs.valid.sum(dtype=jnp.int32)
         if valid is not None:
             qc_masked = (~valid).sum(dtype=jnp.int32)
     return state, pairs, jnp.stack([qc_dup, qc_sat, qc_occ, qc_pairs,
-                                    qc_masked, qc_raw, qc_quar])
+                                    qc_masked, qc_raw, qc_quar,
+                                    qc_overflow])
 
 
 # ---------------------------------------------------------------------------

@@ -117,6 +117,35 @@ class StreamConfig:
       parity with the limiter off is pinned). Requires
       ``index.occ_slots`` ≥ the id span pairs can reach back over
       (the sliding window, or the whole stream when unwindowed). 0 = off.
+
+    Emission-path knobs (ISSUE 8; both off = the dense t * N * cap
+    emission, bit-identical program):
+
+    * ``max_pairs_per_block`` — in-dispatch emission compaction: the
+      dense pair stream is sorted by validity inside the traced step and
+      only a bounded ``(max_pairs_per_block,)`` buffer crosses the
+      device→host boundary (at paper scale that is ~205k dense slots →
+      a few thousand real pairs per station per block). Valid pairs past
+      the bound drop deterministically (lexicographically smallest
+      (idx1, idx2) kept) and are counted in the ``overflow_pairs`` QC
+      field — size it so overflow stays 0 on healthy data and the pair
+      set is bit-identical to the dense path (pinned). 0 = dense.
+    * ``verify_jaccard`` — the exact-verification epilogue: the step
+      keeps a ring of bit-packed fingerprints in the index state
+      (``index.pk_slots`` rows — must span the sliding window, or the
+      stream when unwindowed; ``index.pk_words`` = fp_dim // 32, derived
+      by the engine when 0) and scores every compacted candidate with
+      exact Jaccard in the same dispatch, emitting
+      (idx1, idx2, hash_matches, jaccard). Requires
+      ``max_pairs_per_block`` > 0 (the dense stream is never verified).
+    * ``verify_pallas`` — route the verify scoring through the Pallas
+      ``jaccard_popcount`` kernel (interpret-parity-tested on CPU; the
+      real win is on TPU where the whole fingerprint→hash→bucket→query→
+      verify→compact chain is one fused device program).
+    * ``verify_min_jaccard`` — in-dispatch threshold on the *verified*
+      similarity: compacted pairs whose exact Jaccard falls below this
+      are dropped before emission, so downstream thresholds act on true
+      similarity instead of the hash-match proxy. 0.0 = keep all.
     """
 
     block_fingerprints: int = 64   # fingerprints per jitted step
@@ -135,6 +164,10 @@ class StreamConfig:
     dup_window_fingerprints: int = 0  # sample-exact repeat horizon
     dup_sig_tables: int = 0        # signature matches that flag a repeat
     occ_limit: int = 0             # in-dispatch §6.5 partner-count limiter
+    max_pairs_per_block: int = 0   # emission compaction bound (0 = dense)
+    verify_jaccard: bool = False   # exact-Jaccard verify epilogue
+    verify_pallas: bool = False    # verify through the Pallas kernel
+    verify_min_jaccard: float = 0.0  # in-dispatch true-similarity floor
     telemetry: bool = True         # in-dispatch step counters (ISSUE 6):
                                    # the fused step also returns pairs-
                                    # emitted / masked / collision counts,
@@ -192,6 +225,65 @@ class StreamConfig:
                 f"window_fingerprints={self.window_fingerprints} smaller "
                 f"than one block ({self.block_fingerprints}) would expire "
                 f"the block being inserted")
+        if self.max_pairs_per_block < 0:
+            raise ValueError(
+                f"max_pairs_per_block must be >= 0 (0 = dense emission), "
+                f"got {self.max_pairs_per_block}")
+        if self.verify_jaccard and self.max_pairs_per_block <= 0:
+            raise ValueError(
+                "verify_jaccard scores the *compacted* emission; set "
+                "max_pairs_per_block > 0 (the dense t*N*cap stream is "
+                "never verified)")
+        if self.verify_jaccard and self.index.pk_slots <= 0:
+            raise ValueError(
+                "verify_jaccard needs a packed-fingerprint ring: set "
+                "StreamIndexConfig.pk_slots to at least the sliding "
+                "window (window_fingerprints), or the expected stream "
+                "length when unwindowed")
+        if self.verify_jaccard and 0 < self.index.pk_slots \
+                < self.window_fingerprints:
+            # a ring narrower than the window makes two live in-window
+            # fingerprints share a packed row: the newcomer overwrites a
+            # still-pairable partner's bits and the verify scores garbage
+            raise ValueError(
+                f"pk_slots={self.index.pk_slots} is narrower than the "
+                f"sliding window ({self.window_fingerprints}): every id a "
+                f"pair can reach back to needs its own packed row")
+        if self.verify_pallas and not self.verify_jaccard:
+            raise ValueError(
+                "verify_pallas selects the kernel for the verify "
+                "epilogue; it needs verify_jaccard=True")
+        if not 0.0 <= self.verify_min_jaccard <= 1.0:
+            raise ValueError(
+                f"verify_min_jaccard must be in [0, 1], got "
+                f"{self.verify_min_jaccard}")
+        if self.verify_min_jaccard > 0.0 and not self.verify_jaccard:
+            raise ValueError(
+                "verify_min_jaccard thresholds the verified similarity; "
+                "it needs verify_jaccard=True")
+
+    @property
+    def verify_code(self) -> int:
+        """Static verify selector for the fused step: 0 = off, 1 = jnp
+        oracle, 2 = Pallas kernel."""
+        if not self.verify_jaccard:
+            return 0
+        return 2 if self.verify_pallas else 1
+
+    def effective_index(self, fp_dim: int) -> StreamIndexConfig:
+        """Index config with the verify ring's row width resolved.
+
+        ``pk_words == 0`` means "derive from the fingerprint config":
+        packed fingerprints are ``fp_dim // 32`` uint32 words
+        (``utils.pack_bits``; fp_dim is a multiple of 32 by
+        construction). Every engine that materializes an ``IndexState``
+        from a ``StreamConfig`` goes through here so snapshots, the
+        batch driver and the live service agree on the ring shape.
+        """
+        icfg = self.index
+        if self.verify_jaccard and icfg.pk_words == 0:
+            icfg = dataclasses.replace(icfg, pk_words=fp_dim // 32)
+        return icfg
 
 
 class WaveformRing:

@@ -143,6 +143,52 @@ def test_jaccard_identical_and_disjoint():
     assert out[0] == 0.0 and out[1] == 1.0
 
 
+def test_verify_epilogue_pallas_parity(rng):
+    """The ISSUE-8 exact-Jaccard verify epilogue is bit-identical whether
+    it scores through the jnp oracle (``verify=1``) or the Pallas
+    popcount kernel in interpret mode (``verify=2``) — both the raw
+    ``verify_pairs`` gather and the full ``guarded_step`` emission."""
+    import dataclasses
+    from repro.core import lsh as L
+    from repro.stream import index as SI
+
+    lcfg = L.LSHConfig(n_tables=20, n_funcs=4, n_matches=2, bucket_cap=4,
+                       min_dt=0)
+    icfg = SI.StreamIndexConfig(n_buckets=256, bucket_cap=4, pk_slots=64,
+                                pk_words=4)
+    n = 32
+    packed = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+    packed = packed.at[20].set(packed[5])     # one exact repeat
+    bits = np.unpackbits(np.asarray(packed).view(np.uint8), axis=1,
+                         bitorder="little")
+    sigs = L.signatures(jnp.asarray(bits), L.hash_mappings(128, lcfg), lcfg)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    buckets = L.bucket_ids(sigs, icfg.n_buckets, lcfg.seed)
+
+    # raw verify_pairs: oracle vs Pallas on the same ring + candidates
+    state = dataclasses.replace(SI.init_index(lcfg, icfg),
+                                pk=jnp.zeros((64, 4), jnp.uint32)
+                                .at[ids % 64].set(packed))
+    cand = L.Pairs(idx1=ids[:16], idx2=jnp.roll(ids, 7)[:16],
+                   sim=jnp.ones(16, jnp.float32),
+                   valid=jnp.asarray(rng.random(16) < 0.75))
+    j_ref = np.asarray(SI.verify_pairs(state, cand, use_pallas=False))
+    j_pal = np.asarray(SI.verify_pairs(state, cand, use_pallas=True))
+    np.testing.assert_array_equal(j_ref, j_pal)
+
+    # full in-dispatch epilogue: identical VerifiedPairs either route
+    def step(verify):
+        _, pairs, _ = SI.guarded_step(
+            SI.init_index(lcfg, icfg), sigs, buckets, ids, None, lcfg,
+            window=0, packed=packed, max_pairs=32, verify=verify)
+        return pairs
+    p1, p2 = step(1), step(2)
+    for f in ("idx1", "idx2", "sim", "jac", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(p1, f)),
+                                      np.asarray(getattr(p2, f)))
+    assert np.asarray(p1.valid).any()   # the parity claim is non-vacuous
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

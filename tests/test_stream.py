@@ -13,6 +13,7 @@ import pytest
 
 from repro.configs.fast_seismic import (smoke_config,
                                         stream_bounded_smoke_config,
+                                        stream_compact_smoke_config,
                                         stream_deferred_smoke_config,
                                         stream_smoke_config)
 from repro.core import fingerprint as F
@@ -426,6 +427,162 @@ def test_streaming_golden_pair_parity():
     assert got_def == expect_two, (
         sorted(got_def - expect_two), sorted(expect_two - got_def))
     assert len(off & got_def) == len(off)      # gap closed: 100% recall
+
+    # ISSUE 8: compacted emission + exact-Jaccard verify reproduces the
+    # golden pair set bit-exactly (the bound sits above every real
+    # per-block pair count, so nothing overflows on clean data)
+    got_cmp, _, det_cmp = _stream_pairs(cfg, wf, gold["n_chunks"],
+                                        med_mad=med_mad,
+                                        scfg=stream_compact_smoke_config())
+    assert got_cmp == expect_two, (
+        sorted(got_cmp - expect_two), sorted(expect_two - got_cmp))
+    assert det_cmp.telemetry.drop_breakdown()["overflow_pairs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# emission epilogue (ISSUE 8): compaction, overflow, verify ring
+# ---------------------------------------------------------------------------
+
+
+def test_compact_pairs_deterministic_overflow(rng):
+    """Overflow drops are deterministic and counted: the compaction keeps
+    the first ``max_pairs`` valid stream positions (the lexicographically
+    smallest (idx1, idx2), since the stream is pair-sorted) and reports
+    exactly the surplus — identically on every run."""
+    m = 64
+    valid = np.zeros(m, bool)
+    valid[[3, 7, 10, 21, 40, 41, 59]] = True
+    pairs = L.Pairs(idx1=jnp.arange(m, dtype=jnp.int32),
+                    idx2=jnp.arange(m, 2 * m, dtype=jnp.int32),
+                    sim=jnp.full((m,), 5, jnp.int32),
+                    valid=jnp.asarray(valid))
+    outs = [SI.compact_pairs(pairs, 4) for _ in range(2)]
+    for compact, overflow in outs:
+        kept = np.asarray(compact.valid)
+        assert int(kept.sum()) == 4
+        assert int(overflow) == 3
+        # first four valid stream positions survive
+        assert sorted(np.asarray(compact.idx1)[kept].tolist()) \
+            == [3, 7, 10, 21]
+    a, b = outs
+    assert np.array_equal(np.asarray(a[0].idx1), np.asarray(b[0].idx1))
+    # bound above the valid count: everything kept, zero overflow
+    all_kept, overflow = SI.compact_pairs(pairs, 16)
+    assert int(overflow) == 0
+    assert int(np.asarray(all_kept.valid).sum()) == 7
+
+
+def test_stream_overflow_counted_and_deterministic():
+    """A bound below the real per-block pair count drops deterministically
+    and reconciles: dense emission − compacted emission = the registry's
+    ``step_overflow_pairs_total`` (mirrored from the in-dispatch QC
+    vector), and two runs of the starved config emit identical pairs."""
+    cfg = smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=240.0, n_stations=1,
+                                  n_sources=2, events_per_source=6,
+                                  event_snr=4.0, seed=13))
+    wf = ds.waveforms[0]
+
+    def run(scfg):
+        det = StreamingDetector(cfg, scfg, n_stations=1)
+        for chunk in np.array_split(wf, 6):
+            det.push(chunk)
+        det.flush()
+        tri = det.stations[0].accumulated_pairs()
+        v = np.asarray(tri.valid)
+        got = set(zip(np.asarray(tri.idx1)[v].tolist(),
+                      np.asarray(tri.idx2)[v].tolist()))
+        return got, det
+
+    dense, _ = run(stream_smoke_config())
+    starved = dataclasses.replace(stream_compact_smoke_config(),
+                                  max_pairs_per_block=1)
+    got1, det1 = run(starved)
+    got2, det2 = run(starved)
+    assert got1 == got2                      # deterministic drop rule
+    assert got1 <= dense                     # never invents pairs
+    overflow = det1.telemetry.drop_breakdown()["overflow_pairs"]
+    assert overflow == det2.telemetry.drop_breakdown()["overflow_pairs"]
+    assert len(dense) - len(got1) == overflow, \
+        (len(dense), len(got1), overflow)
+    assert overflow > 0                      # the bound actually bit
+
+
+def test_compact_snapshot_restores_packed_ring(tmp_path):
+    """Mid-stream snapshot under the verify config: the bit-packed
+    fingerprint ring restores bit-exactly and the resumed stream emits
+    the uninterrupted stream's pairs."""
+    cfg, scfg = smoke_config(), stream_compact_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=600.0, n_stations=1,
+                                  n_sources=2, events_per_source=5,
+                                  event_snr=3.0, seed=9))
+    chunks = np.array_split(ds.waveforms[:1], 8, axis=1)
+
+    det = StreamingDetector(cfg, scfg, n_stations=1)
+    for c in chunks[:5]:
+        det.push(c)
+    det.snapshot(str(tmp_path), step=5)
+    pk_before = np.asarray(jax.device_get(det.stations[0].state.pk))
+    assert pk_before.any()       # the ring has really been written
+    for c in chunks[5:]:
+        det.push(c)
+
+    det2, step = StreamingDetector.restore(str(tmp_path), cfg, scfg)
+    assert step == 5
+    pk_after = np.asarray(jax.device_get(det2.stations[0].state.pk))
+    assert np.array_equal(pk_before, pk_after)
+    for c in chunks[5:]:
+        det2.push(c)
+    e0, p0, f0 = det.stations[0].finalize()
+    e1, p1, f1 = det2.stations[0].finalize()
+    np.testing.assert_array_equal(np.asarray(p0.idx1), np.asarray(p1.idx1))
+    np.testing.assert_array_equal(np.asarray(p0.valid),
+                                  np.asarray(p1.valid))
+    assert f0 == f1
+
+    # layout guard: restoring a verify snapshot without verify is rejected
+    with pytest.raises(ValueError, match="verify_jaccard"):
+        StreamingDetector.restore(str(tmp_path), cfg, stream_smoke_config())
+
+
+def test_verify_jaccard_channel_and_threshold(rng):
+    """The verify epilogue emits exact Jaccard for every surviving pair
+    (identical fingerprints score 1.0) and ``verify_min_jaccard`` drops
+    low-similarity hash matches in-dispatch."""
+    lcfg = CFG
+    icfg = StreamIndexConfig(n_buckets=256, bucket_cap=4, pk_slots=64,
+                             pk_words=4)
+    n = 16
+    packed = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+    packed = packed.at[12].set(packed[3])     # exact repeat → Jaccard 1.0
+    bits = np.unpackbits(
+        np.asarray(packed).view(np.uint8), axis=1, bitorder="little")
+    sigs = L.signatures(jnp.asarray(bits), L.hash_mappings(128, lcfg), lcfg)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    buckets = L.bucket_ids(sigs, icfg.n_buckets, lcfg.seed)
+
+    def step(min_jac):
+        state = SI.init_index(lcfg, icfg)
+        _, pairs, qc = SI.guarded_step(
+            state, sigs, buckets, ids, None, lcfg, window=0,
+            packed=packed, max_pairs=32, verify=1, min_jac=min_jac)
+        return pairs
+
+    pairs = step(0.0)
+    v = np.asarray(pairs.valid)
+    got = {p: j for p, j in zip(
+        zip(np.asarray(pairs.idx1)[v].tolist(),
+            np.asarray(pairs.idx2)[v].tolist()),
+        np.asarray(pairs.jac)[v].tolist())}
+    assert got[(3, 12)] == pytest.approx(1.0)
+    assert all(0.0 <= j <= 1.0 for j in got.values())
+
+    # threshold just under 1.0: only the exact repeat survives
+    strict = step(0.99)
+    sv = np.asarray(strict.valid)
+    kept = set(zip(np.asarray(strict.idx1)[sv].tolist(),
+                   np.asarray(strict.idx2)[sv].tolist()))
+    assert kept == {(3, 12)}
 
 
 # ---------------------------------------------------------------------------
@@ -917,9 +1074,9 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
     from benchmarks import bench_e2e
     out = bench_e2e.main(["--quick"])
-    assert out["schema"] == "bench-e2e/v2"
+    assert out["schema"] == "bench-e2e/v3"
     assert set(out) >= {"config_hash", "backend", "step", "points",
-                        "offline_replay", "ratios", "metrics"}
+                        "offline_replay", "emission", "ratios", "metrics"}
     assert out["metrics"]["schema"] == "stream-metrics/v1"
     assert out["metrics"]["stations"] == 4
     written = json.loads((tmp_path / "BENCH_e2e.json").read_text())
@@ -940,3 +1097,23 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     assert replay["speedup_vs_legacy_4st"] >= 1.0
     assert out["ratios"]["offline_replay_speedup_vs_legacy_4st"] \
         == replay["speedup_vs_legacy_4st"]
+    # v3: the repeat-seeded stream exercises real emission (the v2 points
+    # all recorded pairs: 0) and every point carries the wall split
+    assert all(p["pairs"] > 0 for p in out["emission"]["points"])
+    for p in out["points"]:
+        assert p["pairs"] > 0
+        assert {"device_step_ms_p50", "host_tail_ms_p50",
+                "pair_bytes_per_block"} <= set(p)
+    # emission A/B (ISSUE 8): dense vs compact at 1/4/8 stations, the
+    # compacted pipe is the configured ≥10x smaller, and compaction
+    # drops nothing on the clean seeded stream (identical pair counts)
+    em = {(p["stations"], p["variant"]): p
+          for p in out["emission"]["points"]}
+    assert sorted(em) == [(s, v) for s in (1, 4, 8)
+                          for v in ("compact", "dense")]
+    assert out["emission"]["pair_byte_reduction_t100"] >= 10.0
+    assert out["ratios"]["emission_pair_byte_reduction_t100"] \
+        == out["emission"]["pair_byte_reduction_t100"]
+    for s in (1, 4, 8):
+        assert em[(s, "compact")]["pairs"] == em[(s, "dense")]["pairs"]
+        assert em[(s, "compact")]["overflow_pairs"] == 0
