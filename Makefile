@@ -2,7 +2,8 @@
 # repo root (the benchmarks package).
 PY := PYTHONPATH=src:. python
 
-.PHONY: test test-all bench bench-smoke bench-e2e bench-serve bench-emit
+.PHONY: test test-all bench bench-smoke bench-e2e bench-serve bench-emit \
+	bench-assoc
 
 test:            ## tier-1 suite (what the driver verifies)
 	$(PY) -m pytest -x -q -m "not slow"
@@ -21,6 +22,9 @@ bench-serve:     ## concurrent serving-tier benchmark (BENCH_serve.json)
 
 bench-emit:      ## emission-compaction A/B only (BENCH_e2e.json emission key)
 	$(PY) -m benchmarks.bench_e2e --emit
+
+bench-assoc:     ## moveout-gate A/B only (BENCH_stream.json located_scenario key)
+	$(PY) -m benchmarks.bench_stream --assoc-only
 
 bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream + serve
 	$(PY) -m benchmarks.run --e2e --quick --scenario --serve

@@ -24,6 +24,15 @@ in-dispatch §6.5 occurrence limiter carries the same ≥ 10× acceptance.
 ``--scenario-only`` updates just the ``scenario`` key of an existing
 ``BENCH_stream.json`` (the ``make bench-smoke`` hook).
 
+``--assoc`` measures the located-association claim (ISSUE 9): on a
+physical-geometry network under cross-station coincidence pressure
+(independent repeating-noise bursts at every station), the
+moveout-consistency gate cuts ≥3-station false associations relative to
+the pairwise §7 baseline while keeping true groups, and the kept groups
+locate within the acceptance bound (median origin error ≤ 2 coarse grid
+cells). ``--assoc-only`` updates just the ``located_scenario`` key
+(the ``make bench-assoc`` hook).
+
 Emits csv lines plus a ``BENCH_stream.json`` trajectory point.
 """
 from __future__ import annotations
@@ -245,6 +254,121 @@ def additive_scenario_point(duration_s: float = 600.0) -> dict:
     return point
 
 
+def located_scenario_point(duration_s: float = 600.0) -> dict:
+    """Moveout-consistency A/B (ISSUE 9): cross-station false
+    associations under coincidence pressure, pairwise §7 baseline vs the
+    migration-stack gate.
+
+    Independent repeating-noise bursts at every station create per-
+    station repeats whose (dt, onset) coincide across stations by chance
+    — exactly the pairwise association's blind spot, since it never
+    checks that the group's onsets fit *any* physical moveout. Three
+    runs over the same physical-geometry network: the clean trace (no
+    bursts, locate off) gives the golden association set; the noisy
+    trace runs once with ``reject_inconsistent=False`` (the pairwise
+    baseline) and once gated. A detection matching no golden
+    (dt, onset) within the association tolerances is a false
+    association. Two stations always admit a perfect-residual origin, so
+    the gate is discriminative for ≥3-station groups — the A/B is
+    recorded on those.
+    """
+    import dataclasses
+    from repro.configs.fast_seismic import locate_config
+    from repro.core import (AlignConfig, FingerprintConfig, LSHConfig)
+    from repro.core.detect import detect_events
+
+    # the Fig-7 sensitivity tier (tests/test_detect_e2e.py shape): 1 s
+    # lags, short windows, 100 tables, permissive clustering — the
+    # regime where repeating noise actually reaches the association
+    # layer instead of being diluted inside a long analysis window
+    fcfg = FingerprintConfig(img_time=16, img_hop=4, top_k=200,
+                             mad_sample_rate=1.0)
+    lcfg = LSHConfig(n_tables=100, n_funcs=4, n_matches=2, bucket_cap=8,
+                     min_dt=fcfg.overlap_fingerprints, occurrence_frac=0.05)
+    acfg = AlignConfig(channel_threshold=3, min_cluster_sim=4,
+                       min_cluster_size=1, min_stations=2,
+                       onset_tol=int(10 * fcfg.fs / fcfg.lag_samples))
+    cfg = DetectConfig(fingerprint=fcfg, lsh=lcfg, align=acfg,
+                       locate=locate_config())
+    n_st = 6
+
+    def mk(noisy):
+        # period shared network-wide, phase per-station: inter-burst
+        # times agree across stations, onsets fit no moveout
+        return make_dataset(SynthConfig(
+            duration_s=duration_s, n_stations=n_st, n_sources=3,
+            events_per_source=4, event_snr=3.0, seed=3,
+            physical_geometry=True,
+            repeating_noise_stations=tuple(range(n_st)) if noisy else (),
+            repeating_noise_period_s=45.0, repeating_noise_amp=4.0))
+
+    ds_clean, ds = mk(False), mk(True)   # same events/geometry, ± bursts
+
+    def run(wf, locate):
+        c = dataclasses.replace(cfg, locate=locate)
+        det, _, _, stats = detect_events(
+            wf, c, station_xy=ds.station_xy if locate else None)
+        return {k: np.asarray(v) for k, v in det.items()}, stats
+
+    golden, _ = run(ds_clean.waveforms, None)
+    base, _ = run(ds.waveforms, dataclasses.replace(
+        cfg.locate, reject_inconsistent=False))
+    gated, gstats = run(ds.waveforms, cfg.locate)
+
+    acfg = cfg.align
+    gv = golden["valid"]
+    gold = np.stack([golden["dt"][gv], golden["onset"][gv]], axis=1)
+
+    def classify(det, min_st):
+        idx = np.nonzero(det["valid"] & (det["n_stations"] >= min_st))[0]
+        is_true = np.array([bool(np.any(
+            (np.abs(gold[:, 0] - det["dt"][g]) <= acfg.dt_tol)
+            & (np.abs(gold[:, 1] - det["onset"][g]) <= acfg.onset_tol)))
+            for g in idx], bool)
+        return idx, is_true
+
+    bi, bt = classify(base, 3)
+    gi, gt = classify(gated, 3)
+    false_base, false_gated = int((~bt).sum()), int((~gt).sum())
+
+    # origin accuracy over the well-constrained (≥4-station) true groups
+    errs = []
+    for g, t in zip(gi, gt):
+        if (t and gated["n_stations"][g] >= 4
+                and np.isfinite(gated["x_km"][g])):
+            p = np.array([gated["x_km"][g], gated["y_km"][g]])
+            errs.append(float(np.min(np.linalg.norm(
+                ds.source_xy - p, axis=1))))
+    cell = cfg.locate.coarse_cell_km
+    med = float(np.median(errs)) if errs else None
+    point = {
+        "schema": "bench-stream-located/v1",
+        "duration_s": duration_s,
+        "stations": n_st,
+        "golden_groups": int(gv.sum()),
+        "multi3_groups_pairwise": int(bi.size),
+        "multi3_groups_gated": int(gi.size),
+        "false_assoc_pairwise": false_base,
+        "false_assoc_gated": false_gated,
+        "false_assoc_reduction": round(false_base / max(false_gated, 1), 2),
+        "true_kept_pairwise": int(bt.sum()),
+        "true_kept_gated": int(gt.sum()),
+        "moveout_rejected": int(gstats.get("moveout_rejected", 0)),
+        "located_groups": int(np.isfinite(
+            gated["x_km"][gated["valid"]]).sum()),
+        "median_origin_err_km": round(med, 2) if errs else None,
+        "median_origin_err_cells": (round(med / cell, 2)
+                                    if errs else None),
+        "coarse_cell_km": round(cell, 3),
+    }
+    csv_line("stream.located_false_assoc_reduction",
+             point["false_assoc_reduction"],
+             f"pairwise={false_base} gated={false_gated} "
+             f"true_kept={int(gt.sum())}/{int(bt.sum())} "
+             f"origin_err_cells={point['median_origin_err_cells']}")
+    return point
+
+
 def _write_point(point: dict) -> str:
     out = os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
                        "BENCH_stream.json")
@@ -267,15 +391,26 @@ def main(argv=None):
                     help="update only the scenario key of an existing "
                          "BENCH_stream.json (tier-1-safe smoke)")
     ap.add_argument("--scenario-duration-s", type=float, default=600.0)
+    ap.add_argument("--assoc", action="store_true",
+                    help="also record the located-association moveout "
+                         "A/B point into BENCH_stream.json")
+    ap.add_argument("--assoc-only", action="store_true",
+                    help="update only the located_scenario key of an "
+                         "existing BENCH_stream.json (make bench-assoc)")
+    ap.add_argument("--assoc-duration-s", type=float, default=600.0)
     args = ap.parse_args(argv)
-    if args.scenario_only:
+    if args.scenario_only or args.assoc_only:
         path = os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
                             "BENCH_stream.json")
         point = {}
         if os.path.exists(path):
             with open(path) as f:
                 point = json.load(f)
-        point["scenario"] = scenario_point(args.scenario_duration_s)
+        if args.scenario_only:
+            point["scenario"] = scenario_point(args.scenario_duration_s)
+        if args.assoc_only:
+            point["located_scenario"] = located_scenario_point(
+                args.assoc_duration_s)
         _write_point(point)
         return point
     ds, fcfg, bits, packed = station_fingerprints(station=1)
@@ -342,6 +477,9 @@ def main(argv=None):
         point["rolling_memory"] = memory_point(args.memory_duration_s)
     if args.scenario:
         point["scenario"] = scenario_point(args.scenario_duration_s)
+    if args.assoc:
+        point["located_scenario"] = located_scenario_point(
+            args.assoc_duration_s)
     _write_point(point)
     return point
 

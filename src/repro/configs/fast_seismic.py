@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import AlignConfig, DetectConfig, FingerprintConfig, LSHConfig
+from repro.core.locate import LocateConfig
 from repro.stream.index import StreamIndexConfig
 from repro.stream.ingest import StreamConfig
 
@@ -43,6 +44,41 @@ def smoke_config() -> DetectConfig:
                       min_dt=fp.overlap_fingerprints, occurrence_frac=0.05),
         align=AlignConfig(min_cluster_size=1, min_cluster_sim=4),
     )
+
+
+def locate_config() -> LocateConfig:
+    """Paper-scale location tier (ISSUE 9): a 50 km aperture gridded
+    12×12 (≈4 km coarse cells) and refined twice to sub-300 m cells, a
+    homogeneous 6 km/s halfspace at 8 km focal depth — the Diablo Canyon
+    network geometry regime. At the 2 s fingerprint lag the moveout
+    across the aperture is a handful of lags, so the consistency gate is
+    tight (2 lags of weighted residual) and cross-station coincidences
+    that match no physical origin are rejected."""
+    return LocateConfig(grid_n=12, extent_km=50.0, depth_km=8.0,
+                        velocity_km_s=6.0, refine_levels=2,
+                        moveout_tol_lags=2.0)
+
+
+def locate_smoke_config() -> LocateConfig:
+    """CPU-scale location tier matching the synth scenario geometry
+    (``SynthConfig`` physical defaults: 50 km extent, 8 km depth,
+    6 km/s). A coarser 8×8 grid keeps the vmapped stack tiny; the synth
+    scenario's onsets are exact to one lag, so a 2-lag residual gate
+    separates physical groups from coincidences on smoke traces too."""
+    return LocateConfig(grid_n=8, extent_km=50.0, depth_km=8.0,
+                        velocity_km_s=6.0, refine_levels=2,
+                        moveout_tol_lags=2.0, pad_groups=16)
+
+
+def located_smoke_config() -> DetectConfig:
+    """``smoke_config`` + the association-layer physics: location /
+    weighting / magnitude on every network detection, the tolerance-
+    chaining extent cap, and moveout-consistency rejection."""
+    base = smoke_config()
+    return dataclasses.replace(
+        base,
+        align=dataclasses.replace(base.align, max_group_extent=90),
+        locate=locate_smoke_config())
 
 
 def stream_config() -> StreamConfig:

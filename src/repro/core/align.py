@@ -39,6 +39,13 @@ class AlignConfig:
     dt_tol: int = 2                # network: inter-event-time tolerance
     onset_tol: int = 30            # network: arrival-window tolerance
     min_stations: int = 2
+    # network groups start on *consecutive* deltas, so a chain of onsets
+    # each within onset_tol can link events spanning many tolerances into
+    # one group. The cap bounds a group's onset span (> 0); chains beyond
+    # it are dropped as physically implausible — no single origin produces
+    # arrivals that far apart (the locate tier's moveout-consistency
+    # check is the model-based version of the same bound). 0 = unbounded.
+    max_group_extent: int = 0
 
 
 @jax.tree_util.register_dataclass
@@ -170,17 +177,47 @@ def cluster_station(pairs: Pairs, cfg: AlignConfig) -> Events:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_stations"))
+def _segment_or(flags: jax.Array, words: jax.Array) -> jax.Array:
+    """Running bitwise-OR of ``words`` within segments started by ``flags``.
+
+    Classic segmented-scan monoid over (flag, value) pairs: a right
+    operand that starts a segment resets the carry, so the OR never leaks
+    across segment boundaries. Returns the per-row prefix OR; the full
+    segment OR sits at each segment's last row.
+    """
+
+    def op(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[:, None], vb, va | vb)
+
+    _, run = jax.lax.associative_scan(op, (flags, words))
+    return run
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_stations",
+                                             "with_onsets"))
 def associate_network(events: Sequence[Events], cfg: AlignConfig,
-                      n_stations: int) -> dict:
+                      n_stations: int, with_onsets: bool = False) -> dict:
     """Group per-station events by (dt, onset); require ≥ min_stations.
 
     Exploits the inter-event-time invariance (Figure 9): the same pair of
     reoccurring earthquakes shows the same dt at every station, with close
-    onsets. Station multiplicity is computed with a one-hot segment-max
-    (≤ 32 stations per bitset word analog).
+    onsets. Station multiplicity uses packed int32 bitmask words (32
+    stations per word, ``ceil(S/32)`` words per row) segment-OR'd and
+    popcounted — O(p·⌈S/32⌉) memory with no station cap, so the sharded
+    100s-of-stations pool feeds through the same path.
+
+    ``max_group_extent`` > 0 drops groups whose onset span exceeds it
+    (tolerance-chaining bound; see AlignConfig). ``with_onsets`` adds the
+    dense per-group (p, S) station onset / score matrices the locate tier
+    stacks over — opt-in because they are the one O(p·S) output here.
     """
-    assert n_stations <= 32
+    if n_stations <= 0:
+        raise ValueError(f"n_stations must be positive, got {n_stations}")
+    if len(events) != n_stations:
+        raise ValueError(f"got {len(events)} per-station Events for "
+                         f"n_stations={n_stations}")
     dt = jnp.concatenate([e.dt for e in events])
     onset = jnp.concatenate([e.onset for e in events])
     score = jnp.concatenate([e.score for e in events])
@@ -198,25 +235,56 @@ def associate_network(events: Sequence[Events], cfg: AlignConfig,
            | (jnp.abs(on_s - pon) > cfg.onset_tol)
            | (val_s == 0))
     gid = segment_ids_from_starts(new)
-    onehot = (jax.nn.one_hot(sid_s, n_stations, dtype=jnp.int32)
-              * val_s[:, None])
-    st_present = jax.ops.segment_max(onehot, gid, num_segments=p)
-    n_st = st_present.sum(axis=1)
+    # packed station bitmask: word w of row r holds bit (sid mod 32) iff
+    # sid div 32 == w. Rows are gid-contiguous after the sort, so a
+    # segmented prefix-OR + the segment's last row gives the group's
+    # station set; popcount sums the multiplicity.
+    n_words = -(-n_stations // 32)
+    bit = jnp.where(val_s > 0,
+                    jnp.left_shift(jnp.uint32(1),
+                                   (sid_s % 32).astype(jnp.uint32)),
+                    jnp.uint32(0))
+    words = jnp.where((sid_s // 32)[:, None]
+                      == jnp.arange(n_words, dtype=sid_s.dtype)[None, :],
+                      bit[:, None], jnp.uint32(0))
+    run_or = _segment_or(new, words)
+    last = jnp.clip(jax.ops.segment_max(jnp.arange(p), gid, num_segments=p),
+                    0, p - 1)
+    n_st = jax.lax.population_count(run_or[last]).sum(
+        axis=1).astype(jnp.int32)
     g_score = jax.ops.segment_sum(jnp.where(val_s > 0, sc_s, 0), gid,
                                   num_segments=p)
     g_dt = jax.ops.segment_min(jnp.where(val_s > 0, dt_s, INVALID), gid,
                                num_segments=p)
     g_onset = jax.ops.segment_min(jnp.where(val_s > 0, on_s, INVALID), gid,
                                   num_segments=p)
+    g_on_max = jax.ops.segment_max(jnp.where(val_s > 0, on_s, -1), gid,
+                                   num_segments=p)
+    span = jnp.maximum(g_on_max - g_onset, 0)
     rep = new & (val_s > 0)
     keep = rep & (n_st[gid] >= cfg.min_stations)
-    return {
+    if cfg.max_group_extent > 0:
+        keep &= span[gid] <= cfg.max_group_extent
+    out = {
         "dt": jnp.where(keep, g_dt[gid], INVALID),
         "onset": jnp.where(keep, g_onset[gid], INVALID),
+        "onset_span": jnp.where(keep, span[gid], 0),
         "n_stations": jnp.where(keep, n_st[gid], 0),
         "score": jnp.where(keep, g_score[gid], 0),
         "valid": keep,
     }
+    if with_onsets:
+        on_station = (sid_s[:, None]
+                      == jnp.arange(n_stations, dtype=sid_s.dtype)[None, :])
+        live = on_station & (val_s > 0)[:, None]
+        onset_mat = jax.ops.segment_min(
+            jnp.where(live, on_s[:, None], INVALID), gid, num_segments=p)
+        score_mat = jax.ops.segment_sum(
+            jnp.where(live, sc_s[:, None], 0), gid, num_segments=p)
+        out["station_onset"] = jnp.where(keep[:, None], onset_mat[gid],
+                                         INVALID)
+        out["station_score"] = jnp.where(keep[:, None], score_mat[gid], 0)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,7 @@ from repro.core import fingerprint as fp_mod
 from repro.core import lsh as lsh_mod
 from repro.core.align import AlignConfig, Events
 from repro.core.fingerprint import FingerprintConfig
+from repro.core.locate import LocateConfig
 from repro.core.lsh import LSHConfig, Pairs
 
 
@@ -62,6 +63,9 @@ class DetectConfig:
     fingerprint: FingerprintConfig = FingerprintConfig()
     lsh: LSHConfig = LSHConfig()
     align: AlignConfig = AlignConfig()
+    # optional location/magnitude tier (core.locate); None = association
+    # stops at the pairwise network stage, bit-identical to pre-locate.
+    locate: "LocateConfig | None" = None
 
 
 @dataclasses.dataclass
@@ -100,6 +104,39 @@ def _block(x):
     return time.perf_counter()
 
 
+def _locate_tail(detections: dict, waveforms: np.ndarray,
+                 qc_sum: np.ndarray, n_fp: int,
+                 station_xy: np.ndarray, cfg: DetectConfig,
+                 stats: dict) -> dict:
+    """Batch-replay location/magnitude stage: QC-counter station weights
+    → migration stack over the associated groups → relative magnitudes
+    from whole-trace per-fingerprint peak amplitudes. Mutates ``stats``
+    (adds ``moveout_rejected``) and returns a new detections dict with
+    the located columns; ``reject_inconsistent`` masks failing groups
+    out of ``valid``."""
+    from repro.core import locate as locate_mod
+    from repro.stream import index as index_mod
+    fcfg = cfg.fingerprint
+    n_stations = waveforms.shape[0]
+    qdicts = [{name: int(qc_sum[st, k])
+               for k, name in enumerate(index_mod.QC_FIELDS)}
+              for st in range(n_stations)]
+    weights = locate_mod.station_weights(
+        qdicts, [waveforms.shape[1]] * n_stations,
+        [n_fp] * n_stations, cfg.locate)
+    fp_amp = [locate_mod.fingerprint_amplitudes(
+        waveforms[st], fcfg.lag_samples, fcfg.window_samples)
+        for st in range(n_stations)]
+
+    def amp(st, i):
+        a = fp_amp[st]
+        return float(a[i]) if 0 <= i < a.size else None
+
+    return locate_mod.attach_location(
+        detections, np.asarray(station_xy, np.float32), weights,
+        fcfg.lag_samples / fcfg.fs, cfg.locate, amp, stats)
+
+
 def replay_config(lcfg: LSHConfig, block_fingerprints: int = 256,
                   n_buckets: int = 4096):
     """Default ``StreamConfig`` for batch replay.
@@ -120,8 +157,10 @@ def replay_config(lcfg: LSHConfig, block_fingerprints: int = 256,
 def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
                   n_partitions: int = 1, scfg=None,
                   keep_pairs: bool = False,
-                  tracer=None) -> tuple[dict, list[Events],
-                                        StageTimes, dict]:
+                  tracer=None,
+                  station_xy: np.ndarray | None = None
+                  ) -> tuple[dict, list[Events],
+                             StageTimes, dict]:
     """(n_stations, T) waveforms → network detections, via the streaming
     core (batch = replay).
 
@@ -140,7 +179,11 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
     read back from the per-name totals. Pass ``tracer`` (e.g. one built
     with ``jsonl_path=...`` or ``profile_dir=...``) to capture the
     structured trace; by default a private tracer provides the totals
-    only. With ``scfg.telemetry`` on (the default), the replay also
+    only. With ``cfg.locate`` set and ``station_xy`` (S, 2) given, the
+    association output additionally carries migration-located origins,
+    moveout-consistency flags and relative magnitudes (see
+    :mod:`repro.core.locate`); groups failing the moveout check are
+    masked out of ``valid`` when ``cfg.locate.reject_inconsistent``. With ``scfg.telemetry`` on (the default), the replay also
     collects the in-dispatch ``index.QC_FIELDS`` counters — summed over
     blocks into ``stats["drops"]`` (per guard, summed over stations) with
     per-station vectors under ``stats["station<i>_qc"]`` — at no extra
@@ -246,11 +289,16 @@ def detect_events(waveforms: np.ndarray, cfg: DetectConfig,
             station_events.append(events)
             station_pairs.append(pairs)
 
-        detections = align_mod.associate_network(station_events, acfg,
-                                                 n_stations)
+        with_locate = cfg.locate is not None and station_xy is not None \
+            and n_stations >= 2
+        detections = align_mod.associate_network(
+            station_events, acfg, n_stations, with_onsets=with_locate)
         jax.block_until_ready(detections["valid"])
+        if with_locate:
+            detections = _locate_tail(detections, waveforms, qc_sum, n_fp,
+                                      station_xy, cfg, stats)
     times = StageTimes.from_spans(tracer)
-    stats["detections"] = int(detections["valid"].sum())
+    stats["detections"] = int(np.asarray(detections["valid"]).sum())
     if ctr:
         stats["drops"] = {
             name: int(qc_sum[:, k].sum())

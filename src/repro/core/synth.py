@@ -40,10 +40,30 @@ class SynthConfig:
     # correlated repeating noise (paper Fig 7) at these stations
     repeating_noise_stations: tuple[int, ...] = ()
     repeating_noise_rate_hz: float = 0.05   # bursts per second
+    # > 0: bursts arrive *periodically* at this period with a random
+    # station-local phase (± 1 s jitter) instead of Poisson times — the
+    # shared-period / independent-phase shape of anthropogenic noise
+    # (machinery on a common duty cycle). Inter-burst times then agree
+    # across stations while onsets fit no physical moveout: the
+    # cross-station coincidence pressure the located-association A/B
+    # (bench_stream --assoc) measures. 0 keeps the Poisson draw path
+    # and the golden traces byte-identical.
+    repeating_noise_period_s: float = 0.0
+    repeating_noise_amp: float = 1.0        # template multiplier
     # narrowband hum (outside 3-20 Hz band) at these stations
     hum_stations: tuple[int, ...] = ()
     hum_freq_hz: float = 30.0
     hum_amp: float = 1.5
+    # physical station geometry: stations and sources get coordinates on
+    # a [0, extent_km]² surface grid and arrival delays become real
+    # travel times (hypocentral distance / velocity) instead of uniform
+    # draws — located scenarios then have ground-truth origins. Opt-in:
+    # the default (False) keeps the RNG draw sequence and therefore the
+    # golden traces byte-identical.
+    physical_geometry: bool = False
+    extent_km: float = 50.0
+    depth_km: float = 8.0
+    velocity_km_s: float = 6.0
     seed: int = 0
 
 
@@ -54,6 +74,9 @@ class SynthDataset:
     event_sources: np.ndarray      # (n_events,) int
     arrival_delays: np.ndarray     # (n_sources, n_stations) seconds
     cfg: SynthConfig
+    # physical-geometry ground truth (None unless cfg.physical_geometry)
+    station_xy: np.ndarray | None = None   # (n_stations, 2) km
+    source_xy: np.ndarray | None = None    # (n_sources, 2) km
 
     def arrival_time(self, ev: int, station: int) -> float:
         return float(self.event_times[ev]
@@ -124,7 +147,21 @@ def make_dataset(cfg: SynthConfig) -> SynthDataset:
 
     # sources & events
     templates = [_source_template(rng, cfg) for _ in range(cfg.n_sources)]
-    delays = rng.uniform(1.0, 8.0, size=(cfg.n_sources, cfg.n_stations))
+    station_xy = source_xy = None
+    if cfg.physical_geometry:
+        # a separate generator so the main draw sequence (and the golden
+        # traces pinned on it) is untouched when geometry is off
+        grng = np.random.default_rng(cfg.seed ^ 0x9E0C37)
+        station_xy = grng.uniform(0.05 * cfg.extent_km, 0.95 * cfg.extent_km,
+                                  size=(cfg.n_stations, 2))
+        source_xy = grng.uniform(0.1 * cfg.extent_km, 0.9 * cfg.extent_km,
+                                 size=(cfg.n_sources, 2))
+        dist = np.sqrt(((source_xy[:, None, :]
+                         - station_xy[None, :, :]) ** 2).sum(-1)
+                       + cfg.depth_km ** 2)
+        delays = dist / cfg.velocity_km_s
+    else:
+        delays = rng.uniform(1.0, 8.0, size=(cfg.n_sources, cfg.n_stations))
     ev_times, ev_src = [], []
     margin = cfg.event_duration_s + delays.max() + 2.0
     for s in range(cfg.n_sources):
@@ -150,11 +187,22 @@ def make_dataset(cfg: SynthConfig) -> SynthDataset:
     # correlated repeating noise
     rep_tpl = _repeating_noise_template(rng, cfg)
     for st in cfg.repeating_noise_stations:
-        n_bursts = int(cfg.duration_s * cfg.repeating_noise_rate_hz)
-        for t0 in rng.uniform(0, cfg.duration_s - 3.0, size=n_bursts):
-            i0 = int(t0 * cfg.fs)
+        if cfg.repeating_noise_period_s > 0:
+            # shared period, independent station phase: exact spacing
+            # keeps the repeats aligned to the fingerprint lag grid (the
+            # duty-cycle regularity that makes anthropogenic noise
+            # self-similar), so inter-burst times agree across stations
+            # while the onsets fit no physical moveout — the coincidence
+            # pressure of the located-association A/B
+            p = cfg.repeating_noise_period_s
+            t0s = np.arange(rng.uniform(0, p), cfg.duration_s - 3.0, p)
+        else:
+            n_bursts = int(cfg.duration_s * cfg.repeating_noise_rate_hz)
+            t0s = rng.uniform(0, cfg.duration_s - 3.0, size=n_bursts)
+        for t0 in t0s:
+            i0 = int(max(t0, 0.0) * cfg.fs)
             seg = wf[st, i0:i0 + rep_tpl.size]
-            seg += rep_tpl[: seg.size]
+            seg += cfg.repeating_noise_amp * rep_tpl[: seg.size]
 
     # narrowband bursts: identical out-of-band (30 Hz) tone bursts that
     # repeat — stationary hum would be cancelled by the MAD normalization
@@ -173,7 +221,8 @@ def make_dataset(cfg: SynthConfig) -> SynthDataset:
 
     return SynthDataset(waveforms=wf.astype(np.float32),
                         event_times=ev_times, event_sources=ev_src,
-                        arrival_delays=delays, cfg=cfg)
+                        arrival_delays=delays, cfg=cfg,
+                        station_xy=station_xy, source_xy=source_xy)
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +290,15 @@ class ScenarioDataset:
     corrupt: np.ndarray            # (S, T) bool — samples altered in place
     injections: dict               # per-pathology logs (spans, stations)
     cfg: ScenarioConfig
+
+    @property
+    def station_xy(self) -> np.ndarray | None:
+        """Ground-truth station geometry (physical-geometry bases only)."""
+        return self.clean.station_xy
+
+    @property
+    def source_xy(self) -> np.ndarray | None:
+        return self.clean.source_xy
 
     def clean_fp_ids(self, station: int, window_samples: int,
                      lag_samples: int) -> np.ndarray:

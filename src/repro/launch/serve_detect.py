@@ -78,6 +78,13 @@ Live health surface (ISSUE 6):
                           path to ``P``.
   ``--dirty``             ingest the fault-injected scenario stream
                           through the quality-hardened config.
+  ``--locate``            located alert rows (ISSUE 9): the synthetic
+                          network gets physical station geometry, the
+                          ingesting detector runs the location /
+                          magnitude tier, and every live alert prints as
+                          an ``ALERT`` JSON line carrying origin (km),
+                          relative magnitude and the upgrade flag, with
+                          an aggregate ``located`` block in the RESULT.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_detect --requests 12
@@ -554,9 +561,25 @@ def main(argv=None):
     ap.add_argument("--dirty", action="store_true",
                     help="ingest the fault-injected scenario stream "
                          "through the quality-hardened config")
+    ap.add_argument("--locate", action="store_true",
+                    help="station geometry + location/magnitude tier: "
+                         "alerts carry a migration-stacked origin and a "
+                         "relative magnitude (defaults "
+                         "--filter-window-fp 64 so alerts emit live)")
     args = ap.parse_args(argv)
 
-    cfg = smoke_config()
+    if args.locate:
+        from repro.configs.fast_seismic import located_smoke_config
+        cfg = located_smoke_config()
+        # live alerts need the bounded regime: a sliding index window
+        # plus the rolling occurrence filter (same shape as
+        # stream_bounded_smoke_config)
+        if not args.window_fp:
+            args.window_fp = 128
+        if not args.filter_window_fp:
+            args.filter_window_fp = 64
+    else:
+        cfg = smoke_config()
     if args.dirty:
         from repro.configs.fast_seismic import stream_dirty_smoke_config
         scfg = stream_dirty_smoke_config()
@@ -579,7 +602,8 @@ def main(argv=None):
     base = SynthConfig(duration_s=args.duration_s,
                        n_stations=args.stations,
                        n_sources=2, events_per_source=5,
-                       event_snr=3.0, seed=3)
+                       event_snr=3.0, seed=3,
+                       physical_geometry=args.locate)
     if args.dirty:
         # the pinned pathology mix of the scenario benchmark: telemetry
         # gaps, a duplicated block, one long repeating glitch train
@@ -597,9 +621,11 @@ def main(argv=None):
     # build the corpus index pool by streaming the stations in (resuming
     # from the latest snapshot when asked — only post-snapshot samples
     # re-ingest); the ingest loop is shared with the benchmarks
+    station_xy = ds.station_xy if args.locate else None
     skip = 0
     if args.restore:
-        det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg)
+        det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg,
+                                              station_xy=station_xy)
         if len(det.stations) != args.stations:
             raise SystemExit(
                 f"--restore: the snapshot holds a {len(det.stations)}-"
@@ -610,7 +636,8 @@ def main(argv=None):
         skip = det.stations[0].ring.samples_in
         print(f"# restored step {step}: {skip} samples already ingested")
     else:
-        det = StreamingDetector(cfg, scfg, n_stations=args.stations)
+        det = StreamingDetector(cfg, scfg, n_stations=args.stations,
+                                station_xy=station_xy)
     if args.trace_jsonl:
         from repro.obsv.spans import SpanTracer
         det.telemetry.tracer = SpanTracer(jsonl_path=args.trace_jsonl)
@@ -672,6 +699,41 @@ def main(argv=None):
     # of how dirty the ingested telemetry was
     quality = det.quality_summary()
     print("# ingest quality " + json.dumps(quality))
+    located_summary = None
+    if args.locate:
+        # the widened ISSUE-9 alert rows: location (milli-km sentinels
+        # decoded to km), relative magnitude and the upgrade flag, one
+        # JSON line per alert + an aggregate block in the RESULT stats
+        from repro.core.locate import LOC_NONE, MAG_NONE
+        lag_s = cfg.fingerprint.lag_samples / cfg.fingerprint.fs
+        alert_rows = []
+        for rows in det.alerts:
+            for dt, onset, n_st, score, upg, x_mkm, y_mkm, mag_m in rows:
+                alert_rows.append({
+                    "t_s": round(float(onset) * lag_s, 1),
+                    "dt_s": round(float(dt) * lag_s, 1),
+                    "stations": int(n_st), "score": int(score),
+                    "upgrade": bool(upg),
+                    "x_km": None if x_mkm == LOC_NONE else x_mkm / 1e3,
+                    "y_km": None if y_mkm == LOC_NONE else y_mkm / 1e3,
+                    "dmag": None if mag_m == MAG_NONE else mag_m / 1e3,
+                })
+        for row in alert_rows:
+            print("ALERT " + json.dumps(row))
+        loc = [r for r in alert_rows if r["x_km"] is not None]
+        errs = [float(np.min(np.linalg.norm(
+                    ds.source_xy - np.array([r["x_km"], r["y_km"]]),
+                    axis=1))) for r in loc]
+        lv = det.telemetry.locate_view()
+        located_summary = {
+            "alerts": len(alert_rows),
+            "located": len(loc),
+            "upgrades": int(sum(r["upgrade"] for r in alert_rows)),
+            "moveout_rejected": lv["moveout_rejected"],
+            "locate_passes": lv["passes"],
+            "median_origin_err_km": (round(float(np.median(errs)), 2)
+                                     if errs else None),
+        }
     if args.metrics_every:
         # final post-flush heartbeat so the log reflects the completed
         # ingest
@@ -691,6 +753,8 @@ def main(argv=None):
         stats = eng.run(reqs)
     assert all(r.done for r in reqs)
     stats["ingest_quality"] = quality
+    if located_summary is not None:
+        stats["located"] = located_summary
     if args.metrics_every:
         stats["metrics"] = det.metrics_snapshot()
     print("RESULT " + json.dumps(stats))

@@ -257,6 +257,53 @@ bit-identical to dense (golden-pinned). ``benchmarks/bench_e2e.py``
 records the A/B (``emission`` section: pair bytes per block, device-
 step vs host-tail wall split) and ``make bench-emit`` refreshes it.
 
+Association → location → magnitude (ISSUE 9)
+--------------------------------------------
+
+Detection ends the paper's pipeline at "same (dt, onset±tol) at ≥2
+stations" (§7, Figure 9) — a detection is a *coincidence*, with no
+place, no size, and no defense against cross-station coincidences that
+fit no physical moveout. The location tier (``core/locate.py``) turns
+each associated group into a located, weighted, sized detection, in
+three host-side stages downstream of the pair stream (never an extra
+per-block dispatch):
+
+* **association** (``core.align.associate_network(..., with_onsets)``):
+  the §7 grouping, with station multiplicity counted through packed
+  int32 bitmask words (no 32-station cap) and, when the locate tier is
+  on, per-group ``(p, S)`` station-onset / station-score matrices —
+  each present station's earliest onset and Jaccard-weighted mass.
+* **location** (``locate.locate_groups``): a coarse-to-fine migration
+  stack — candidate origins on a ``grid_n²`` surface grid, per-station
+  travel-time moveouts subtracted from the onset matrix, the weighted
+  t0/residual evaluated everywhere at once (jit + vmap over groups),
+  argmin refined ``refine_levels`` times. The weighted mean absolute
+  residual doubles as the **moveout-consistency gate**: a group whose
+  onsets fit no candidate origin within ``moveout_tol_lags`` is a
+  cross-station coincidence and (``reject_inconsistent``) is dropped —
+  discriminative from 3 stations up (two stations always fit). Station
+  weights come from the PR-4/PR-6 QC counters
+  (``locate.station_weights``): dirty stations pull the stack less,
+  dead ones are floored at ``min_weight``, never zero.
+* **magnitude** (``locate.relative_magnitude``): per detection, the
+  weighted median over stations of ``log10`` peak-amplitude ratios
+  between the re-occurrence and the first occurrence — batch reads
+  whole-trace per-fingerprint peaks (``locate.fingerprint_amplitudes``),
+  streaming keeps a bounded per-station lag-bin amplitude timeline
+  pruned with the association floor; both feed the same
+  ``locate.attach_location`` stage via an ``amp_fn`` closure.
+
+Both drivers share the stage: batch ``detect_events(station_xy=...)``
+appends it after association, and the streaming detector runs it in
+``poll_detections`` (alerts grow upgrade/x/y/magnitude columns — an
+alert re-emits flagged when a late station upgrades its multiplicity)
+and ``finalize``. Telemetry rides the PR-6 registry
+(``locate_view()``: passes, located, moveout-rejected, stack-wall
+histogram); ``bench_stream --assoc`` records the A/B where the moveout
+gate cuts ≥3-station false associations under shared-period noise
+pressure while keeping every true group (``BENCH_stream.json``,
+``located_scenario`` key; ``make bench-assoc`` refreshes it).
+
 Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
 the jitted step expires index entries beyond a sliding detection window,
 and with ``filter_window_fingerprints`` the ``RollingPairFilter`` retires

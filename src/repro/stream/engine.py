@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core import align as align_mod
 from repro.core import fingerprint as fp_mod
+from repro.core import locate as locate_mod
 from repro.core import lsh as lsh_mod
 from repro.core.align import AlignConfig, Events
 from repro.core.detect import DetectConfig
@@ -153,6 +154,13 @@ def pairs_from_triplets(tri: np.ndarray, pad_to: int = 1024) -> Pairs:
                  sim=jnp.asarray(sim), valid=jnp.asarray(val))
 
 
+# alert row layout: (dt, onset, n_stations, score, upgrade, x_mkm, y_mkm,
+# mag_milli) — locations in milli-km (LOC_NONE without a locate tier),
+# magnitudes in milli-magnitudes (MAG_NONE when no amplitude is in hand),
+# upgrade=1 on a re-emission whose station multiplicity grew
+ALERT_COLS = 8
+
+
 def events_to_rows(events: Events) -> np.ndarray:
     """Valid entries of an ``Events`` pytree → compact (k, 5) int64 rows
     (dt, onset, extent, size, score)."""
@@ -194,26 +202,46 @@ def merge_boundary_rows(rows: np.ndarray, acfg: AlignConfig) -> np.ndarray:
     consumer (association feed, finalize) sees the rows.
     """
     rows = np.asarray(rows, np.int64).reshape(-1, 5)
-    if rows.shape[0] <= 1:
+    k = rows.shape[0]
+    if k <= 1:
         return rows
     order = np.lexsort((rows[:, 0], rows[:, 1]))  # by (onset, dt)
+    rows = rows[order]
+    dt, onset, ext = rows[:, 0], rows[:, 1], rows[:, 2]
+    end = onset + ext
+    # union-find over pairwise near-edges between the ORIGINAL rows: the
+    # merge criteria are evaluated on unmerged rows only (no mid-pass
+    # mutation), so the result is independent of encounter order, and a
+    # chain of ≥3 straddling rows collapses into one component instead of
+    # first-match-only partial merges.
+    parent = np.arange(k)
+
+    def find(i: int) -> int:
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]   # path halving
+            i = parent[i]
+        return i
+
+    for i in range(k):
+        for j in range(i + 1, k):
+            apart = int(onset[j]) - int(end[i])
+            if apart > acfg.gap:
+                break            # onsets monotone: no later j can be near
+            if abs(int(dt[i]) - int(dt[j])) <= acfg.dt_merge_tol:
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[max(ri, rj)] = min(ri, rj)
+    roots = np.fromiter((find(i) for i in range(k)), np.int64, k)
     out: list[np.ndarray] = []
-    for r in rows[order]:
-        r = r.copy()
-        for c in out:
-            near_diag = abs(int(r[0]) - int(c[0])) <= acfg.dt_merge_tol
-            # gap-expanded interval overlap of [onset, onset + extent]
-            apart = int(r[1]) - (int(c[1]) + int(c[2]))
-            if near_diag and apart <= acfg.gap:
-                end = max(int(c[1]) + int(c[2]), int(r[1]) + int(r[2]))
-                if r[4] > c[4]:         # representative dt: higher score
-                    c[0] = r[0]
-                c[2] = end - int(c[1])  # onset-sorted: c's onset is lower
-                c[3] += r[3]
-                c[4] += r[4]
-                break
-        else:
-            out.append(r)
+    for r in np.unique(roots):               # root order == onset order
+        m = roots == r
+        # representative dt: the highest-score member's ORIGINAL dt
+        # (ties → earliest in the onset sort), matching the in-window
+        # merge's strongest-diagonal convention
+        rep = np.nonzero(m)[0][np.argmax(rows[m, 4])]
+        out.append(np.array([dt[rep], onset[m].min(),
+                             end[m].max() - onset[m].min(),
+                             rows[m, 3].sum(), rows[m, 4].sum()], np.int64))
     return np.stack(out, axis=0)
 
 
@@ -1058,9 +1086,21 @@ class StreamingDetector:
 
     def __init__(self, cfg: DetectConfig, scfg: StreamConfig | None = None,
                  n_stations: int = 1,
-                 med_mad: tuple[np.ndarray, np.ndarray] | None = None):
+                 med_mad: tuple[np.ndarray, np.ndarray] | None = None,
+                 station_xy: np.ndarray | None = None):
         self.cfg = cfg
         self.scfg = scfg or StreamConfig()
+        self.station_xy = (np.asarray(station_xy, np.float32)
+                           if station_xy is not None else None)
+        if self.station_xy is not None \
+                and self.station_xy.shape != (n_stations, 2):
+            raise ValueError(f"station_xy must be ({n_stations}, 2) km, "
+                             f"got {self.station_xy.shape}")
+        # location/magnitude tier: active when a LocateConfig and station
+        # geometry are both in hand (and there is a network to associate)
+        self.locating = (cfg.locate is not None
+                         and self.station_xy is not None
+                         and n_stations >= 2)
         self.pooled = (self.scfg.fused and self.scfg.pooled
                        and n_stations >= 2)
         self.telemetry = StreamTelemetry(n_stations)
@@ -1076,9 +1116,19 @@ class StreamingDetector:
         if self.pooled and med_mad is not None:
             self._build_pool()
         self.rolling = self.scfg.filter_window_fingerprints > 0
-        self.alerts: list[np.ndarray] = []   # (k, 4) dt, onset, n_st, score
-        self._emitted = np.zeros((0, 2), np.int64)  # alerted (dt, onset)
+        self.alerts: list[np.ndarray] = []   # (k, ALERT_COLS) rows
+        # alerted keys + the best station multiplicity each has alerted
+        # at: (dt, onset, best_n_stations). A group whose multiplicity
+        # later grows past its recorded best re-emits as an upgrade.
+        self._emitted = np.zeros((0, 3), np.int64)
         self._assoc_lo = 0
+        # bounded amplitude timeline (magnitude source): per station,
+        # lag-bin → peak |sample| seen for that bin, max-merged across
+        # (possibly late / duplicated) arrivals and pruned with the
+        # association floor. Approximate by design — amplitudes are read
+        # at fingerprint-lag resolution, which is what the relative-
+        # magnitude ratio needs.
+        self._amp: list[dict[int, float]] = [{} for _ in range(n_stations)]
         self._polled_windows = 0  # window closes seen by the last poll
         # monotonic corpus version: bumps whenever ingestion may have
         # changed the index pool, so a serving engine can gate its
@@ -1096,6 +1146,11 @@ class StreamingDetector:
             chunk = chunk[None, :]
         assert chunk.shape[0] == len(self.stations), \
             (chunk.shape, len(self.stations))
+        if self.locating:
+            pos = (self.stations[0].ring.frontier if offset is None
+                   else int(offset))
+            for i in range(chunk.shape[0]):
+                self._note_amps(i, pos, chunk[i])
         if self.pooled:
             emitted = self._pool_push(chunk, offset)
         else:
@@ -1308,48 +1363,156 @@ class StreamingDetector:
                 jnp.stack([st.med_mad[0] for st in self.stations]),
                 jnp.stack([st.med_mad[1] for st in self.stations]))
 
-    # -- association / finalize ---------------------------------------------
+    # -- association / location / finalize ----------------------------------
+
+    def _note_amps(self, st_i: int, pos: int, chunk: np.ndarray) -> None:
+        """Max-merge a chunk's |samples| into station ``st_i``'s lag-bin
+        amplitude timeline (idempotent under duplicate delivery; NaN
+        telemetry contributes nothing)."""
+        lag = self.cfg.fingerprint.lag_samples
+        b0 = pos // lag
+        lead = pos - b0 * lag
+        x = np.full(lead + chunk.size, np.nan, np.float32)
+        x[lead:] = chunk
+        nb = -(-x.size // lag)
+        x = np.concatenate([x, np.full(nb * lag - x.size, np.nan,
+                                       np.float32)])
+        a = np.abs(x).reshape(nb, lag)
+        vals = np.where(np.isfinite(a), a, -1.0).max(axis=1)
+        d = self._amp[st_i]
+        for b, vv in enumerate(vals):
+            if vv >= 0:
+                key = b0 + b
+                prev = d.get(key)
+                if prev is None or vv > prev:
+                    d[key] = float(vv)
+
+    def _amp_fn(self, st_i: int, fp_index: int) -> float | None:
+        """Peak |amplitude| over fingerprint ``fp_index``'s analysis
+        window, from the bounded timeline (None when no bin survives)."""
+        fcfg = self.cfg.fingerprint
+        w_bins = max(1, -(-fcfg.window_samples // fcfg.lag_samples))
+        d = self._amp[st_i]
+        vals = [d[b] for b in range(fp_index, fp_index + w_bins) if b in d]
+        return max(vals) if vals else None
+
+    def _station_weights(self) -> np.ndarray:
+        """Live per-station stack weights from the ingest/guard QC
+        counters (``core.locate.station_weights``)."""
+        return locate_mod.station_weights(
+            [st.quality_summary() for st in self.stations],
+            [st.stats.samples for st in self.stations],
+            [st.ring.next_fp for st in self.stations], self.cfg.locate)
+
+    def _locate_rows(self, rows: np.ndarray, onset_mat: np.ndarray,
+                     score_mat: np.ndarray) -> tuple[np.ndarray, int]:
+        """Location/magnitude columns for fresh alert rows; returns the
+        (possibly moveout-filtered) rows and the rejected count."""
+        lcfg = self.cfg.locate
+        fcfg = self.cfg.fingerprint
+        t0 = time.perf_counter()
+        weights = self._station_weights()
+        det = {"valid": np.ones(rows.shape[0], bool),
+               "station_onset": onset_mat}
+        loc = locate_mod.locate_detections(
+            det, self.station_xy, weights, fcfg.lag_samples / fcfg.fs,
+            lcfg)
+        mags = locate_mod.magnitudes_from_onsets(
+            onset_mat, rows[:, 0], det["valid"], self._amp_fn, weights,
+            score_mat)
+        ok = np.isfinite(loc["x_km"])
+        rows[:, 5] = np.where(ok, np.round(
+            np.nan_to_num(loc["x_km"]) * 1e3), locate_mod.LOC_NONE
+            ).astype(np.int64)
+        rows[:, 6] = np.where(ok, np.round(
+            np.nan_to_num(loc["y_km"]) * 1e3), locate_mod.LOC_NONE
+            ).astype(np.int64)
+        mok = np.isfinite(mags)
+        rows[:, 7] = np.where(mok, np.round(
+            np.nan_to_num(mags) * 1e3), locate_mod.MAG_NONE
+            ).astype(np.int64)
+        rejected = 0
+        if lcfg.reject_inconsistent:
+            keep = np.asarray(loc["consistent"])
+            rejected = int(rows.shape[0] - keep.sum())
+            rows = rows[keep]
+        self.telemetry.record_locate(
+            groups=int(det["valid"].sum()),
+            located=int(rows.shape[0]), rejected=rejected,
+            wall=time.perf_counter() - t0)
+        return rows, rejected
 
     def poll_detections(self) -> np.ndarray:
         """Incremental network association over closed-window events.
 
-        Returns (k, 4) int64 rows (dt, onset, n_stations, score) for
-        groups not alerted before — the near-real-time view. ``finalize``
+        Returns (k, ``ALERT_COLS``) int64 rows (dt, onset, n_stations,
+        score, upgrade, x_mkm, y_mkm, mag_milli) for groups not alerted
+        before, plus *upgrade* re-emissions — a previously alerted group
+        whose station multiplicity has since grown re-emits with
+        ``upgrade=1`` (and a refreshed location/magnitude). With the
+        locate tier active, each fresh group is migration-located and
+        sized; moveout-inconsistent groups are dropped (they may return
+        later via the upgrade path if more stations join). ``finalize``
         remains the authoritative association over the full event history.
         """
         acfg = self.cfg.align
         if not self.rolling or len(self.stations) < 2:
-            return np.zeros((0, 4), np.int64)
+            return np.zeros((0, ALERT_COLS), np.int64)
         # the active rows only change when a window closes — don't repeat
         # the association dispatch on pushes that closed nothing
         closed = sum(st.filter.windows_closed for st in self.stations)
         if closed == self._polled_windows:
-            return np.zeros((0, 4), np.int64)
+            return np.zeros((0, ALERT_COLS), np.int64)
         self._polled_windows = closed
         per_station = [st.filter.rows_tail(self._assoc_lo)
                        for st in self.stations]
         if sum(r.shape[0] for r in per_station) == 0:
-            return np.zeros((0, 4), np.int64)
+            return np.zeros((0, ALERT_COLS), np.int64)
         events = [events_from_rows(r) for r in per_station]
-        det = align_mod.associate_network(events, acfg, len(self.stations))
+        det = align_mod.associate_network(events, acfg, len(self.stations),
+                                          with_onsets=self.locating)
         v = np.asarray(det["valid"])
-        rows = np.stack([np.asarray(det["dt"])[v],
-                         np.asarray(det["onset"])[v],
-                         np.asarray(det["n_stations"])[v],
-                         np.asarray(det["score"])[v]],
-                        axis=1).astype(np.int64)
+        rows = np.zeros((int(v.sum()), ALERT_COLS), np.int64)
+        rows[:, 0] = np.asarray(det["dt"])[v]
+        rows[:, 1] = np.asarray(det["onset"])[v]
+        rows[:, 2] = np.asarray(det["n_stations"])[v]
+        rows[:, 3] = np.asarray(det["score"])[v]
+        rows[:, 5:7] = locate_mod.LOC_NONE
+        rows[:, 7] = locate_mod.MAG_NONE
+        onset_mat = (np.asarray(det["station_onset"])[v]
+                     if self.locating else None)
+        score_mat = (np.asarray(det["station_score"])[v]
+                     if self.locating else None)
         if self._emitted.shape[0] and rows.shape[0]:
             near = ((np.abs(rows[:, 0, None] - self._emitted[None, :, 0])
                      <= acfg.dt_tol)
                     & (np.abs(rows[:, 1, None] - self._emitted[None, :, 1])
                        <= acfg.onset_tol))
-            rows = rows[~near.any(axis=1)]
-        if rows.shape[0]:
-            self._emitted = np.concatenate([self._emitted, rows[:, :2]])
+            matched = near.any(axis=1)
+            # best multiplicity this key has alerted at; a matched group
+            # that now exceeds it re-emits as an upgrade
+            best = np.where(matched,
+                            (near * self._emitted[None, :, 2]).max(axis=1),
+                            0)
+            upgrade = matched & (rows[:, 2] > best)
+            for r in np.nonzero(upgrade)[0]:
+                js = np.nonzero(near[r])[0]
+                self._emitted[js, 2] = np.maximum(self._emitted[js, 2],
+                                                  rows[r, 2])
+            rows[:, 4] = upgrade.astype(np.int64)
+            keep = ~matched | upgrade
+            rows = rows[keep]
+            if self.locating:
+                onset_mat, score_mat = onset_mat[keep], score_mat[keep]
+        fresh = rows[rows[:, 4] == 0]
+        if fresh.shape[0]:
+            self._emitted = np.concatenate([self._emitted, fresh[:, :3]])
+        if self.locating and rows.shape[0]:
+            rows, _ = self._locate_rows(rows, onset_mat, score_mat)
         # onsets below every station's closed frontier minus the sliding
         # window can gain no further members — stop rescanning them, and
-        # archive rows + dedup keys the floor has passed so the per-push
-        # scan stays O(active window) instead of O(stream)
+        # archive rows + dedup keys + amplitude bins the floor has passed
+        # so the per-push scan stays O(active window) instead of O(stream)
         frontier = min(st.filter.w_start for st in self.stations)
         self._assoc_lo = max(self._assoc_lo, frontier
                              - self.scfg.window_fingerprints
@@ -1359,6 +1522,11 @@ class StreamingDetector:
         if self._emitted.shape[0]:
             live = self._emitted[:, 1] >= self._assoc_lo - acfg.onset_tol
             self._emitted = self._emitted[live]
+        amp_floor = self._assoc_lo - acfg.onset_tol
+        if amp_floor > 0:
+            for d in self._amp:
+                for b in [b for b in d if b < amp_floor]:
+                    del d[b]
         return rows
 
     def finalize(self) -> tuple[dict | None, list[Events], dict]:
@@ -1373,8 +1541,23 @@ class StreamingDetector:
         detections = None
         if len(self.stations) >= 2:
             detections = align_mod.associate_network(
-                station_events, self.cfg.align, len(self.stations))
-            stats["detections"] = int(detections["valid"].sum())
+                station_events, self.cfg.align, len(self.stations),
+                with_onsets=self.locating)
+            if self.locating:
+                t0 = time.perf_counter()
+                fcfg = self.cfg.fingerprint
+                was = int(np.asarray(detections["valid"]).sum())
+                detections = locate_mod.attach_location(
+                    detections, self.station_xy, self._station_weights(),
+                    fcfg.lag_samples / fcfg.fs, self.cfg.locate,
+                    self._amp_fn, stats)
+                self.telemetry.record_locate(
+                    groups=was,
+                    located=int(np.asarray(detections["valid"]).sum()),
+                    rejected=stats.get("moveout_rejected", 0),
+                    wall=time.perf_counter() - t0)
+            stats["detections"] = int(np.asarray(
+                detections["valid"]).sum())
         if self.rolling:
             stats["alerts"] = int(sum(a.shape[0] for a in self.alerts))
         stats["ingest"] = [st.stats.summary() for st in self.stations]
@@ -1418,7 +1601,11 @@ class StreamingDetector:
         arrays["detector/emitted"] = self._emitted
         arrays["detector/alerts"] = (
             np.concatenate(self.alerts, axis=0).astype(np.int64)
-            if self.alerts else np.zeros((0, 4), np.int64))
+            if self.alerts else np.zeros((0, ALERT_COLS), np.int64))
+        for i, d in enumerate(self._amp):
+            arrays[f"detector/amp{i}"] = (
+                np.array([[b, a] for b, a in sorted(d.items())], np.float64)
+                if d else np.zeros((0, 2), np.float64))
         extra = {"n_stations": len(self.stations), "stations": st_extra,
                  "assoc_lo": self._assoc_lo,
                  "telemetry": self.telemetry.snapshot(),
@@ -1445,15 +1632,21 @@ class StreamingDetector:
     @classmethod
     def restore(cls, ckpt_dir: str, cfg: DetectConfig,
                 scfg: StreamConfig | None = None, *,
-                step: int | None = None) -> tuple["StreamingDetector", int]:
+                step: int | None = None,
+                station_xy: np.ndarray | None = None,
+                ) -> tuple["StreamingDetector", int]:
         """Rebuild a detector from its latest (or given) snapshot.
 
         The snapshot records the streaming mode it was taken under; a
         ``scfg`` whose block size or window lengths differ is rejected up
         front (the station state layouts are not interchangeable).
+        ``station_xy`` is not snapshotted (it is deployment geometry, not
+        stream state) — pass it again to keep the locate tier running
+        across the restart.
         """
         arrays, extra, step = ckpt_mod.restore_flat(ckpt_dir, step=step)
-        det = cls(cfg, scfg, n_stations=int(extra["n_stations"]))
+        det = cls(cfg, scfg, n_stations=int(extra["n_stations"]),
+                  station_xy=station_xy)
         saved = extra.get("scfg", {})
         for key, have in (
                 ("block_fingerprints", det.scfg.block_fingerprints),
@@ -1484,11 +1677,31 @@ class StreamingDetector:
             st.restore_state(sub, extra["stations"][i])
         if det.pooled and all(st.stats_frozen for st in det.stations):
             det._build_pool()
-        det._emitted = np.asarray(arrays["detector/emitted"],
-                                  np.int64).reshape(-1, 2)
-        alerts = np.asarray(arrays["detector/alerts"],
-                            np.int64).reshape(-1, 4)
+        emitted = np.asarray(arrays["detector/emitted"], np.int64)
+        if emitted.ndim == 2 and emitted.shape[1] == 2:
+            # pre-ISSUE-9 snapshot: (k, 2) keys without a best-
+            # multiplicity column — seed it at the floor, so any growth
+            # past min_stations re-emits as an upgrade
+            emitted = np.concatenate(
+                [emitted, np.full((emitted.shape[0], 1),
+                                  cfg.align.min_stations, np.int64)],
+                axis=1)
+        det._emitted = emitted.reshape(-1, 3)
+        alerts = np.asarray(arrays["detector/alerts"], np.int64)
+        if alerts.ndim == 2 and alerts.shape[1] == 4:
+            # pre-ISSUE-9 snapshot: (k, 4) rows — pad the upgrade /
+            # location / magnitude columns with their sentinels
+            pad = np.zeros((alerts.shape[0], ALERT_COLS - 4), np.int64)
+            pad[:, 1:3] = locate_mod.LOC_NONE
+            pad[:, 3] = locate_mod.MAG_NONE
+            alerts = np.concatenate([alerts, pad], axis=1)
+        alerts = alerts.reshape(-1, ALERT_COLS)
         det.alerts = [alerts] if alerts.shape[0] else []
+        for i in range(len(det.stations)):
+            amp = arrays.get(f"detector/amp{i}")
+            if amp is not None and amp.size:
+                det._amp[i] = {int(b): float(a)
+                               for b, a in np.asarray(amp).reshape(-1, 2)}
         det._assoc_lo = int(extra["assoc_lo"])
         if "telemetry" in extra:    # pre-ISSUE-6 snapshots: fresh registry
             det.telemetry.restore(extra["telemetry"])

@@ -109,6 +109,34 @@ class StreamTelemetry:
         self.registry.histogram("host_tail_wall_seconds",
                                 station=str(station)).record(wall_s)
 
+    # -- location-tier hooks (ISSUE 9) ---------------------------------------
+
+    def record_locate(self, groups: int, located: int, rejected: int,
+                      wall: float) -> None:
+        """One migration-stack pass over associated groups: how many went
+        in, how many located detections came out, how many fell to the
+        moveout-consistency gate, and the stack's wall time."""
+        self.registry.counter("locate_passes_total").inc()
+        self.registry.counter("locate_groups_total").inc(int(groups))
+        self.registry.counter("located_detections_total").inc(int(located))
+        self.registry.counter("moveout_rejected_total").inc(int(rejected))
+        self.registry.histogram("locate_stack_wall_seconds").record(wall)
+
+    def locate_view(self) -> dict:
+        """Location-tier summary: stack passes, group flow, and the
+        moveout-rejection count. All-zero without a locate tier."""
+        reg = self.registry
+        h = reg.histogram_merged("locate_stack_wall_seconds")
+        return {
+            "passes": int(reg.total("locate_passes_total")),
+            "groups": int(reg.total("locate_groups_total")),
+            "located": int(reg.total("located_detections_total")),
+            "moveout_rejected": int(reg.total("moveout_rejected_total")),
+            "stack_wall": {"count": h.count,
+                           "p50_ms": round(h.percentile(0.50) * 1e3, 3),
+                           "p95_ms": round(h.percentile(0.95) * 1e3, 3)},
+        }
+
     # -- serving-tier hooks (called from ServeDetectEngine) ------------------
 
     def record_serve_admission(self, accepted: bool) -> None:
@@ -316,8 +344,10 @@ def metrics_snapshot(det) -> dict:
                          "fused_step_wall_seconds",
                          "host_tail_wall_seconds",
                          "serve_latency_seconds",
-                         "serve_queue_wait_seconds")},
+                         "serve_queue_wait_seconds",
+                         "locate_stack_wall_seconds")},
         "serve": tel.serve_view(),
+        "locate": tel.locate_view(),
         "spans": tel.tracer.summary(),
         "watchdog": {"steps": tel.watchdog.n,
                      "stragglers": len(tel.watchdog.events)},

@@ -111,6 +111,78 @@ def test_network_association_respects_min_stations():
     assert int(np.asarray(det["valid"]).sum()) == 0
 
 
+def test_network_association_beyond_32_stations():
+    """The packed-bitmask multiplicity has no station cap (the old dense
+    one_hot asserted n_stations <= 32): a 40-station network associates,
+    and multiplicity counts each station once even with multiple events
+    per station in the group."""
+    cfg = AlignConfig(dt_tol=2, onset_tol=10, min_stations=35)
+    stations = [_events([(500, 100 + (i % 7), 5)], 4) for i in range(40)]
+    det = A.associate_network(stations, cfg, 40)
+    v = np.asarray(det["valid"])
+    assert int(v.sum()) == 1
+    assert int(np.asarray(det["n_stations"])[v][0]) == 40
+    # same station twice in a group counts once (bitmask OR, not a sum)
+    st0 = _events([(500, 100, 5), (500, 103, 4)], 4)
+    st1 = _events([(501, 102, 6)], 4)
+    cfg2 = AlignConfig(dt_tol=2, onset_tol=10, min_stations=2)
+    det2 = A.associate_network([st0, st1], cfg2, 2)
+    v2 = np.asarray(det2["valid"])
+    assert int(v2.sum()) == 1
+    assert int(np.asarray(det2["n_stations"])[v2][0]) == 2
+
+
+def test_network_association_bad_input_raises():
+    st = _events([(500, 100, 5)], 4)
+    with pytest.raises(ValueError, match="n_stations"):
+        A.associate_network([st], AlignConfig(), 0)
+    with pytest.raises(ValueError, match="per-station"):
+        A.associate_network([st, st], AlignConfig(), 3)
+
+
+def test_network_association_tolerance_chaining_and_extent_cap():
+    """Groups start on *consecutive* deltas, so onsets each within
+    onset_tol chain into one group spanning many tolerances (pinned
+    here), and ``max_group_extent`` bounds the chain."""
+    cfg = AlignConfig(dt_tol=1, onset_tol=10, min_stations=2)
+    # a chain of onsets 8 apart — each within onset_tol of its neighbor,
+    # the ends 32 apart (> 3 tolerances)
+    st0 = _events([(700, 100, 5), (700, 116, 5), (700, 132, 5)], 6)
+    st1 = _events([(700, 108, 5), (700, 124, 5)], 6)
+    det = A.associate_network([st0, st1], cfg, 2)
+    v = np.asarray(det["valid"])
+    assert int(v.sum()) == 1                   # one chained group...
+    assert int(np.asarray(det["onset_span"])[v][0]) == 32   # ...spanning 32
+    # the extent cap drops the physically implausible chain
+    capped = AlignConfig(dt_tol=1, onset_tol=10, min_stations=2,
+                         max_group_extent=20)
+    det2 = A.associate_network([st0, st1], capped, 2)
+    assert int(np.asarray(det2["valid"]).sum()) == 0
+    # a compact group passes the same cap
+    st2 = _events([(700, 100, 5)], 6)
+    st3 = _events([(700, 104, 5)], 6)
+    det3 = A.associate_network([st2, st3], capped, 2)
+    assert int(np.asarray(det3["valid"]).sum()) == 1
+
+
+def test_network_association_station_onset_matrix():
+    """``with_onsets`` returns the per-group (p, S) onset / score
+    matrices the locate tier stacks over: each present station's earliest
+    onset and summed score, INVALID / 0 where absent."""
+    cfg = AlignConfig(dt_tol=2, onset_tol=10, min_stations=2)
+    st0 = _events([(500, 100, 5), (500, 104, 2)], 6)
+    st1 = _events([(501, 105, 6)], 6)
+    st2 = _events([(900, 40, 3)], 6)
+    det = A.associate_network([st0, st1, st2], cfg, 3, with_onsets=True)
+    v = np.asarray(det["valid"])
+    assert int(v.sum()) == 1
+    g = np.nonzero(v)[0][0]
+    onset = np.asarray(det["station_onset"])[g]
+    score = np.asarray(det["station_score"])[g]
+    assert onset.tolist() == [100, 105, INVALID]
+    assert score.tolist() == [7, 6, 0]
+
+
 def test_align_streamed_matches_in_memory(rng, tmp_path):
     chans = []
     expect = {}

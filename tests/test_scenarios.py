@@ -17,6 +17,7 @@ The scenario substrate is shared with ``bench_stream --scenario``
 (≥ 10× spurious reduction vs the unguarded path, recall unchanged) is
 pinned here at the exact benchmark configuration.
 """
+import json
 import pathlib
 import sys
 from dataclasses import replace as dataclasses_replace
@@ -383,3 +384,32 @@ def test_bench_scenario_schema(tmp_path, monkeypatch):
     assert add["spurious_reduction"] >= 10.0
     assert add["clean_portion_recall"] == 1.0
     assert add["limited_pairs"] > 0
+
+
+@pytest.mark.slow
+def test_bench_located_scenario_schema(tmp_path, monkeypatch):
+    """``bench_stream --assoc-only`` (``make bench-assoc``) emits a
+    schema-stable located-association point meeting the ISSUE-9
+    acceptance: the moveout gate cuts ≥3-station false associations vs
+    the pairwise baseline without losing true groups, and the kept
+    groups locate within 2 coarse grid cells."""
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    from benchmarks import bench_stream
+    out = bench_stream.main(["--assoc-only"])
+    point = out["located_scenario"]
+    assert point["schema"] == "bench-stream-located/v1"
+    assert set(point) >= {"golden_groups", "false_assoc_pairwise",
+                          "false_assoc_gated", "false_assoc_reduction",
+                          "true_kept_pairwise", "true_kept_gated",
+                          "moveout_rejected", "median_origin_err_cells",
+                          "coarse_cell_km"}
+    # the A/B: measurable false-association cut, true groups preserved
+    assert point["false_assoc_pairwise"] > 0
+    assert point["false_assoc_gated"] < point["false_assoc_pairwise"]
+    assert point["true_kept_gated"] == point["true_kept_pairwise"]
+    assert point["moveout_rejected"] > 0
+    # location acceptance: median origin error within 2 coarse cells
+    assert point["median_origin_err_cells"] <= 2.0
+    # --assoc-only only touches its own key of an existing artifact
+    written = json.loads((tmp_path / "BENCH_stream.json").read_text())
+    assert written["located_scenario"] == point

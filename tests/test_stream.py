@@ -1031,9 +1031,118 @@ def test_merge_boundary_rows_keeps_distinct_clusters():
     assert merged[0, 0] == 41
 
 
+def test_merge_boundary_rows_bridge_union():
+    """Regression (ISSUE 9): two clusters not pairwise-near are joined by
+    a bridging row near both. The old first-match-only pass merged the
+    bridge into the first cluster and left the second stranded (2 rows);
+    the union pass yields one deterministic component."""
+    acfg = AlignConfig()                      # dt_merge_tol=2, gap=10
+    rows = np.array([
+        [40, 0, 5, 6, 48],      # cluster 1
+        [44, 8, 2, 3, 24],      # cluster 2: |44-40| > dt_merge_tol
+        [42, 12, 3, 4, 60],     # bridge: within tol + gap of BOTH
+    ], np.int64)
+    out = merge_boundary_rows(rows, acfg)
+    assert out.shape[0] == 1, out
+    dt, onset, extent, size, score = out[0]
+    assert dt == 42             # highest-score member's original dt
+    assert onset == 0 and extent == 15
+    assert size == 13 and score == 132
+    # deterministic under any input ordering
+    for perm in ([1, 0, 2], [2, 1, 0], [1, 2, 0]):
+        assert np.array_equal(merge_boundary_rows(rows[perm], acfg), out)
+
+
+def test_merge_boundary_rows_three_window_chain():
+    """A single diagonal straddling THREE rolling-filter windows surfaces
+    as three boundary rows and re-merges into one span."""
+    cfg = _merge_cfg()
+    filt = RollingPairFilter(cfg, window=64, lookback=128)
+    idx2 = np.arange(58, 136)   # later members span closes at 64 and 128
+    tri = np.stack([idx2 - 40, idx2, np.full_like(idx2, 8)], axis=1)
+    filt.add(tri)
+    filt.advance(260)           # closes [0,64), [64,128), [128,192)
+    assert filt.windows_closed >= 3
+    raw = np.concatenate(filt.event_rows, axis=0)
+    assert raw.shape[0] == 3    # split at both boundaries…
+    merged = filt.all_rows()
+    assert merged.shape[0] == 1  # …and the chain re-joins end to end
+    dt, onset, extent, size, score = merged[0]
+    assert dt == 40 and onset == 18 and onset + extent == 95
+    assert size == raw[:, 3].sum() and score == raw[:, 4].sum()
+
+
 # ---------------------------------------------------------------------------
 # engine composition + serving
 # ---------------------------------------------------------------------------
+
+
+def test_poll_reemits_on_station_multiplicity_upgrade():
+    """Regression (ISSUE 9): a group first alerted at 2 stations re-emits
+    (flagged as an upgrade) when a third station's events arrive in a
+    later window — the old (dt, onset)-only dedup suppressed it forever."""
+    from repro.stream.engine import ALERT_COLS
+    cfg, scfg = smoke_config(), stream_bounded_smoke_config()
+    det = StreamingDetector(cfg, scfg, n_stations=3)
+
+    def close_with(station, row):
+        det.stations[station].filter.event_rows.append(
+            np.asarray([row], np.int64))
+        det.stations[station].filter.windows_closed += 1
+
+    # two stations see the repeating pair first
+    close_with(0, (50, 100, 4, 3, 24))
+    close_with(1, (50, 103, 4, 3, 21))
+    first = det.poll_detections()
+    assert first.shape == (1, ALERT_COLS)
+    assert first[0, 2] == 2 and first[0, 4] == 0       # fresh, 2 stations
+    # a re-poll with no new window closes is silent
+    assert det.poll_detections().shape[0] == 0
+    # the third station reports in a later window → upgrade re-emission
+    close_with(2, (51, 105, 4, 3, 18))
+    second = det.poll_detections()
+    assert second.shape == (1, ALERT_COLS), second
+    assert second[0, 2] == 3 and second[0, 4] == 1     # upgraded to 3
+    # same multiplicity again → deduped as before
+    close_with(0, (50, 101, 4, 2, 16))
+    assert det.poll_detections().shape[0] == 0
+
+
+def test_streaming_located_alerts_end_to_end():
+    """The streaming locate tier: physical-geometry scenario in, alerts
+    carry milli-km locations + milli-magnitudes, the finalize detections
+    carry the located columns, and the telemetry locate view counts the
+    stack passes."""
+    from repro.configs.fast_seismic import located_smoke_config
+    from repro.core import locate as LO
+    from repro.stream.engine import ALERT_COLS
+    cfg, scfg = located_smoke_config(), stream_bounded_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=900.0, n_stations=4,
+                                  n_sources=2, events_per_source=6,
+                                  event_snr=3.0, seed=11,
+                                  physical_geometry=True))
+    det = StreamingDetector(cfg, scfg, n_stations=4,
+                            station_xy=ds.station_xy)
+    assert det.locating
+    for start in range(0, ds.waveforms.shape[1], 6000):
+        det.push(ds.waveforms[:, start: start + 6000])
+    alerts = np.concatenate(det.alerts, axis=0)
+    assert alerts.shape[0] >= 1 and alerts.shape[1] == ALERT_COLS
+    located = alerts[alerts[:, 5] != LO.LOC_NONE]
+    assert located.shape[0] >= 1       # at least one alert localized
+    assert (located[:, 5] >= 0).all() and (located[:, 5] <= 50_000).all()
+    assert (located[:, 7] != LO.MAG_NONE).any()   # …and sized
+    detections, _, stats = det.finalize()
+    assert "moveout_rejected" in stats
+    v = np.asarray(detections["valid"])
+    assert int(v.sum()) == stats["detections"] >= 1
+    assert np.isfinite(np.asarray(detections["x_km"])[v]).all()
+    assert (np.asarray(detections["station_weight"]) > 0).all()
+    view = det.telemetry.locate_view()
+    assert view["passes"] >= 2 and view["located"] >= 1
+    assert view["stack_wall"]["count"] == view["passes"]
+    snap = det.metrics_snapshot()
+    assert snap["locate"]["passes"] == view["passes"]
 
 
 def test_multi_station_streaming_detections():

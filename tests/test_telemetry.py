@@ -391,7 +391,8 @@ def test_metrics_snapshot_schema_and_prometheus_surface():
     assert m["schema"] == METRICS_SCHEMA == "stream-metrics/v1"
     assert set(m) == {"schema", "stations", "uptime_s", "stream_s", "rtf",
                       "stream", "per_station", "drops", "drop_rates",
-                      "quality", "histograms", "serve", "spans", "watchdog"}
+                      "quality", "histograms", "serve", "locate", "spans",
+                      "watchdog"}
     assert m["stations"] == 1
     assert set(m["drops"]) == set(QC_FIELDS)
     assert m["quality"] == det.quality_summary()
@@ -402,9 +403,12 @@ def test_metrics_snapshot_schema_and_prometheus_surface():
                                     "fused_step_wall_seconds",
                                     "host_tail_wall_seconds",
                                     "serve_latency_seconds",
-                                    "serve_queue_wait_seconds"}
+                                    "serve_queue_wait_seconds",
+                                    "locate_stack_wall_seconds"}
     # no serving engine shares this detector's hub → all-zero serve view
     assert m["serve"]["served"] == 0 and m["serve"]["shed"] == 0
+    # no locate tier on this detector → all-zero locate view
+    assert m["locate"]["passes"] == 0 and m["locate"]["located"] == 0
     assert m["histograms"]["fused_step_wall_seconds"]["count"] == \
         m["watchdog"]["steps"] > 0
     for name in ("ingest", "fused_step", "host_tail"):
