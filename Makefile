@@ -3,7 +3,7 @@
 PY := PYTHONPATH=src:. python
 
 .PHONY: test test-all bench bench-smoke bench-e2e bench-serve bench-emit \
-	bench-assoc
+	bench-assoc bench-sharded
 
 test:            ## tier-1 suite (what the driver verifies)
 	$(PY) -m pytest -x -q -m "not slow"
@@ -25,6 +25,9 @@ bench-emit:      ## emission-compaction A/B only (BENCH_e2e.json emission key)
 
 bench-assoc:     ## moveout-gate A/B only (BENCH_stream.json located_scenario key)
 	$(PY) -m benchmarks.bench_stream --assoc-only
+
+bench-sharded:   ## sharded-pool device grid only (BENCH_e2e.json sharded_pool key)
+	$(PY) -m benchmarks.bench_e2e --sharded
 
 bench-smoke:     ## tier-1-safe perf smoke: quick e2e + dirty-stream + serve
 	$(PY) -m benchmarks.run --e2e --quick --scenario --serve

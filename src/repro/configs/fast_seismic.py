@@ -284,6 +284,21 @@ def stream_latency_smoke_config() -> StreamConfig:
                         stats_warmup_blocks=4, reservoir_rows=512)
 
 
+def stream_sharded_smoke_config() -> StreamConfig:
+    """Sharded-pool smoke: the bounded streaming config with a larger
+    block so each device-side step carries enough per-station work for
+    the ``stations`` mesh split to beat single-device ``vmap`` on forced
+    host devices (tiny blocks are dispatch-bound and sharding only adds
+    transfer overhead). ``sharded`` is on by default in every config —
+    this one exists so benches/tests name the sharded regime explicitly
+    and get steady blocks past warmup quickly."""
+    return StreamConfig(block_fingerprints=128,
+                        index=StreamIndexConfig(n_buckets=2048,
+                                                bucket_cap=8),
+                        stats_warmup_blocks=1, reservoir_rows=1024,
+                        sharded=True)
+
+
 def serve_config():
     """Paper-scale serving tier (ISSUE 7): slots sized so one batched
     ``_serve_step`` dispatch amortizes across a rack of concurrent

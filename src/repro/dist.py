@@ -14,8 +14,13 @@ import contextvars
 from typing import Sequence
 
 import jax
+import numpy as np
 from jax.interpreters import pxla
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# mesh axis name of the station-pool shard (stream/fused.py): the leading
+# S axis of the stacked FusedState pytree is split over it
+STATION_AXIS = "stations"
 
 _MANUAL: contextvars.ContextVar[frozenset] = contextvars.ContextVar(
     "repro_manual_axes", default=frozenset())
@@ -101,6 +106,60 @@ def allow_uneven_sharding():
         yield
     finally:
         _UNEVEN.reset(tok)
+
+
+def station_mesh(n_stations: int | None = None, *, devices=None,
+                 axis: str = STATION_AXIS) -> Mesh | None:
+    """Capability probe for the sharded station pool (ISSUE 10).
+
+    Returns a 1-axis ``stations`` mesh over the visible devices when
+    sharding the pool can possibly help, and ``None`` otherwise — the
+    ``None`` is the signal for callers (``StreamingDetector``, the
+    ``pool_step_*_sharded`` entries) to fall back to the single-device
+    ``vmap`` pool:
+
+    * one visible device → ``None`` (vmap already is the whole story);
+    * fewer than two stations → ``None`` (nothing to split);
+    * more devices than stations → the mesh is trimmed to ``n_stations``
+      so no device holds an empty shard.
+
+    The hot path runs **fully manual** over this axis with zero
+    cross-station collectives, so the probe never needs to check for
+    partial-manual ``shard_map`` support (the jaxlib-0.4.x scan/gather
+    limitation only bites partial-manual regions).
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    nd = len(devs)
+    if n_stations is not None:
+        nd = min(nd, int(n_stations))
+    if nd < 2 or (n_stations is not None and n_stations < 2):
+        return None
+    return Mesh(np.asarray(devs[:nd]), (axis,))
+
+
+def pool_sharding(mesh: Mesh, *, axis: str = STATION_AXIS) -> NamedSharding:
+    """Sharding of a stacked pool pytree: leading (S,) axis split over
+    ``stations``, everything else replicated (usable as a pytree-prefix
+    sharding for every FusedState leaf)."""
+    return NamedSharding(mesh, P(axis))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh`` (hash mappings, scalars)."""
+    return NamedSharding(mesh, P())
+
+
+def padded_pool_width(n_stations: int, mesh: Mesh | None, *,
+                      axis: str = STATION_AXIS) -> int:
+    """Station rows the stacked pool must carry so the leading axis
+    divides the mesh: ``n_stations`` rounded up to a multiple of the
+    ``stations`` axis size (``n_stations`` unchanged without a mesh).
+    The pad rows are throwaway station clones — they step like real
+    stations (row-independent math) and their output is never read."""
+    if mesh is None or axis not in mesh.shape:
+        return int(n_stations)
+    d = int(mesh.shape[axis])
+    return -(-int(n_stations) // d) * d
 
 
 def current_mesh() -> Mesh | None:

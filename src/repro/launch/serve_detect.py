@@ -626,13 +626,24 @@ def main(argv=None):
     if args.restore:
         det, step = StreamingDetector.restore(args.snapshot_dir, cfg, scfg,
                                               station_xy=station_xy)
-        if len(det.stations) != args.stations:
+        if args.stations > len(det.stations) and det.pooled \
+                and all(st.stats_frozen for st in det.stations):
+            # width growth is no longer a conflict: the pool is elastic
+            # (ISSUE 10) — pad the restored snapshot with fresh stations
+            # joining at the frontier, re-sharded over the current mesh
+            grown = args.stations - len(det.stations)
+            for _ in range(grown):
+                det.add_station()
+            print(f"# restored pool grown {len(det.stations) - grown}"
+                  f" -> {len(det.stations)} stations (elastic re-shard)")
+        elif len(det.stations) != args.stations:
             raise SystemExit(
                 f"--restore: the snapshot holds a {len(det.stations)}-"
                 f"station index pool but --stations {args.stations} was "
-                f"requested; the pool width is fixed at snapshot time — "
-                f"rerun with --stations {len(det.stations)} (or take a "
-                f"fresh snapshot at the new width)")
+                f"requested; shrinking would discard station identities "
+                f"irrecoverably — rerun with --stations "
+                f"{len(det.stations)} (or take a fresh snapshot at the "
+                f"new width)")
         skip = det.stations[0].ring.samples_in
         print(f"# restored step {step}: {skip} samples already ingested")
     else:

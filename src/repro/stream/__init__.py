@@ -214,8 +214,10 @@ cadence → shed path**:
   latency split, and shed rates under closed-loop concurrent clients
   (``BENCH_serve.json``).
 
-Snapshots (``--snapshot-every``), restart (``--restore``, which
-validates the restored pool width against ``--stations``), and the live
+Snapshots (``--snapshot-every``), restart (``--restore``, which grows
+the restored pool elastically when ``--stations`` exceeds the snapshot
+width — ISSUE 10 — and rejects shrinks, which would discard station
+identities), and the live
 health surface (``--metrics-every``, ``--metrics-file``,
 ``--trace-jsonl``, ``--dirty``) ride the same CLI.
 
@@ -304,6 +306,44 @@ gate cuts ≥3-station false associations under shared-period noise
 pressure while keeping every true group (``BENCH_stream.json``,
 ``located_scenario`` key; ``make bench-assoc`` refreshes it).
 
+Sharded station pool (ISSUE 10)
+-------------------------------
+
+The pooled hot path stacks every station's ``FusedState`` on a leading S
+axis; sharding splits that axis across a 1-axis ``stations`` device mesh
+(``dist.station_mesh``) so the network's ceiling is the fleet, not one
+chip. Three properties make this the cheap kind of distribution:
+
+* **zero in-region collectives**: stations are independent until the
+  host-side association tail, so ``pool_step_*_sharded`` run the same
+  per-station ``core`` under ``dist.shard_map`` **fully manual** over
+  the ``stations`` axis — no cross-device communication inside the
+  traced program, which also sidesteps the jaxlib-0.4.x partial-manual
+  scan/gather limitation (only partial-manual regions hit it). Donation
+  and the one-dispatch-per-block invariant carry over per shard; the
+  pair/QC outputs come back through the same single ``device_get``.
+* **capability probe, vmap fallback**: ``dist.station_mesh`` returns
+  ``None`` on one visible device or fewer than two stations, and the
+  sharded entries then delegate to the bit-identical ``vmap`` pool —
+  ``StreamConfig.sharded`` (default on) is inert on a laptop and a
+  no-code-change scale-out on a multi-device host. When S does not
+  divide the mesh, the pool pads with throwaway station clones (row-
+  independent math; outputs never read) rather than idling devices.
+* **mesh-elastic state**: snapshots store per-station slices (device
+  topology never reaches disk), so a pool saved under 8 devices
+  restores onto 1 or 4 unchanged — and the live pool is elastic too:
+  ``StreamingDetector.add_station`` / ``remove_station`` re-pad and
+  re-shard the stacked pytree mid-stream (the joiner mirrors a peer's
+  ring framing with its pre-join span masked missing, so lockstep block
+  emission holds from the first post-join block).
+
+``benchmarks/bench_e2e.py`` records the device-count × stations scaling
+grid (``sharded_pool`` section, ``make bench-sharded``) under
+``--xla_force_host_platform_device_count``, with exact step percentiles
+and per-point sharded-vs-vmap pair parity; forced host devices time-
+slice the physical cores, so the recorded speedup only reads as a
+scaling curve when ``host_cores`` ≥ the device count.
+
 Unbounded streams run *bounded*: with ``StreamConfig.window_fingerprints``
 the jitted step expires index entries beyond a sliding detection window,
 and with ``filter_window_fingerprints`` the ``RollingPairFilter`` retires
@@ -325,7 +365,9 @@ from repro.stream.engine import (RollingPairFilter,  # noqa: F401
                                  pool_block_coeffs, stream_step)
 from repro.stream.fused import (FusedState, init_pool_state,  # noqa: F401
                                 init_state, pool_step_advance,
-                                pool_step_block, step_advance, step_block)
+                                pool_step_advance_sharded, pool_step_block,
+                                pool_step_block_sharded, step_advance,
+                                step_block)
 from repro.stream.index import (IndexState, QC_FIELDS,  # noqa: F401
                                 StreamIndexConfig, compact_pairs, expire,
                                 index_stats, init_index, init_pool, insert,

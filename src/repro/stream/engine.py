@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dist
 from repro.core import align as align_mod
 from repro.core import fingerprint as fp_mod
 from repro.core import locate as locate_mod
@@ -1103,6 +1104,16 @@ class StreamingDetector:
                          and n_stations >= 2)
         self.pooled = (self.scfg.fused and self.scfg.pooled
                        and n_stations >= 2)
+        # sharded station pool (ISSUE 10): the capability probe returns a
+        # 1-axis ``stations`` mesh when >1 device is visible, else None —
+        # the None keeps every pool dispatch on the single-device vmap
+        # path. The pool is padded up to a multiple of the mesh width
+        # with throwaway station rows (row-independent math; their output
+        # is never read) so the leading axis always divides the mesh.
+        self.mesh = (dist.station_mesh(n_stations)
+                     if self.pooled and self.scfg.sharded else None)
+        self.pool_pad = dist.padded_pool_width(n_stations,
+                                               self.mesh) - n_stations
         self.telemetry = StreamTelemetry(n_stations)
         self.stations = [StationStream(cfg, self.scfg, med_mad=med_mad,
                                        external=self.pooled,
@@ -1166,15 +1177,48 @@ class StreamingDetector:
     # -- pooled stepping ----------------------------------------------------
 
     def _build_pool(self) -> None:
-        """Stack the stations' device state into one vmappable pool."""
-        self.pstate = fused_mod.init_pool_state(
-            [st._state for st in self.stations],
-            self.cfg.fingerprint.halo_samples,
-            [st._med_mad[0] for st in self.stations],
-            [st._med_mad[1] for st in self.stations])
+        """Stack the stations' device state into one vmappable pool.
+
+        With a mesh in hand the stacked pytree is padded to a multiple
+        of the mesh width (throwaway station rows cloned from fresh
+        index state + station 0's statistics) and every leaf is placed
+        with ``NamedSharding(mesh, P('stations'))`` — per-shard
+        ``device_put``, so the donated steady state never pays a cross-
+        device reshard."""
+        states = [st._state for st in self.stations]
+        meds = [st._med_mad[0] for st in self.stations]
+        mads = [st._med_mad[1] for st in self.stations]
+        if self.pool_pad:
+            states += [index_mod.init_index(self.cfg.lsh,
+                                            self.stations[0].icfg)
+                       for _ in range(self.pool_pad)]
+            meds += [meds[0]] * self.pool_pad
+            mads += [mads[0]] * self.pool_pad
+        pstate = fused_mod.init_pool_state(
+            states, self.cfg.fingerprint.halo_samples, meds, mads)
+        if self.mesh is not None:
+            pstate = jax.device_put(pstate,
+                                    dist.pool_sharding(self.mesh))
+            # replicate the hash mappings across the mesh once: passing
+            # the device-0-committed copy would re-broadcast it on every
+            # dispatch
+            self._pool_mappings = jax.device_put(
+                self.mappings, dist.replicated_sharding(self.mesh))
+        else:
+            self._pool_mappings = self.mappings
+        self.pstate = pstate
         for st in self.stations:
             st._state = None        # the pool owns the buffers now
         self._halo_ok = False
+
+    def _pad_rows(self, x: np.ndarray, fill=0) -> np.ndarray:
+        """Append the pool's pad-station rows to a host-side (S, ...)
+        input (zero samples / all-invalid masks — the pad rows' output
+        is never read, this just keeps the shapes mesh-divisible)."""
+        if not self.pool_pad:
+            return x
+        pad = np.full((self.pool_pad,) + x.shape[1:], fill, x.dtype)
+        return np.concatenate([x, pad])
 
     def _pool_push(self, chunk: np.ndarray, offset: int | None = None
                    ) -> int:
@@ -1263,22 +1307,31 @@ class StreamingDetector:
             n_adv = n
         wd = self.telemetry.watchdog
         wd.step_start()
+        # per-station host inputs go straight to their shard: under a
+        # mesh, a plain jnp.asarray would land the whole array on device
+        # 0 and pay a second device-0 → shards scatter inside dispatch
+        put = (jnp.asarray if self.mesh is None else
+               functools.partial(jax.device_put,
+                                 device=dist.pool_sharding(self.mesh)))
         with self.telemetry.tracer.span("fused_step", station="pool"):
             if clean and self._halo_ok and n_adv == n:
-                adv = blocks[:, -self.stations[0].ring.advance:]
-                self.pstate, pairs, qc = fused_mod.pool_step_advance(
-                    self.pstate, jnp.asarray(adv), self.mappings,
+                adv = self._pad_rows(
+                    blocks[:, -self.stations[0].ring.advance:])
+                self.pstate, pairs, qc = fused_mod.pool_step_advance_sharded(
+                    self.pstate, put(adv), self._pool_mappings,
                     jnp.int32(base_id), fcfg, lcfg, window, sat, dup, occ,
-                    ctr, mp, ver, mj)
+                    ctr, mp, ver, mj, mesh=self.mesh)
                 vm = np.ones((s, n), bool)
             else:
                 vm = np.stack([
                     np.ones(n, bool) if (masks is None or masks[i] is None)
                     else np.asarray(masks[i], bool) for i in range(s)])
-                self.pstate, pairs, qc = fused_mod.pool_step_block(
-                    self.pstate, jnp.asarray(blocks), self.mappings,
-                    jnp.int32(base_id), jnp.asarray(vm), fcfg, lcfg, window,
-                    sat, dup, occ, ctr, mp, ver, mj)
+                self.pstate, pairs, qc = fused_mod.pool_step_block_sharded(
+                    self.pstate, put(self._pad_rows(blocks)),
+                    self._pool_mappings, jnp.int32(base_id),
+                    put(self._pad_rows(vm, fill=False)), fcfg,
+                    lcfg, window, sat, dup, occ, ctr, mp, ver, mj,
+                    mesh=self.mesh)
                 self._halo_ok = clean or primed
             # one transfer + one sync for the whole pooled step output
             (i1, i2, sim, pv), qc = jax.device_get(
@@ -1356,12 +1409,122 @@ class StreamingDetector:
         """
         assert all(st.stats_frozen for st in self.stations)
         if self.pstate is not None:
-            return jax.tree.map(jnp.array, (self.pstate.index,
-                                            self.pstate.med,
-                                            self.pstate.mad))
+            s = len(self.stations)
+            # the slice also drops the mesh-pad rows of a sharded pool,
+            # so serving always sees exactly the real stations
+            return jax.tree.map(lambda x: jnp.array(x[:s]),
+                                (self.pstate.index, self.pstate.med,
+                                 self.pstate.mad))
         return (index_mod.stack_states([st.state for st in self.stations]),
                 jnp.stack([st.med_mad[0] for st in self.stations]),
                 jnp.stack([st.med_mad[1] for st in self.stations]))
+
+    # -- elastic pool membership (ISSUE 10) ----------------------------------
+
+    def _materialize_stations(self) -> None:
+        """Pull each real station's index slice out of the (possibly
+        sharded, possibly padded) pool back into per-station state —
+        the first half of any pool re-pack. Pad rows are dropped here;
+        they are re-cloned fresh by the next ``_build_pool``."""
+        if self.pstate is None:
+            return
+        for st in self.stations:
+            st._state = jax.tree.map(
+                jnp.array,
+                index_mod.slice_state(self.pstate.index, st._pool_idx))
+        self.pstate = None
+
+    def _repack_pool(self) -> None:
+        """Re-probe the mesh for the current width, re-pad, re-shard and
+        rebuild the stacked pool. The next block routes through the
+        (already-traced-per-shape) ``pool_step_block`` seed path, so a
+        width change costs one compile of the new-width executable and
+        nothing else — donation and the ≤1-steady-state-trace invariant
+        hold per pool width."""
+        self.mesh = (dist.station_mesh(len(self.stations))
+                     if self.scfg.sharded else None)
+        self.pool_pad = dist.padded_pool_width(
+            len(self.stations), self.mesh) - len(self.stations)
+        self.telemetry.n_stations = len(self.stations)
+        self._build_pool()
+
+    def add_station(self, med_mad: tuple[np.ndarray, np.ndarray]
+                    | None = None) -> int:
+        """Elastically grow the live pool by one station; returns the new
+        station's index.
+
+        The stacked pytree is re-padded and re-sharded for the new width
+        (``_repack_pool``). The joining station enters at the network
+        frontier: its ring mirrors a peer's framing position with the
+        whole pre-join span marked missing, so lockstep block emission
+        (shared base ids) holds and the join span is suppressed
+        in-dispatch rather than invented. ``med_mad`` defaults to station
+        0's frozen statistics (network stations see similar noise floors;
+        pass real statistics for production use). Serving engines built
+        over the old width keep serving their snapshot — rebuild them to
+        pick up the grown pool (``ServeDetectEngine`` pins its width).
+        """
+        if not self.pooled:
+            raise ValueError(
+                "add_station needs a pooled detector (StreamConfig.fused"
+                " + pooled with ≥2 stations at construction)")
+        if self.locating:
+            raise ValueError(
+                "add_station cannot extend the locate tier: station_xy "
+                "geometry is fixed at construction — rebuild the "
+                "detector with the new geometry instead")
+        if self.pstate is None \
+                or not all(st.stats_frozen for st in self.stations):
+            raise ValueError(
+                "add_station requires a live pool (statistics frozen and "
+                "the stacked state built); push warmup chunks first")
+        if med_mad is None:
+            med_mad = tuple(np.asarray(m)
+                            for m in self.stations[0].med_mad)
+        self._materialize_stations()
+        st = StationStream(self.cfg, self.scfg, med_mad=med_mad,
+                           external=True, telemetry=self.telemetry)
+        st._owner, st._pool_idx = self, len(self.stations)
+        peer = self.stations[0]
+        st.ring.start = peer.ring.start
+        st.ring.next_fp = peer.ring.next_fp
+        st.ring.buf = np.zeros(peer.ring.buf.size, np.float32)
+        st.ring.vbuf = np.zeros(peer.ring.buf.size, bool)
+        st.ring.quality["missing_samples"] += int(peer.ring.buf.size)
+        st.processed_fp = peer.processed_fp
+        if st.rolling and st.processed_fp:
+            st.filter.advance(st.processed_fp)  # join cost paid up front
+        self.stations.append(st)
+        self._amp.append({})
+        self._repack_pool()
+        self.serving_version += 1
+        return st._pool_idx
+
+    def remove_station(self, station: int) -> None:
+        """Elastically drop one station from the live pool (its index
+        state and host buffers are discarded; remaining stations shift
+        down, which renumbers pair/event station indices from here on).
+        The pool is re-padded and re-sharded for the new width."""
+        if not self.pooled or self.pstate is None:
+            raise ValueError("remove_station requires a live pooled "
+                             "detector (statistics frozen)")
+        if self.locating:
+            raise ValueError(
+                "remove_station cannot shrink the locate tier: "
+                "station_xy geometry is fixed at construction")
+        if not 0 <= station < len(self.stations):
+            raise IndexError(station)
+        if len(self.stations) < 2:
+            raise ValueError("cannot remove the last station")
+        self._materialize_stations()
+        dropped = self.stations.pop(station)
+        dropped._owner = None
+        dropped._state = None
+        self._amp.pop(station)
+        for i, st in enumerate(self.stations):
+            st._pool_idx = i
+        self._repack_pool()
+        self.serving_version += 1
 
     # -- association / location / finalize ----------------------------------
 

@@ -48,7 +48,13 @@ class StreamConfig:
     chain (the parity reference and unfused benchmark baseline).
     ``pooled`` steps all stations of a multi-station detector through one
     vmapped executable instead of S sequential engines (requires
-    ``fused``).
+    ``fused``). ``sharded`` additionally splits the pooled station axis
+    over a device mesh (``dist.station_mesh``) when more than one device
+    is visible — the fused step then runs fully-manual ``shard_map``
+    with S/D stations per device and zero cross-station collectives. On
+    a single device the knob is inert (the capability probe returns no
+    mesh and the pool stays the plain vmap), so the default is on:
+    detection output is bit-identical either way.
 
     ``stats_warmup_blocks == 0`` defers the MAD-statistics freeze to
     ``flush()``: every block stays buffered and the reservoir absorbs the
@@ -158,6 +164,7 @@ class StreamConfig:
     filter_window_fingerprints: int = 0  # rolling occurrence filter window
     fused: bool = True             # single-dispatch fused hot path
     pooled: bool = True            # vmapped station pool when multi-station
+    sharded: bool = True           # mesh-shard the pool when >1 device
     reorder_horizon_samples: int = 0  # late-chunk splice window (0 = none)
     max_gap_samples: int = 0       # largest offset jump gap-filled (0 = ∞)
     saturation_limit: int = 0      # quarantine buckets past this traffic

@@ -59,6 +59,7 @@ class StreamTelemetry:
                  watchdog: StepWatchdog | None = None,
                  clock=time.perf_counter):
         self.n_stations = n_stations
+        self.raw_walls: dict[str, list] | None = None
         self.registry = registry or MetricsRegistry()
         self.tracer = tracer or SpanTracer()
         if watchdog is None:
@@ -101,11 +102,28 @@ class StreamTelemetry:
         for name, v in zip(QC_FIELDS, np.asarray(qc).reshape(-1)):
             self.registry.counter(f"step_{name}_total", station=s).inc(int(v))
 
+    def capture_raw_walls(self) -> dict[str, list]:
+        """Opt in to exact wall-sample capture (bench_e2e).
+
+        The registry histograms are log-bucketed — good enough for live
+        health, but percentile() returns the bucket upper edge, which
+        quantizes sub-2ms steps onto identical values. Benchmarks that
+        publish percentiles call this once and compute them from the raw
+        samples instead; the histogram-derived values stay available
+        under separate keys for comparison."""
+        if self.raw_walls is None:
+            self.raw_walls = {"fused_step": [], "host_tail": []}
+        return self.raw_walls
+
     def record_fused_wall(self, label: str, wall_s: float) -> None:
+        if self.raw_walls is not None:
+            self.raw_walls["fused_step"].append(wall_s)
         self.registry.histogram("fused_step_wall_seconds",
                                 station=label).record(wall_s)
 
     def record_host_tail(self, station: int, wall_s: float) -> None:
+        if self.raw_walls is not None:
+            self.raw_walls["host_tail"].append(wall_s)
         self.registry.histogram("host_tail_wall_seconds",
                                 station=str(station)).record(wall_s)
 

@@ -126,7 +126,11 @@ def restore_checkpoint(ckpt_dir: str, target, *, step: int | None = None,
 
     ``target``: pytree of arrays or ShapeDtypeStructs (structure/dtype
     oracle). ``shardings``: optional matching pytree of NamedShardings —
-    arrays are device_put against it (elastic re-shard). Returns
+    arrays are device_put against it (elastic re-shard: the checkpoint
+    carries no device topology, so a pool saved on 8 devices lands on
+    whatever mesh the restoring process holds). A single ``Sharding``
+    instance broadcasts to every leaf — the common case for a uniformly
+    sharded state such as the stacked station pool. Returns
     (state, extra-metadata).
     """
     if step is None:
@@ -138,7 +142,10 @@ def restore_checkpoint(ckpt_dir: str, target, *, step: int | None = None,
     arrays = np.load(d / "arrays.npz")
 
     flat_target = _flatten(target)
-    flat_shardings = _flatten(shardings) if shardings is not None else {}
+    if isinstance(shardings, jax.sharding.Sharding):
+        flat_shardings = {k: shardings for k in flat_target}
+    else:
+        flat_shardings = _flatten(shardings) if shardings is not None else {}
     rebuilt = {}
     for key, ref in flat_target.items():
         if key not in arrays:

@@ -1,5 +1,7 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # keep the test process at 1 visible device (the dry-run sets 512 in its
 # own subprocess; tests must NOT inherit that)
@@ -9,6 +11,32 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_forced_devices(code: str, timeout=1200, devices: int = 8) -> str:
+    """Run ``code`` in a child interpreter with ``devices`` forced host
+    devices. Device count binds at backend init, so every multi-device
+    test needs its own process; this is the one place the
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` pattern lives
+    (previously copy-pasted per test module). Asserts a clean exit and
+    returns stdout."""
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               JAX_PLATFORMS="cpu")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, timeout=timeout)
+    assert p.returncode == 0, (p.stdout.decode()[-2000:]
+                               + p.stderr.decode()[-3000:])
+    return p.stdout.decode()
+
+
+@pytest.fixture(scope="session")
+def forced_devices():
+    """The subprocess runner as a fixture (tests take it as an argument
+    instead of importing across test modules)."""
+    return run_forced_devices
 
 
 def pytest_collection_modifyitems(config, items):

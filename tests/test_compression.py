@@ -1,26 +1,13 @@
 """Cross-pod int8 gradient compression: correctness within quantization
 tolerance + int8 collectives actually on the wire (subprocess, 8 devices
 as a (2, 2, 2) pod×data×model mesh)."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
+import functools
 
 import pytest
 
-SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+from conftest import run_forced_devices
 
-
-def run_py(code: str, timeout=1500) -> str:
-    env = dict(os.environ, PYTHONPATH=SRC,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               JAX_PLATFORMS="cpu")
-    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       env=env, capture_output=True, timeout=timeout)
-    assert p.returncode == 0, (p.stdout.decode()[-2000:]
-                               + p.stderr.decode()[-3000:])
-    return p.stdout.decode()
+run_py = functools.partial(run_forced_devices, timeout=1500)
 
 
 @pytest.mark.slow

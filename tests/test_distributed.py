@@ -1,26 +1,9 @@
 """Multi-device semantics via subprocess (8 forced host devices):
 sharded step == single-device step, EP-MoE == dense, elastic checkpoint
 restore across mesh shapes, tiny-mesh dry-run smoke."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
-
-
-def run_py(code: str, timeout=1200) -> str:
-    env = dict(os.environ, PYTHONPATH=SRC,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               JAX_PLATFORMS="cpu")
-    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       env=env, capture_output=True, timeout=timeout)
-    assert p.returncode == 0, (p.stdout.decode()[-2000:]
-                               + p.stderr.decode()[-3000:])
-    return p.stdout.decode()
+from conftest import run_forced_devices as run_py
 
 
 COMMON = """

@@ -224,6 +224,28 @@ def test_restore_validates_station_count(tmp_path):
                            "--stations", "2", "--duration-s", "400"])
 
 
+def test_restore_grows_pool_elastically(tmp_path):
+    """`--restore` with MORE stations than the snapshot no longer fails:
+    the live pool grows elastically (ISSUE 10) — new stations join at
+    the frontier and the service runs at the requested width."""
+    from repro.configs.fast_seismic import (smoke_config,
+                                            stream_smoke_config)
+    cfg, scfg = smoke_config(), stream_smoke_config()
+    ds = make_dataset(SynthConfig(duration_s=400.0, n_stations=2,
+                                  n_sources=1, events_per_source=3,
+                                  event_snr=3.0, seed=5))
+    det = StreamingDetector(cfg, scfg, n_stations=2)
+    for start in range(0, ds.waveforms.shape[1], 6000):
+        det.push(ds.waveforms[:, start:start + 6000])
+    assert det.pstate is not None          # stats frozen, pool live
+    det.snapshot(str(tmp_path), step=1)
+    stats = serve_detect.main(["--restore", "--snapshot-dir",
+                               str(tmp_path), "--stations", "3",
+                               "--requests", "2", "--slots", "2",
+                               "--duration-s", "400"])
+    assert stats["stations"] == 3
+
+
 def test_metrics_file_written_without_metrics_every(tmp_path):
     """A bare ``--metrics-file`` (no ``--metrics-every``) used to gate
     the exposition rewrite on the heartbeat cadence and silently write

@@ -1183,9 +1183,10 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
     monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
     from benchmarks import bench_e2e
     out = bench_e2e.main(["--quick"])
-    assert out["schema"] == "bench-e2e/v3"
+    assert out["schema"] == "bench-e2e/v4"
     assert set(out) >= {"config_hash", "backend", "step", "points",
-                        "offline_replay", "emission", "ratios", "metrics"}
+                        "offline_replay", "emission", "sharded_pool",
+                        "ratios", "metrics"}
     assert out["metrics"]["schema"] == "stream-metrics/v1"
     assert out["metrics"]["stations"] == 4
     written = json.loads((tmp_path / "BENCH_e2e.json").read_text())
@@ -1213,6 +1214,18 @@ def test_bench_e2e_smoke(tmp_path, monkeypatch):
         assert p["pairs"] > 0
         assert {"device_step_ms_p50", "host_tail_ms_p50",
                 "pair_bytes_per_block"} <= set(p)
+        # v4: the primary percentiles are exact wall quantiles; the
+        # log-bucketed histogram values moved to *_hist keys
+        assert {"device_step_ms_p50_hist",
+                "host_tail_ms_p50_hist"} <= set(p)
+    # v4: the sharded-pool device grid ran with exact step percentiles
+    # and bit-identical pair counts between the sharded and vmap pools
+    sp = out["sharded_pool"]
+    assert sp["points"] and all(p["pair_parity"] for p in sp["points"])
+    assert any(p["devices"] == 8 and p["stations"] == 8
+               for p in sp["points"])
+    assert out["ratios"]["sharded_pool_speedup_8st_8dev"] \
+        == sp["speedup_8st_8dev"]
     # emission A/B (ISSUE 8): dense vs compact at 1/4/8 stations, the
     # compacted pipe is the configured ≥10x smaller, and compaction
     # drops nothing on the clean seeded stream (identical pair counts)
